@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission, device table."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: List[Dict] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def sorted_batch(rng, batch, n, dtype=jnp.float32, bits=32):
+    hi = 255 if bits == 8 else 100_000
+    x = rng.integers(0, hi, size=(batch, n))
+    return jnp.sort(jnp.asarray(x).astype(dtype), axis=-1)

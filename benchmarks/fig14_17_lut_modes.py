@@ -1,0 +1,58 @@
+"""Paper Figs. 14-17 analog: 4insLUT (dense/slow) vs 2insLUT (fast/wide).
+
+The paper's two LUT-packing methodologies map to our two permutation
+paths: 'fabric' (scatter, VPU) vs 'MXU' (one-hot matmul) kernel modes plus
+the 2ins/4ins LUT-proxy resource model. Figures 16/17 extend to the large
+devices and reproduce the placement argument: the S2MS UP-256/DN-256
+comparison cloud exceeds the VMEM tile budget while the 8-column LOMS
+(8 x UP-32/DN-32 columns) fits.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import depth, loms_2way, merge_schedule, apply_schedule
+from repro.core.metrics import lut_proxy, vmem_bytes
+from repro.kernels.loms_merge import loms_merge2_pallas
+from .common import emit, sorted_batch, timeit
+
+VMEM_BUDGET = 16 * 2**20  # one v5e core's VMEM
+
+
+def run():
+    rng = np.random.default_rng(1)
+    # small devices (figs 14/15): bitonic vs S2MS vs LOMS 2col
+    for m in (2, 4, 8):
+        for kind in ("s2ms", "loms", "batcher-bitonic"):
+            sched = merge_schedule(m, m, kind)
+            emit(f"fig14_15/{kind}/up{m}dn{m}", 0.0,
+                 f"depth={depth(sched)};lut4ins={lut_proxy(sched, 32, '4insLUT')};"
+                 f"lut2ins={lut_proxy(sched, 32, '2insLUT')}")
+    # kernel path comparison: MXU (2insLUT-analog) vs fabric (4insLUT-analog)
+    for m in (32, 64):
+        a = sorted_batch(rng, 256, m)
+        b = sorted_batch(rng, 256, m)
+        for mode, use_mxu in (("mxu", True), ("fabric", False)):
+            f = jax.jit(lambda a, b, u=use_mxu: loms_merge2_pallas(
+                a, b, n_cols=4, use_mxu=u, interpret=True))
+            t = timeit(f, a, b, iters=5)
+            emit(f"fig14_15/kernel-{mode}/up{m}dn{m}", t * 1e6, "")
+    # large devices (figs 16/17): who fits in VMEM?
+    for m in (64, 128, 256):
+        for kind, cols in (("s2ms", 1), ("loms", 2), ("loms", 4), ("loms", 8)):
+            if kind == "s2ms":
+                sched = merge_schedule(m, m, "s2ms")
+                tag = "s2ms"
+            else:
+                sched = loms_2way(m, m, n_cols=cols)
+                tag = f"loms{cols}col"
+            vm = vmem_bytes(sched, 32, 8)
+            fits = vm <= VMEM_BUDGET
+            emit(f"fig16_17/{tag}/up{m}dn{m}", 0.0,
+                 f"depth={depth(sched)};vmem={vm};fits={fits}")
+
+
+if __name__ == "__main__":
+    run()

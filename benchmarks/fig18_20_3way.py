@@ -1,0 +1,54 @@
+"""Paper Figs. 18/19/20 + Table 1: 3-way merge (3c_7r) and k-way stages.
+
+LOMS 3c_7r: full merge in 3 stages, median in 2 — vs the MWMS baseline
+(published device: 5/4 stages; our best non-offset reconstruction: 6/5).
+Wall times are batched JAX executor runs; stage counts are structural.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (apply_schedule, comparator_count, depth, loms_kway,
+                        loms_median, table1_stages)
+from repro.core.mwms import mwms_kway, mwms_median
+from .common import emit, timeit
+
+BATCH = 256
+
+
+def run():
+    rng = np.random.default_rng(2)
+    lens = (7, 7, 7)
+    for bits, dt in ((8, jnp.uint8), (32, jnp.int32)):
+        xs = [jnp.sort(jnp.asarray(
+            rng.integers(0, 255 if bits == 8 else 1 << 20, (BATCH, 7))).astype(dt), -1)
+            for _ in range(3)]
+        x = jnp.concatenate(xs, axis=-1)
+        # full merge
+        for name, sched in (("loms", loms_kway(lens)), ("mwms", mwms_kway(lens))):
+            f = jax.jit(lambda x, s=sched: apply_schedule(s, x))
+            t = timeit(f, x)
+            emit(f"fig19/{bits}b/{name}/3c_7r", t * 1e6,
+                 f"stages={depth(sched)};cmps={comparator_count(sched)}")
+        # median
+        for name, (sched, pos) in (("loms", loms_median(lens)),
+                                   ("mwms", mwms_median(lens))):
+            f = jax.jit(lambda x, s=sched, p=pos: apply_schedule(s, x)[..., p])
+            t = timeit(f, x)
+            emit(f"fig18/{bits}b/{name}/3c_7r_median", t * 1e6,
+                 f"stages={depth(sched)}")
+    # fig 20 resources
+    for name, sched in (("loms", loms_kway(lens)), ("mwms", mwms_kway(lens))):
+        emit(f"fig20/{name}/3c_7r", 0.0, f"cmps={comparator_count(sched)}")
+    # Table 1 stage counts, k = 2..8 (empirically 0-1-validated at build)
+    for k in range(2, 9):
+        lens_k = tuple([3] * k)
+        sched = loms_kway(lens_k)
+        emit(f"table1/k{k}", 0.0,
+             f"stages={depth(sched)};paper={table1_stages(k)}")
+
+
+if __name__ == "__main__":
+    run()

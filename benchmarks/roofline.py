@@ -1,0 +1,154 @@
+"""Roofline table builder: reads experiments/dryrun/*.json, emits the
+three-term roofline per (arch x shape) on the single-pod mesh.
+
+  compute    = HLO_FLOPs / (chips*197 TFLOP/s)     [extrapolated, per chip]
+  memory     = HLO_bytes / (chips*819 GB/s)
+  collective = collective_bytes / (chips*50 GB/s/link)
+
+HLO_FLOPs / bytes / collective bytes come from the scan-unrolled analysis
+variants (launch/dryrun.estimate_cost) because XLA cost_analysis counts
+while bodies once. All values are already per-chip (the compiled module is
+the per-device SPMD program). MODEL_FLOPS = 6*N_active*D for train, 2*N*D
+for inference (forward only).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s/link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fused_bytes_lower(cfg, shape, n_chips):
+    """Analytic HBM-traffic lower bound assuming TPU-grade fusion (flash
+    scores stay in VMEM; elementwise chains fuse). Pairs with the HLO
+    'bytes accessed' UPPER bound (XLA:CPU barely fuses, so every score
+    intermediate is charged there). Production sits between; see
+    EXPERIMENTS.md §Roofline caveats."""
+    n = cfg.params_billions() * 1e9
+    n_act = cfg.active_params_billions() * 1e9
+    d = cfg.d_model
+    if shape.kind == "train":
+        # params: bf16 fwd + bwd + remat reads; opt: fp32 p/m/v read+write
+        param_traffic = n * (3 * 2) + n * 6 * 4
+        tok = shape.global_batch * shape.seq_len
+        act = tok * d * cfg.n_layers * 4 * 2  # save+read+remat rw, bf16
+        passes = 3.0
+    elif shape.kind == "prefill":
+        param_traffic = n_act * 2
+        tok = shape.global_batch * shape.seq_len
+        act = tok * d * cfg.n_layers * 2 * 2
+        passes = 1.0
+    else:  # decode: read all params + whole cache per token
+        param_traffic = n_act * 2
+        tok = shape.global_batch
+        cache = 0.0
+        if cfg.family not in ("ssm",) and cfg.causal:
+            if cfg.mla is not None:
+                per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            else:
+                per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+            cache = (shape.global_batch * shape.seq_len * per_tok
+                     * cfg.n_layers * 2)
+        act = cache
+        passes = 1.0
+    # flash attention kv re-reads (each q chunk streams all K/V)
+    attn = 0.0
+    if cfg.n_heads and shape.kind in ("train", "prefill"):
+        nq = max(shape.seq_len // cfg.attn_chunk, 1)
+        attn = (cfg.n_layers * shape.global_batch * nq * shape.seq_len
+                * cfg.n_kv_heads * cfg.head_dim * 2 * 2) * passes
+    return (param_traffic + act + attn) / n_chips
+
+
+def model_flops_per_chip(cfg, shape, n_chips):
+    n_act = cfg.active_params_billions() * 1e9
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n_act * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_act * tokens / n_chips
+    return 2 * n_act * shape.global_batch / n_chips  # decode: 1 token/seq
+
+
+def load_cell(mesh, arch, shape):
+    path = os.path.join(DRYRUN_DIR, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(rec, cfg, shape):
+    ce = rec.get("cost_extrapolated", {})
+    if "error" in ce or "flops" not in ce:
+        return None
+    flops = ce["flops"]
+    bytes_hi = ce["bytes"]
+    bytes_lo = fused_bytes_lower(cfg, shape, rec["n_chips"])
+    coll = sum(ce["coll"].values())
+    t_c = flops / PEAK_FLOPS
+    t_m_hi = bytes_hi / HBM_BW
+    t_m = bytes_lo / HBM_BW  # fused estimate drives the bottleneck call
+    t_x = coll / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops_per_chip(cfg, shape, rec["n_chips"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_hi_s": t_m_hi,
+        "t_collective_s": t_x,
+        "bottleneck": dom[1],
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_frac": t_c / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) else 0.0,
+        "mem_per_dev_gib": rec.get("memory", {}).get(
+            "per_device_total_bytes", 0) / 2**30,
+        "mem_tpu_est_gib": rec.get("memory", {}).get(
+            "per_device_total_bytes_tpu_estimate",
+            rec.get("memory", {}).get("per_device_total_bytes", 0)) / 2**30,
+    }
+
+
+def run(mesh="pod"):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            rec = load_cell(mesh, arch, shape.name)
+            if rec is None:
+                continue
+            if rec.get("status") == "skipped":
+                rows.append({"arch": arch, "shape": shape.name,
+                             "skip": rec["reason"]})
+                continue
+            if rec.get("status") != "ok":
+                rows.append({"arch": arch, "shape": shape.name, "skip": "ERROR"})
+                continue
+            row = roofline_row(rec, cfg, shape)
+            if row:
+                rows.append(row)
+    hdr = (f"{'arch':26s} {'shape':12s} {'t_comp':>8s} {'t_mem':>8s} "
+           f"{'t_memHI':>8s} {'t_coll':>8s} {'bound':>10s} {'frac':>6s} "
+           f"{'6ND/HLO':>8s} {'memRAW':>7s} {'memTPU':>7s}")
+    print(hdr)
+    for r in rows:
+        if "skip" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} SKIP: {r['skip']}")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['t_compute_s']:8.4f} "
+              f"{r['t_memory_s']:8.4f} {r['t_memory_hi_s']:8.4f} "
+              f"{r['t_collective_s']:8.4f} {r['bottleneck']:>10s} "
+              f"{r['roofline_frac']:6.3f} {r['useful_ratio']:8.3f} "
+              f"{r['mem_per_dev_gib']:7.2f} {r['mem_tpu_est_gib']:7.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all sorter benches
+  PYTHONPATH=src python -m benchmarks.run --roofline # + roofline table
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", action="store_true",
+                    help="also print the dry-run roofline table")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import fig11_12_speed_2way, fig13_resources_2way
+    from . import fig14_17_lut_modes, fig18_20_3way, moe_routing
+
+    modules = {
+        "fig11_12": fig11_12_speed_2way,
+        "fig13": fig13_resources_2way,
+        "fig14_17": fig14_17_lut_modes,
+        "fig18_20": fig18_20_3way,
+        "moe_routing": moe_routing,
+    }
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        mod.run()
+    if args.roofline:
+        from . import roofline
+
+        roofline.run("pod")
+
+
+if __name__ == "__main__":
+    main()

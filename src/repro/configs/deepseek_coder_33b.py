@@ -1,0 +1,7 @@
+"""--arch deepseek_coder_33b config (see registry.py for the exact fields)."""
+from .registry import DEEPSEEK_CODER_33B as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

@@ -1,0 +1,7 @@
+"""--arch deepseek_v2_lite config (see registry.py for the exact fields)."""
+from .registry import DEEPSEEK_V2_LITE as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

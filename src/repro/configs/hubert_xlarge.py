@@ -1,0 +1,7 @@
+"""--arch hubert_xlarge config (see registry.py for the exact fields)."""
+from .registry import HUBERT_XLARGE as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

@@ -1,0 +1,7 @@
+"""--arch internvl2_26b config (see registry.py for the exact fields)."""
+from .registry import INTERNVL2_26B as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

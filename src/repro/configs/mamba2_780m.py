@@ -1,0 +1,7 @@
+"""--arch mamba2_780m config (see registry.py for the exact fields)."""
+from .registry import MAMBA2_780M as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

@@ -1,0 +1,7 @@
+"""--arch qwen3_8b config (see registry.py for the exact fields)."""
+from .registry import QWEN3_8B as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

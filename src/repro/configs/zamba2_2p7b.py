@@ -1,0 +1,7 @@
+"""--arch zamba2_2p7b config (see registry.py for the exact fields)."""
+from .registry import ZAMBA2_2P7B as CONFIG  # noqa: F401
+from .registry import get_smoke_config
+
+
+def smoke_config():
+    return get_smoke_config(CONFIG.name)

@@ -1,0 +1,25 @@
+"""repro.core — List Offset Merge Sorters as oblivious JAX sort networks."""
+from .api import (  # noqa: F401
+    median9,
+    median_of_lists,
+    merge,
+    merge_k,
+    merge_schedule,
+    sort,
+    topk,
+)
+from .loms import loms_2way, loms_kway, loms_median, table1_stages  # noqa: F401
+from .networks import (  # noqa: F401
+    Group,
+    Schedule,
+    Stage,
+    apply_schedule,
+    apply_schedule_with_payload,
+    comparator_count,
+    depth,
+    rank_merge_runs,
+    rank_sort,
+    validate_01_merge,
+    validate_01_sort,
+)
+from .setup_array import SetupArray, build_2way_setup, build_kway_setup  # noqa: F401

@@ -1,0 +1,388 @@
+"""Data-oblivious sort/merge network representation and JAX executor.
+
+The paper's hardware devices (LOMS, S2MS, Batcher, MWMS, N-sorters) are all
+fixed comparator structures: their wiring does not depend on the data. We
+represent every device as a :class:`Schedule`:
+
+  * a *working vector* of ``size`` cells (the 2-D setup array, flattened,
+    holes included but never touched),
+  * ``setup_scatter`` — where each input value is written (the paper's
+    "setup array" mapping, Appendix A),
+  * a tuple of :class:`Stage`\\ s; each stage is a set of disjoint
+    :class:`Group`\\ s sorted *in parallel* (the paper's parallel column /
+    row sorters),
+  * ``output_gather`` — the final read-out order (row-major for 2-way,
+    serpentine for k-way).
+
+A :class:`Group` lists the cell indices in ascending output order. If
+``runs`` is given, the group's input is a concatenation of pre-sorted
+ascending runs and is executed as a *stable multi-run rank-merge* (the
+hardware S2MS: all cross-run comparisons in parallel, depth 1). Otherwise it
+is executed as a *stable rank-sort* (the hardware single-stage N-sorter:
+full pairwise comparison matrix, depth 1).
+
+TPU adaptation (see DESIGN.md §2): the FPGA mux tree that routes each input
+to its output becomes a one-hot permutation matmul (MXU) or a scatter (VPU);
+the comparison cloud is a dense pairwise boolean matrix (VPU). There is no
+data-dependent control flow anywhere — the schedule is static, so the
+executor is trivially jit/vmap/shard-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Group",
+    "Stage",
+    "Schedule",
+    "apply_schedule",
+    "apply_schedule_with_payload",
+    "rank_sort",
+    "rank_merge_runs",
+    "depth",
+    "comparator_count",
+    "validate_01_merge",
+    "validate_01_sort",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    """A set of cells sorted together in one stage.
+
+    idx:  cell indices of the working vector, listed in ascending output
+          order (idx[0] receives the minimum).
+    runs: optional run lengths. When present, sum(runs) == len(idx) and the
+          group's *input* values, read in idx order, form len(runs)
+          concatenated ascending runs -> executed as a stable rank-merge
+          (S2MS analog). When None -> stable rank-sort (N-sorter analog).
+    """
+
+    idx: Tuple[int, ...]
+    runs: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.runs is not None:
+            assert sum(self.runs) == len(self.idx), (self.runs, self.idx)
+            assert all(r > 0 for r in self.runs)
+
+    @property
+    def n(self) -> int:
+        return len(self.idx)
+
+    def comparators(self) -> int:
+        """Comparator count: cross-run pairs for merges, all pairs for sorts."""
+        if self.n <= 1:
+            return 0
+        if self.runs is None:
+            return self.n * (self.n - 1) // 2
+        total = 0
+        for i in range(len(self.runs)):
+            for j in range(i + 1, len(self.runs)):
+                total += self.runs[i] * self.runs[j]
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    groups: Tuple[Group, ...]
+
+    def __post_init__(self):
+        seen = set()
+        for g in self.groups:
+            for i in g.idx:
+                assert i not in seen, f"cell {i} appears twice in one stage"
+                seen.add(i)
+
+    def comparators(self) -> int:
+        return sum(g.comparators() for g in self.groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A complete oblivious merge/sort device."""
+
+    name: str
+    size: int  # working vector length (R*C of the setup array)
+    setup_scatter: Tuple[int, ...]  # input position -> working cell
+    output_gather: Tuple[int, ...]  # output position -> working cell
+    stages: Tuple[Stage, ...]
+    meta: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.setup_scatter)
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.output_gather)
+
+    def meta_dict(self) -> dict:
+        return dict(self.meta)
+
+
+# ---------------------------------------------------------------------------
+# Depth-1 primitives: rank-sort (N-sorter) and multi-run rank-merge (S2MS)
+# ---------------------------------------------------------------------------
+
+
+def _scatter_last(base_shape_like: jnp.ndarray, pos: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """out[..., pos[..., i]] = vals[..., i] along the last axis."""
+    return jnp.put_along_axis(
+        jnp.zeros_like(vals, shape=base_shape_like.shape), pos, vals, axis=-1, inplace=False
+    )
+
+
+def rank_sort(x: jnp.ndarray, payload: Optional[jnp.ndarray] = None):
+    """Stable single-stage N-sorter along the last axis.
+
+    Computes the full pairwise comparison matrix (the hardware comparator
+    cloud), derives each element's output rank, and permutes by scatter.
+    Ascending. Stable: ties keep input order.
+    """
+    n = x.shape[-1]
+    if n == 1:
+        return (x, payload) if payload is not None else x
+    v = x[..., :, None]  # i
+    w = x[..., None, :]  # j
+    j_lt_i = np.tril(np.ones((n, n), dtype=bool), k=-1)  # j < i
+    # j goes before i  iff  w_j < v_i, or equal and j < i (stability)
+    before = (w < v) | ((w == v) & j_lt_i)
+    rank = before.sum(axis=-1).astype(jnp.int32)  # (..., n)
+    out = _scatter_last(x, rank, x)
+    if payload is None:
+        return out
+    pout = jnp.put_along_axis(jnp.zeros_like(payload), rank, payload, axis=-1, inplace=False)
+    return out, pout
+
+
+def rank_merge_runs(
+    x: jnp.ndarray, runs: Sequence[int], payload: Optional[jnp.ndarray] = None
+):
+    """Stable single-stage merge of pre-sorted ascending runs (S2MS analog).
+
+    ``x[..., :]`` is a concatenation of ``len(runs)`` ascending runs with the
+    given (static) lengths. Only cross-run comparisons are computed — this is
+    the resource saving of S2MS vs a full N-sorter. Earlier runs win ties.
+    """
+    runs = tuple(int(r) for r in runs)
+    n = x.shape[-1]
+    assert sum(runs) == n
+    if len(runs) == 1 or n == 1:
+        return (x, payload) if payload is not None else x
+    offs = np.cumsum((0,) + runs)
+    # rank = own index within run + for each other run: #elements that go before
+    rank = jnp.zeros(x.shape, dtype=jnp.int32)
+    pieces = [x[..., offs[s] : offs[s + 1]] for s in range(len(runs))]
+    ranks = []
+    for s, vs in enumerate(pieces):
+        r = jnp.arange(runs[s], dtype=jnp.int32)
+        r = jnp.broadcast_to(r, vs.shape)
+        for t, vt in enumerate(pieces):
+            if t == s:
+                continue
+            if t < s:  # earlier run goes first on ties
+                cnt = (vt[..., None, :] <= vs[..., :, None]).sum(axis=-1)
+            else:
+                cnt = (vt[..., None, :] < vs[..., :, None]).sum(axis=-1)
+            r = r + cnt.astype(jnp.int32)
+        ranks.append(r)
+    rank = jnp.concatenate(ranks, axis=-1)
+    out = _scatter_last(x, rank, x)
+    if payload is None:
+        return out
+    pout = jnp.put_along_axis(jnp.zeros_like(payload), rank, payload, axis=-1, inplace=False)
+    return out, pout
+
+
+def _compare_exchange_pairs(x, payload=None):
+    """Fast path for groups of 2: plain min/max (the hardware 2-sorter)."""
+    a, b = x[..., 0], x[..., 1]
+    swap = a > b
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
+    out = jnp.stack([lo, hi], axis=-1)
+    if payload is None:
+        return out
+    pa, pb = payload[..., 0], payload[..., 1]
+    plo = jnp.where(swap, pb, pa)
+    phi = jnp.where(swap, pa, pb)
+    return out, jnp.stack([plo, phi], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Schedule executor
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _stage_classes(stage: Stage):
+    """Group the stage's groups into batches of identical (length, runs)."""
+    classes = {}
+    for g in stage.groups:
+        if g.n <= 1:
+            continue
+        key = (g.n, g.runs)
+        classes.setdefault(key, []).append(g.idx)
+    out = []
+    for (n, runs), idx_lists in classes.items():
+        idx = np.asarray(idx_lists, dtype=np.int32)  # (G, n)
+        out.append((n, runs, idx))
+    return tuple(out)
+
+
+def _apply_stage(stage: Stage, w: jnp.ndarray, pw: Optional[jnp.ndarray]):
+    for n, runs, idx in _stage_classes(stage):
+        flat = idx.reshape(-1)
+        vals = jnp.take(w, flat, axis=-1)
+        vals = vals.reshape(vals.shape[:-1] + idx.shape)  # (..., G, n)
+        pv = None
+        if pw is not None:
+            pv = jnp.take(pw, flat, axis=-1)
+            pv = pv.reshape(pv.shape[:-1] + idx.shape)
+        if n == 2 and runs in (None, (1, 1)):
+            res = _compare_exchange_pairs(vals, pv)
+        elif runs is None:
+            res = rank_sort(vals, pv)
+        else:
+            res = rank_merge_runs(vals, runs, pv)
+        if pw is not None:
+            vals, pv = res
+            pw = pw.at[..., flat].set(pv.reshape(pv.shape[:-2] + (len(flat),)))
+        else:
+            vals = res
+        w = w.at[..., flat].set(vals.reshape(vals.shape[:-2] + (len(flat),)))
+    return w, pw
+
+
+def apply_schedule(sched: Schedule, x: jnp.ndarray, n_stages: Optional[int] = None) -> jnp.ndarray:
+    """Run the oblivious device on ``x`` (last axis = the input list concat).
+
+    ``n_stages`` truncates execution (the paper's early-exit: e.g. median
+    after 2 of 3 stages)."""
+    assert x.shape[-1] == sched.n_inputs, (x.shape, sched.n_inputs)
+    setup = np.asarray(sched.setup_scatter, dtype=np.int32)
+    gather = np.asarray(sched.output_gather, dtype=np.int32)
+    w = jnp.zeros(x.shape[:-1] + (sched.size,), dtype=x.dtype)
+    w = w.at[..., setup].set(x)
+    stages = sched.stages if n_stages is None else sched.stages[:n_stages]
+    for st in stages:
+        w, _ = _apply_stage(st, w, None)
+    return jnp.take(w, gather, axis=-1)
+
+
+def apply_schedule_with_payload(
+    sched: Schedule, x: jnp.ndarray, payload: jnp.ndarray, n_stages: Optional[int] = None
+):
+    """Same as :func:`apply_schedule` but carries a payload (e.g. indices)."""
+    assert x.shape == payload.shape[: x.ndim] and x.shape[-1] == sched.n_inputs
+    setup = np.asarray(sched.setup_scatter, dtype=np.int32)
+    gather = np.asarray(sched.output_gather, dtype=np.int32)
+    w = jnp.zeros(x.shape[:-1] + (sched.size,), dtype=x.dtype)
+    w = w.at[..., setup].set(x)
+    pw = jnp.zeros(payload.shape[:-1] + (sched.size,), dtype=payload.dtype)
+    pw = pw.at[..., setup].set(payload)
+    stages = sched.stages if n_stages is None else sched.stages[:n_stages]
+    for st in stages:
+        w, pw = _apply_stage(st, w, pw)
+    return jnp.take(w, gather, axis=-1), jnp.take(pw, gather, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Structural metrics + 0-1 principle validation
+# ---------------------------------------------------------------------------
+
+
+def depth(sched: Schedule) -> int:
+    """Number of dependent stages (the hardware propagation-delay analog)."""
+    return len(sched.stages)
+
+
+def comparator_count(sched: Schedule) -> int:
+    return sum(st.comparators() for st in sched.stages)
+
+
+def _per_list_sorted_01_patterns(lens: Sequence[int]) -> np.ndarray:
+    """All 0-1 inputs where each input list is individually sorted ascending.
+
+    For a merge network the 0-1 principle only needs these prod(len+1)
+    patterns (each sorted 0-1 list is determined by its number of ones)."""
+    parts = []
+    for ln in lens:
+        rows = []
+        for ones in range(ln + 1):
+            rows.append([0] * (ln - ones) + [1] * ones)
+        parts.append(np.asarray(rows, dtype=np.int32))
+    grids = np.meshgrid(*[np.arange(p.shape[0]) for p in parts], indexing="ij")
+    idxs = [g.reshape(-1) for g in grids]
+    cols = [p[i] for p, i in zip(parts, idxs)]
+    return np.concatenate(cols, axis=-1)
+
+
+def _np_rank_sort(vals: np.ndarray) -> np.ndarray:
+    return np.sort(vals, axis=-1)  # stable rank-sort == sort on values
+
+
+def _np_rank_merge(vals: np.ndarray, runs) -> np.ndarray:
+    """Exact numpy replica of rank_merge_runs — NOT a sort: if the run
+    assumption is violated the device misbehaves identically here, so the
+    0-1 validation exercises the true hardware semantics."""
+    offs = np.cumsum((0,) + tuple(runs))
+    pieces = [vals[..., offs[s] : offs[s + 1]] for s in range(len(runs))]
+    ranks = []
+    for s, vs in enumerate(pieces):
+        r = np.broadcast_to(np.arange(runs[s]), vs.shape).copy()
+        for t, vt in enumerate(pieces):
+            if t == s:
+                continue
+            if t < s:
+                r = r + (vt[..., None, :] <= vs[..., :, None]).sum(axis=-1)
+            else:
+                r = r + (vt[..., None, :] < vs[..., :, None]).sum(axis=-1)
+        ranks.append(r)
+    rank = np.concatenate(ranks, axis=-1)
+    out = np.zeros_like(vals)
+    np.put_along_axis(out, rank, vals, axis=-1)
+    return out
+
+
+def apply_schedule_np(sched: Schedule, x: np.ndarray, n_stages=None) -> np.ndarray:
+    """Pure-numpy executor (used by builders' eager 0-1 validation so that
+    schedule construction is legal inside jit traces)."""
+    setup = np.asarray(sched.setup_scatter, dtype=np.int32)
+    gather = np.asarray(sched.output_gather, dtype=np.int32)
+    w = np.zeros(x.shape[:-1] + (sched.size,), dtype=x.dtype)
+    w[..., setup] = x
+    stages = sched.stages if n_stages is None else sched.stages[:n_stages]
+    for st in stages:
+        for n, runs, idx in _stage_classes(st):
+            flat = idx.reshape(-1)
+            vals = w[..., flat].reshape(x.shape[:-1] + idx.shape)
+            if runs is None:
+                vals = _np_rank_sort(vals)
+            else:
+                vals = _np_rank_merge(vals, runs)
+            w[..., flat] = vals.reshape(x.shape[:-1] + (len(flat),))
+    return w[..., gather]
+
+
+def validate_01_merge(sched: Schedule, lens: Sequence[int], n_stages=None) -> bool:
+    """0-1-principle check that ``sched`` merges any per-list-sorted input."""
+    pats = _per_list_sorted_01_patterns(lens)
+    out = apply_schedule_np(sched, pats, n_stages)
+    return bool((np.diff(out, axis=-1) >= 0).all())
+
+
+def validate_01_sort(sched: Schedule) -> bool:
+    """0-1-principle check for an unrestricted sorting network (2^n inputs)."""
+    n = sched.n_inputs
+    assert n <= 22, "exhaustive 0-1 validation limited to n<=22"
+    pats = ((np.arange(2**n)[:, None] >> np.arange(n)[None, :]) & 1).astype(np.int32)
+    out = apply_schedule_np(sched, pats)
+    return bool((np.diff(out, axis=-1) >= 0).all())

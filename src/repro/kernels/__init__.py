@@ -1,0 +1,2 @@
+"""repro.kernels — Pallas TPU sorters (interpret=True on CPU hosts)."""
+from .ops import merge2, merge_k, median_k, topk  # noqa: F401

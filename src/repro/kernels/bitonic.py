@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: Batcher bitonic 2-way merge (the paper's baseline).
+
+The bitonic merge is TPU-pleasant in one way — its compare-exchange pattern
+is expressible as strided reshapes (no gathers) — but it needs log2(m+n)
+dependent stages over the whole array vs LOMS's 2, so it makes log-many
+full passes over the VMEM tile. The benchmark harness contrasts the two.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_merge_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]  # (bt, m) ascending
+    b = b_ref[...]  # (bt, n) ascending
+    bt = a.shape[0]
+    x = jnp.concatenate([a, b[:, ::-1]], axis=-1)  # bitonic
+    total = x.shape[-1]
+    d = total // 2
+    while d >= 1:
+        y = x.reshape(bt, total // (2 * d), 2, d)
+        lo = jnp.minimum(y[:, :, 0, :], y[:, :, 1, :])
+        hi = jnp.maximum(y[:, :, 0, :], y[:, :, 1, :])
+        x = jnp.stack([lo, hi], axis=2).reshape(bt, total)
+        d //= 2
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def bitonic_merge2_pallas(
+    a: jnp.ndarray, b: jnp.ndarray, *, block_batch: int = 8, interpret: bool = True
+) -> jnp.ndarray:
+    """Merge sorted (B, m) and (B, n); m == n == power of two (Batcher's
+    constraint, paper §VI)."""
+    (bsz, m), (_, n) = a.shape, b.shape
+    assert m == n and (m & (m - 1)) == 0, "Batcher merge needs equal power-of-2 lists"
+    assert bsz % block_batch == 0
+    return pl.pallas_call(
+        _bitonic_merge_kernel,
+        grid=(bsz // block_batch,),
+        in_specs=[
+            pl.BlockSpec((block_batch, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m + n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,96 @@
+"""In-kernel primitives shared by the Pallas sorters.
+
+Everything here is written for the TPU compute units:
+  * comparison clouds -> dense boolean matrices on the VPU,
+  * output routing (the FPGA MUXF tree) -> one-hot matmul on the MXU,
+  * fixed wiring -> constant-index takes, unrolled at trace time.
+No data-dependent control flow exists anywhere, mirroring the paper's
+oblivious hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _iota(shape, dim, dtype=jnp.int32):
+    """broadcasted_iota — the Pallas/Mosaic-safe way to make index ramps
+    (captured numpy constants are not allowed inside kernel bodies)."""
+    return jax.lax.broadcasted_iota(dtype, shape, dim)
+
+
+def onehot_permute(vals: jnp.ndarray, rank: jnp.ndarray, payload=None):
+    """out[..., rank[i]] = vals[..., i] via one-hot matmul (MXU path).
+
+    rank is a permutation of [0, L). The one-hot matrix is exact in any
+    float dtype (one nonzero per row)."""
+    l = vals.shape[-1]
+    cols = _iota(rank.shape + (l,), rank.ndim)
+    oh = (rank[..., :, None] == cols).astype(jnp.float32)
+    out = jnp.einsum("...ij,...i->...j", oh, vals.astype(jnp.float32))
+    out = out.astype(vals.dtype)
+    if payload is None:
+        return out
+    pout = jnp.einsum("...ij,...i->...j", oh, payload.astype(jnp.float32))
+    return out, pout.astype(payload.dtype)
+
+
+def scatter_permute(vals: jnp.ndarray, rank: jnp.ndarray, payload=None):
+    """Same as onehot_permute via put_along_axis (VPU/'fabric' path)."""
+    out = jnp.put_along_axis(jnp.zeros_like(vals), rank, vals, axis=-1, inplace=False)
+    if payload is None:
+        return out
+    pout = jnp.put_along_axis(jnp.zeros_like(payload), rank, payload, axis=-1, inplace=False)
+    return out, pout
+
+
+def ranks_sort(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable full-sort ranks along the last axis (N-sorter comparator cloud)."""
+    n = x.shape[-1]
+    i_idx = _iota((n, n), 0)
+    j_idx = _iota((n, n), 1)
+    j_lt_i = j_idx < i_idx
+    before = (x[..., None, :] < x[..., :, None]) | (
+        (x[..., None, :] == x[..., :, None]) & j_lt_i
+    )
+    return before.sum(axis=-1).astype(jnp.int32)
+
+
+def ranks_merge2(lo: jnp.ndarray, hi: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable 2-run merge ranks (S2MS cloud): ``lo`` wins ties.
+
+    Returns (rank_lo, rank_hi); both runs ascend. Cross comparisons only —
+    m*n comparators, the S2MS resource saving."""
+    m, n = lo.shape[-1], hi.shape[-1]
+    cmp_ = hi[..., None, :] < lo[..., :, None]  # (.., m, n): hi_j < lo_i
+    # lo_i's rank counts strictly-smaller hi; hi_j's rank counts lo_i <= hi_j
+    # (lo wins ties) — together a collision-free permutation.
+    rank_lo = _iota((1, m), 1)[0] + cmp_.sum(axis=-1)
+    rank_hi = _iota((1, n), 1)[0] + (~cmp_).sum(axis=-2)
+    return rank_lo.astype(jnp.int32), rank_hi.astype(jnp.int32)
+
+
+def merge2_sorted(
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    payload: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    use_mxu: bool = True,
+):
+    """Single-stage stable merge of two ascending runs along the last axis."""
+    rank_lo, rank_hi = ranks_merge2(lo, hi)
+    vals = jnp.concatenate([lo, hi], axis=-1)
+    rank = jnp.concatenate([rank_lo, rank_hi], axis=-1)
+    permute = onehot_permute if use_mxu else scatter_permute
+    if payload is None:
+        return permute(vals, rank)
+    return permute(vals, rank, jnp.concatenate([payload[0], payload[1]], axis=-1))
+
+
+def sort_nsorter(x: jnp.ndarray, payload=None, use_mxu: bool = True):
+    """Single-stage N-sorter along the last axis (ascending, stable)."""
+    rank = ranks_sort(x)
+    permute = onehot_permute if use_mxu else scatter_permute
+    return permute(x, rank, payload) if payload is not None else permute(x, rank)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: generic schedule-driven k-way LOMS merge.
+
+Runs any :class:`repro.core.networks.Schedule` inside a Pallas kernel. The
+schedule's wiring (setup scatter, per-stage group indices, output gather)
+is passed as int32 operand arrays — Pallas does not allow captured
+constants — and every stage unrolls at trace time into:
+  wiring take -> comparison cloud (VPU) -> one-hot permute (MXU) -> wiring
+  scatter.
+This is the general path (3c_7r, mixed list sizes, medians); the 2-way
+fast path (pure strided reshapes, no index operands) lives in
+loms_merge.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.networks import Schedule, _stage_classes
+
+from .common import _iota, onehot_permute, ranks_sort, scatter_permute
+
+
+def _schedule_wiring(sched: Schedule, n_stages=None) -> List[np.ndarray]:
+    """Collect every constant index array the kernel needs, in read order."""
+    wiring = [np.asarray(sched.setup_scatter, dtype=np.int32)]
+    stages = sched.stages if n_stages is None else sched.stages[:n_stages]
+    for st in stages:
+        for _, _, idx in _stage_classes(st):
+            wiring.append(idx.reshape(-1).astype(np.int32))
+    wiring.append(np.asarray(sched.output_gather, dtype=np.int32))
+    return wiring
+
+
+def _kway_kernel(x_ref, *refs, sched: Schedule, n_stages, use_mxu):
+    o_ref = refs[-1]
+    wiring = [r[...] for r in refs[:-1]]
+    x = x_ref[...]
+    bt = x.shape[0]
+    stages = sched.stages if n_stages is None else sched.stages[:n_stages]
+    permute = onehot_permute if use_mxu else scatter_permute
+
+    wi = iter(wiring)
+    setup = next(wi)
+    w = jnp.zeros((bt, sched.size), dtype=x.dtype)
+    w = w.at[:, setup].set(x)
+    for st in stages:
+        for n, runs, idx in _stage_classes(st):
+            flat = next(wi)
+            vals = jnp.take(w, flat, axis=-1).reshape(bt, *idx.shape)
+            if runs is None:
+                rank = ranks_sort(vals)
+            else:
+                offs = np.cumsum((0,) + runs)
+                pieces = [vals[..., offs[s] : offs[s + 1]] for s in range(len(runs))]
+                rr = []
+                for s, vs in enumerate(pieces):
+                    r = _iota((1, 1, runs[s]), 2)[0]
+                    r = jnp.broadcast_to(r, vs.shape).astype(jnp.int32)
+                    for t, vt in enumerate(pieces):
+                        if t == s:
+                            continue
+                        if t < s:
+                            cnt = (vt[..., None, :] <= vs[..., :, None]).sum(-1)
+                        else:
+                            cnt = (vt[..., None, :] < vs[..., :, None]).sum(-1)
+                        r = r + cnt.astype(jnp.int32)
+                    rr.append(r)
+                rank = jnp.concatenate(rr, axis=-1)
+            vals = permute(vals, rank)
+            w = w.at[:, flat].set(vals.reshape(bt, len(idx.reshape(-1))))
+    gather = next(wi)
+    o_ref[...] = jnp.take(w, gather, axis=-1)
+
+
+def kway_merge_pallas(
+    x: jnp.ndarray,
+    sched: Schedule,
+    *,
+    n_stages: Optional[int] = None,
+    block_batch: int = 8,
+    use_mxu: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Apply an oblivious schedule to (B, n_inputs) batched lists."""
+    bsz, n_in = x.shape
+    assert n_in == sched.n_inputs
+    assert bsz % block_batch == 0
+    wiring = _schedule_wiring(sched, n_stages)
+    in_specs = [pl.BlockSpec((block_batch, n_in), lambda i: (i, 0))]
+    in_specs += [pl.BlockSpec(w.shape, lambda i: (0,)) for w in wiring]
+    return pl.pallas_call(
+        functools.partial(_kway_kernel, sched=sched, n_stages=n_stages, use_mxu=use_mxu),
+        grid=(bsz // block_batch,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_batch, sched.n_outputs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, sched.n_outputs), x.dtype),
+        interpret=interpret,
+    )(x, *[jnp.asarray(w) for w in wiring])

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: batched 2-way List Offset merge (paper Section IV).
+
+Layout strategy (hardware adaptation, DESIGN.md §2): the k-column setup
+array for UP-m/DN-n with C columns assigns
+    A_j  -> column j % C            (ascending stride-C slices of ``a``)
+    B_j  -> column (n-1-j) % C      (ascending stride-C slices of ``b``)
+so for C | m and C | n the whole setup array is built from *strided
+reshapes* — no gathers touch VMEM. Stage 1 merges each column's two runs
+with the S2MS comparison cloud (VPU) + one-hot permute (MXU); stage 2
+rank-sorts each row of C values. Output is the row-major flatten, again a
+plain reshape.
+
+Per-block VMEM: (m+n) values + the widest column comparison matrix
+(m/C * n/C bools) + the row-sort matrix (R * C^2) — tile the batch so this
+fits the ~16 MiB VMEM budget (``ops.loms_merge2`` picks the tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import merge2_sorted, sort_nsorter
+
+
+def _loms2_kernel(a_ref, b_ref, o_ref, *, n_cols: int, use_mxu: bool):
+    a = a_ref[...]  # (bt, m) ascending
+    b = b_ref[...]  # (bt, n) ascending
+    bt, m = a.shape
+    n = b.shape[-1]
+    c_ = n_cols
+    # --- setup array as strided views; stage 1: per-column S2MS merges ----
+    cols = []
+    for c in range(c_):
+        av = a[:, c::c_]  # A_j with j % C == c, ascending
+        bv = b[:, (c_ - 1 - c) % c_ :: c_]  # B_j with (n-1-j)%C == c
+        # column bottom->top = [B run, A run]
+        col = merge2_sorted(bv, av, use_mxu=use_mxu)  # (bt, R)
+        cols.append(col)
+    # --- stage 2: row sorts across columns ---------------------------------
+    # ascending within a row is col0, col1, ..., col_{C-1} (right->left)
+    arr = jnp.stack(cols, axis=-1)  # (bt, R, C)
+    arr = sort_nsorter(arr, use_mxu=use_mxu)
+    o_ref[...] = arr.reshape(bt, m + n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_cols", "block_batch", "use_mxu", "interpret")
+)
+def loms_merge2_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    n_cols: int = 2,
+    block_batch: int = 8,
+    use_mxu: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Merge sorted ``a`` (B, m) and ``b`` (B, n) -> (B, m+n).
+
+    Requires n_cols | m and n_cols | n (the hole-free fast path; ragged
+    sizes fall back to the schedule executor in ops.py)."""
+    (bsz, m), (_, n) = a.shape, b.shape
+    assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
+    assert bsz % block_batch == 0, (bsz, block_batch)
+    grid = (bsz // block_batch,)
+    return pl.pallas_call(
+        functools.partial(_loms2_kernel, n_cols=n_cols, use_mxu=use_mxu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_batch, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m + n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers over the Pallas sorters.
+
+On TPU hosts the kernels compile natively; everywhere else they run in
+``interpret=True`` mode (the kernel body executes as jnp on CPU), so the
+whole framework is runnable and testable on this CPU container. Ragged
+shapes that the fast kernels don't cover fall back to the pure-JAX
+schedule executor — same oblivious semantics, no shape restrictions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as core_api
+from repro.core import loms as core_loms
+
+from .bitonic import bitonic_merge2_pallas
+from .kway import kway_merge_pallas
+from .loms_merge import loms_merge2_pallas
+from .topk import router_topk_pallas, vocab_topk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block_batch(bsz: int, target: int = 8) -> int:
+    for bb in (target, 4, 2, 1):
+        if bsz % bb == 0:
+            return bb
+    return 1
+
+
+def merge2(
+    a: jnp.ndarray, b: jnp.ndarray, *, n_cols: int = 2, kind: str = "loms"
+) -> jnp.ndarray:
+    """Batched merge of sorted (B, m) and (B, n) lists."""
+    assert a.ndim == 2 and b.ndim == 2
+    m, n = a.shape[-1], b.shape[-1]
+    if kind == "bitonic":
+        return bitonic_merge2_pallas(
+            a, b, block_batch=_pick_block_batch(a.shape[0]), interpret=_interpret()
+        )
+    assert kind == "loms"
+    if m % n_cols == 0 and n % n_cols == 0:
+        return loms_merge2_pallas(
+            a, b, n_cols=n_cols,
+            block_batch=_pick_block_batch(a.shape[0]), interpret=_interpret(),
+        )
+    return core_api.merge(a, b, n_cols=n_cols)  # ragged fallback
+
+
+def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Batched k-way LOMS merge of sorted (B, len_i) lists."""
+    lens = tuple(int(l.shape[-1]) for l in lists)
+    sched = core_loms.loms_kway(lens)
+    x = jnp.concatenate(list(lists), axis=-1)
+    return kway_merge_pallas(
+        x, sched, block_batch=_pick_block_batch(x.shape[0]), interpret=_interpret()
+    )
+
+
+def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Batched 2-stage LOMS median of k equal odd-length sorted lists."""
+    lens = tuple(int(l.shape[-1]) for l in lists)
+    sched, pos = core_loms.loms_median(lens)
+    x = jnp.concatenate(list(lists), axis=-1)
+    out = kway_merge_pallas(
+        x, sched, block_batch=_pick_block_batch(x.shape[0]), interpret=_interpret()
+    )
+    return out[..., pos]
+
+
+def topk(
+    x: jnp.ndarray, k: int, *, block: Optional[int] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched descending top-k with indices over the last axis of (B, E).
+
+    Dispatches to the single-kernel router path for small E and the
+    two-phase vocab path for large E."""
+    assert x.ndim == 2
+    bsz, e = x.shape
+    bb = _pick_block_batch(bsz)
+    if e <= 512:
+        blk = block or max(16, min(64, e))
+        while e % blk:
+            blk -= 1
+        return router_topk_pallas(
+            x, k=k, block=blk, block_batch=bb, interpret=_interpret()
+        )
+    return vocab_topk_pallas(
+        x, k=k, block=block or 128, block_batch=bb, interpret=_interpret()
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every kernel (the ground truth in kernel tests)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def merge2_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Sorted merge of two sorted lists = sort of the concatenation."""
+    return jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+
+
+def merge_k_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """k-way merge oracle on the concatenated input."""
+    return jnp.sort(x, axis=-1)
+
+
+def topk_ref(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Descending top-k values + indices (jax.lax.top_k)."""
+    import jax
+
+    return jax.lax.top_k(x, k)
+
+
+def median_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Median of an odd number of values along the last axis."""
+    n = x.shape[-1]
+    assert n % 2 == 1
+    return jnp.sort(x, axis=-1)[..., n // 2]

@@ -1,0 +1,174 @@
+"""Pallas TPU kernels: blockwise top-k via truncated LOMS merges.
+
+This is the framework's hot sorting path (MoE router top-k over experts,
+decode-time top-k over the vocab). Two kernels:
+
+  * ``router_topk`` — E small (<= ~512): one kernel does local descending
+    rank-sorts of E/bs blocks and the full LOMS merge tree in VMEM.
+  * ``vocab_topk``  — E large (vocab ~152k): phase-1 kernel grids over
+    (batch, vocab-block) producing per-block sorted top-k lists; then a
+    log-depth sequence of phase-2 merge kernels, each merging pairs of
+    sorted k-lists with a truncated UP-k/DN-k LOMS merge (top half kept —
+    exactly the paper's 2-stage device, reading only the upper rows).
+
+Values carry int32 payload indices throughout (compare on value, tie-break
+on nothing — payloads ride the permutation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import merge2_sorted, sort_nsorter
+
+
+def _neg_inf(dtype):
+    # finite lowest value: +/-inf would turn the one-hot MXU permute into
+    # 0 * inf = NaN, so sentinels must stay finite
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return float(jnp.finfo(d).min)
+    return jnp.iinfo(d).min
+
+
+def _local_sorted_topk(x, idx, k, use_mxu):
+    """(bt, G, bs) -> per-block descending top-k (bt, G, k) with payloads."""
+    vs, is_ = sort_nsorter(x, idx, use_mxu=use_mxu)
+    return vs[..., ::-1][..., :k], is_[..., ::-1][..., :k]
+
+
+def _merge_desc(av, ai, bv, bi, keep, use_mxu):
+    """Merge two descending lists, keep the top ``keep`` (descending)."""
+    mv, mi = merge2_sorted(av[..., ::-1], bv[..., ::-1],
+                           payload=(ai[..., ::-1], bi[..., ::-1]), use_mxu=use_mxu)
+    return mv[..., ::-1][..., :keep], mi[..., ::-1][..., :keep]
+
+
+def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu):
+    x = x_ref[...]  # (bt, E)
+    bt, e = x.shape
+    g = e // block
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    xb = x.reshape(bt, g, block)
+    ib = idx.reshape(bt, g, block)
+    kk = min(k, block)
+    vs, is_ = _local_sorted_topk(xb, ib, kk, use_mxu)
+    while vs.shape[-2] > 1:
+        if vs.shape[-2] % 2:
+            pad = [(0, 0)] * (vs.ndim - 2) + [(0, 1), (0, 0)]
+            vs = jnp.pad(vs, pad, constant_values=_neg_inf(vs.dtype))
+            is_ = jnp.pad(is_, pad, constant_values=0)
+        kk = min(k, 2 * kk)
+        vs, is_ = _merge_desc(vs[..., 0::2, :], is_[..., 0::2, :],
+                              vs[..., 1::2, :], is_[..., 1::2, :], kk, use_mxu)
+    v_ref[...] = vs[..., 0, :k]
+    i_ref[...] = is_[..., 0, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
+def router_topk_pallas(
+    x: jnp.ndarray, *, k: int, block: int = 32, block_batch: int = 8,
+    use_mxu: bool = True, interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k over the last axis of (T, E) router logits; E % block == 0."""
+    t, e = x.shape
+    assert e % block == 0 and t % block_batch == 0
+    return pl.pallas_call(
+        functools.partial(_router_topk_kernel, k=k, block=block, use_mxu=use_mxu),
+        grid=(t // block_batch,),
+        in_specs=[pl.BlockSpec((block_batch, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_batch, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_batch, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), x.dtype),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# large-axis (vocab) top-k: phase 1 block kernel + phase 2 merge-level kernel
+# ---------------------------------------------------------------------------
+
+
+def _phase1_kernel(x_ref, v_ref, i_ref, *, k, use_mxu):
+    j = pl.program_id(1)
+    x = x_ref[...]  # (bt, bs)
+    bt, bs = x.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + (j * bs).astype(jnp.int32)
+    vs, is_ = sort_nsorter(x, idx, use_mxu=use_mxu)
+    v_ref[...] = vs[..., ::-1][..., None, :k]
+    i_ref[...] = is_[..., ::-1][..., None, :k]
+
+
+def _merge_level_kernel(v_ref, i_ref, vo_ref, io_ref, *, keep, use_mxu):
+    v = v_ref[...]  # (bt, 2, k) two descending lists
+    i = i_ref[...]
+    vo, io = _merge_desc(v[:, 0], i[:, 0], v[:, 1], i[:, 1], keep, use_mxu)
+    vo_ref[...] = vo[:, None, :]
+    io_ref[...] = io[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
+def vocab_topk_pallas(
+    x: jnp.ndarray, *, k: int, block: int = 128, block_batch: int = 8,
+    use_mxu: bool = True, interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k over a large last axis (B, V). Pads V to a block multiple."""
+    bsz, v = x.shape
+    assert bsz % block_batch == 0
+    nblk = -(-v // block)
+    # pad to power-of-two block count for a regular merge tree
+    nblk = 1 << (nblk - 1).bit_length()
+    vp = nblk * block
+    if vp != v:
+        x = jnp.pad(x, [(0, 0), (0, vp - v)], constant_values=_neg_inf(x.dtype))
+    kk = min(k, block)
+    vs, is_ = pl.pallas_call(
+        functools.partial(_phase1_kernel, k=kk, use_mxu=use_mxu),
+        grid=(bsz // block_batch, nblk),
+        in_specs=[pl.BlockSpec((block_batch, block), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_batch, 1, kk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_batch, 1, kk), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nblk, kk), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nblk, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    while vs.shape[1] > 1:
+        g = vs.shape[1] // 2
+        keep = min(k, 2 * vs.shape[-1])
+        vpair = vs.reshape(bsz * g, 2, vs.shape[-1])
+        ipair = is_.reshape(bsz * g, 2, vs.shape[-1])
+        bb = block_batch if (bsz * g) % block_batch == 0 else 1
+        vs, is_ = pl.pallas_call(
+            functools.partial(_merge_level_kernel, keep=keep, use_mxu=use_mxu),
+            grid=((bsz * g) // bb,),
+            in_specs=[
+                pl.BlockSpec((bb, 2, vpair.shape[-1]), lambda i: (i, 0, 0)),
+                pl.BlockSpec((bb, 2, vpair.shape[-1]), lambda i: (i, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bb, 1, keep), lambda i: (i, 0, 0)),
+                pl.BlockSpec((bb, 1, keep), lambda i: (i, 0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((bsz * g, 1, keep), x.dtype),
+                jax.ShapeDtypeStruct((bsz * g, 1, keep), jnp.int32),
+            ],
+            interpret=interpret,
+        )(vpair, ipair)
+        vs = vs.reshape(bsz, g, keep)
+        is_ = is_.reshape(bsz, g, keep)
+    return vs[:, 0, :k], is_[:, 0, :k]

@@ -1,0 +1,555 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first init, and the production meshes need 512 host
+placeholder devices. Never set this flag globally: smoke tests and
+benchmarks are single-device.
+
+For each cell this lowers the production step function with
+ShapeDtypeStruct stand-ins (zero allocation), compiles it for the mesh,
+and records:
+  * memory_analysis  (per-device bytes — proves it fits in 16 GiB HBM)
+  * cost_analysis    (per-device HLO flops/bytes for the roofline)
+  * collective bytes (parsed from the compiled per-device HLO: all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute)
+Results go to experiments/dryrun/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_cache, loss_fn, model_init, prefill
+from repro.optim import OptConfig, opt_init, opt_update
+from repro.parallel import build_param_pspecs, cache_pspecs, make_parallelism
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> "Optional[str]":
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "pure full-attention arch: 500k decode needs sub-quadratic mixing"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# abstract shapes (no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+
+def shapes_and_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct params + logical-axis spec tree, via eval_shape."""
+    cell = {}
+
+    def only_params(key):
+        p, s = model_init(key, cfg)
+        cell["specs"] = s  # static python objects, captured during trace
+        return p
+
+    shapes = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return shapes, cell["specs"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "targets": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+            batch["targets"] = jax.ShapeDtypeStruct((b, s - cfg.frontend_len), i32)
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return batch
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "positions": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def _maybe(axes, size, mesh):
+    ax = axes if isinstance(axes, tuple) else (axes,)
+    n = int(np.prod([mesh.shape[a] for a in ax]))
+    return axes if size % n == 0 and size >= n else None
+
+
+def batch_pspecs_for(cfg, shape, par, mesh):
+    dp = _maybe(par.dp_axes, shape.global_batch, mesh)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"frames": P(dp, None, None), "targets": P(dp, None)}
+        out = {"tokens": P(dp, None), "targets": P(dp, None)}
+        if cfg.family == "vlm":
+            out["patches"] = P(dp, None, None)
+        return out
+    return {"tokens": P(dp, None), "positions": P(dp, None)}
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               remat: str = "dots", cache_dtype=jnp.bfloat16,
+               grad_accum: "Optional[int]" = None):
+    par = make_parallelism(mesh, ep=cfg.moe is not None)
+    params_shapes, specs = shapes_and_specs(cfg)
+    param_ps = build_param_pspecs(params_shapes, specs, mesh)
+    batch_ps = batch_pspecs_for(cfg, shape, par, mesh)
+    inputs = input_specs(cfg, shape)
+    named = lambda t: jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), t, is_leaf=lambda x: isinstance(x, P))
+    dp = _maybe(par.dp_axes, shape.global_batch, mesh)
+
+    if shape.kind == "train":
+        oc = OptConfig(total_steps=10_000)
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        opt_ps = {"mu": param_ps, "nu": param_ps, "step": P()}
+        # gradient accumulation: keep the per-microbatch activation stack
+        # (n_layers x B_loc x S x D) under ~4 GiB/device
+        act_bytes = (cfg.n_layers * (shape.global_batch / max(1, par.dp_size))
+                     * shape.seq_len * cfg.d_model * 2)
+        k_acc = 1
+        while act_bytes / k_acc > 4 * 2**30 and k_acc < shape.global_batch:
+            k_acc *= 2
+        if grad_accum is not None:
+            k_acc = grad_accum
+
+        def train_step(params, opt_state, batch):
+            if k_acc > 1:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((k_acc, x.shape[0] // k_acc) + x.shape[1:]),
+                    batch)
+                mb = jax.tree.map(
+                    lambda x: par.constrain(
+                        x, None, par.dp_for(x.shape[1]), *([None] * (x.ndim - 2))),
+                    mb)
+
+                def mb_step(acc, mbatch):
+                    loss, g = jax.value_and_grad(
+                        lambda p: loss_fn(p, mbatch, cfg, par=par, remat=remat))(params)
+                    # anchor grads to the param shardings so the cross-dp
+                    # reduction lowers to reduce-scatter, not all-reduce
+                    g = jax.tree.map(
+                        lambda gr, ps: jax.lax.with_sharding_constraint(
+                            gr, NamedSharding(mesh, ps)),
+                        g, param_ps, is_leaf=lambda x: not isinstance(x, (dict, list)))
+                    return jax.tree.map(jnp.add, acc, g), loss
+
+                g0 = jax.tree.map(jnp.zeros_like, params)
+                grads, losses = jax.lax.scan(mb_step, g0, mb)
+                grads = jax.tree.map(lambda g: g / k_acc, grads)
+                loss = losses.mean()
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch, cfg, par=par, remat=remat))(params)
+            params, opt_state, metrics = opt_update(grads, opt_state, params, oc)
+            return params, opt_state, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(named(param_ps), named(opt_ps), named(batch_ps)),
+            out_shardings=(named(param_ps), named(opt_ps), None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_shapes, opt_shapes, inputs)
+
+    if cfg.is_encoder_only:
+        # encoders have no cache: prefill == full forward
+        from repro.models import forward
+
+        def encode_step(params, batch):
+            return forward(params, batch, cfg, par=par)
+
+        fn = jax.jit(encode_step,
+                     in_shardings=(named(param_ps), named(batch_ps)),
+                     out_shardings=None)
+        return fn, (params_shapes, inputs)
+
+    # inference cells need an abstract cache
+    b = shape.global_batch
+    max_len = shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, b, max_len))
+    cache_ps = cache_pspecs(cfg, par, cache_shapes)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return prefill(params, batch, cache, cfg, par=par)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(named(param_ps), named(batch_ps), named(cache_ps)),
+            out_shardings=(None, named(cache_ps)),
+            donate_argnums=(2,),
+        )
+        return fn, (params_shapes, inputs, cache_shapes)
+
+    # decode
+    def serve_step(params, tokens, positions, cache):
+        logits, cache = decode_step(params, tokens, cache, cfg,
+                                    positions=positions, par=par)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(named(param_ps), NamedSharding(mesh, P(dp, None)),
+                      NamedSharding(mesh, P(dp, None)), named(cache_ps)),
+        out_shardings=(NamedSharding(mesh, P(dp)), named(cache_ps)),
+        donate_argnums=(3,),
+    )
+    return fn, (params_shapes, inputs["tokens"], inputs["positions"], cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_UPCAST_RE = re.compile(
+    r"%(\S+) = (f32|bf16)\[([0-9,]*)\]\S* (convert|copy|fusion)\(")
+
+
+def cpu_upcast_bytes(hlo_text: str) -> int:
+    """Bytes of big convert/copy buffers that exist only because XLA:CPU
+    lacks native bf16/f8 dots (operands get upcast into materialized
+    copies) or relies on layout copies a TPU compiler fuses/aliases.
+    Subtracting them gives the TPU-realistic estimate. Only buffers
+    >= 256 MiB are counted (one per op name) so genuine activation temps
+    are untouched."""
+    seen = set()
+    total = 0
+    for m in _UPCAST_RE.finditer(hlo_text):
+        name, dt, dims, op = m.groups()
+        if op == "fusion" and not name.startswith("wrapped_convert"):
+            continue
+        if name in seen:
+            continue
+        seen.add(name)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        bytes_ = n * (4 if dt == "f32" else 2)
+        if bytes_ >= 256 * 2**20:
+            total += bytes_
+    return total
+
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|([a-z0-9_]+\[[0-9,]*\])\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def _bytes_of(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+# result-bytes -> per-device ring link traffic: AG moves ~result bytes,
+# AR ~2x result (reduce + broadcast phases), RS moves ~input = result x
+# group (approximated with the 16-way mesh axis), A2A/CP ~result.
+_LINK_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 16.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_types, single, op = m.groups()
+        total = 0
+        if single:
+            total = _bytes_of(single)
+        else:
+            for part in _SHAPE_RE.finditer(tuple_types or ""):
+                total += _bytes_of(part.group(0))
+        out[op] += total
+        counts[op] += 1
+    link = {k: v * _LINK_WEIGHT[k] for k, v in out.items()}
+    return {"bytes": out, "counts": counts, "link_bytes": link,
+            "total_bytes": sum(out.values()),
+            "total_link_bytes": sum(link.values())}
+
+
+# ---------------------------------------------------------------------------
+# extrapolated cost estimation
+#
+# XLA's cost_analysis counts while-loop (scan) bodies ONCE, so a scanned
+# 62-layer model reports ~1/62 of the real FLOPs. We therefore compile
+# analysis variants whose scans are removed or short and extrapolate:
+#   * attention archs: attn_chunk = seq (full-attention einsum, exact S^2
+#     cost in one op) x {1, 2}-layer depth -> linear depth extrapolation;
+#   * ssm archs: SSD cost is linear in both depth and #chunks -> bilinear
+#     (depth x seq) 4-point extrapolation at the production chunk size;
+#   * hybrid (zamba2): ssm part as above + n_groups x (2-pt dense-variant
+#     per-shared-attention-block cost);
+#   * decode cells: no seq scans at decode -> depth extrapolation only.
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+
+def _variant_depths(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        unit = cfg.attn_every
+        return unit, 2 * unit, cfg.n_layers // unit
+    n_head = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    return n_head + 1, n_head + 2, cfg.n_layers - n_head
+
+
+def _compile_cost(cfg, shape, mesh, remat):
+    fn, args = build_cell(cfg, shape, mesh, remat=remat, grad_accum=1)
+    compiled = fn.lower(*args).compile()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll["link_bytes"], "coll_counts": coll["counts"]}
+
+
+def _combine(c1, c2, scale_fn):
+    """elementwise extrapolation: out = scale_fn(v1, v2)."""
+    out = {}
+    for key in ("flops", "bytes"):
+        out[key] = scale_fn(c1[key], c2[key])
+    out["coll"] = {k: scale_fn(c1["coll"][k], c2["coll"][k]) for k in c1["coll"]}
+    return out
+
+
+def estimate_cost(cfg: ModelConfig, shape: ShapeConfig, mesh, remat="full"):
+    d1, d2, units = _variant_depths(cfg)
+    if shape.kind == "decode" or cfg.family not in ("ssm", "hybrid"):
+        # full-attention analysis variant for train/prefill; decode keeps
+        # production config (no seq scans at decode)
+        # keep flash chunking but cap the unrolled body count at ~4x4
+        ac = max(cfg.attn_chunk, shape.seq_len // 4) if shape.kind != "decode" \
+            else cfg.attn_chunk
+        mk = lambda L: _dc.replace(cfg, n_layers=L, attn_chunk=ac,
+                                   unroll_layers=True)
+        c1 = _compile_cost(mk(d1), shape, mesh, remat)
+        c2 = _compile_cost(mk(d2), shape, mesh, remat)
+        est = _combine(c1, c2, lambda a, b: a + (units - 1) * (b - a))
+        if cfg.family in ("ssm", "hybrid") and shape.kind == "decode":
+            return est
+        if cfg.family in ("ssm", "hybrid"):
+            raise AssertionError  # handled below
+        return est
+
+    q = cfg.ssm.chunk
+    sub_shape = lambda n: _dc.replace(shape, seq_len=n * q,
+                                      global_batch=shape.global_batch)
+    nc = shape.seq_len // q
+    if cfg.family == "ssm":
+        mk = lambda L: _dc.replace(cfg, n_layers=L, unroll_layers=True)
+        c11 = _compile_cost(mk(d1), sub_shape(1), mesh, remat)
+        c12 = _compile_cost(mk(d1), sub_shape(2), mesh, remat)
+        c21 = _compile_cost(mk(d2), sub_shape(1), mesh, remat)
+        c22 = _compile_cost(mk(d2), sub_shape(2), mesh, remat)
+        # bilinear: c(L, n) = a + b L + g n + d L n, evaluate (units, nc)
+        def bil(v11, v12, v21, v22):
+            dd = d2 - d1
+            bL = (v21 - v11) / dd
+            gn = v12 - v11
+            dn = ((v22 - v21) - (v12 - v11)) / dd
+            a = v11 - bL * d1 - gn * 1 - dn * d1 * 1
+            lfull = cfg.n_layers  # == units for ssm (no head layers)
+            return a + bL * lfull + gn * nc + dn * lfull * nc
+        out = {"flops": bil(c11["flops"], c12["flops"], c21["flops"], c22["flops"]),
+               "bytes": bil(c11["bytes"], c12["bytes"], c21["bytes"], c22["bytes"]),
+               "coll": {k: bil(c11["coll"][k], c12["coll"][k], c21["coll"][k],
+                               c22["coll"][k]) for k in c11["coll"]}}
+        return out
+    # hybrid: ssm-only bilinear + per-shared-attn-block 2-point (full attn)
+    ssm_cfg = _dc.replace(cfg, family="ssm", attn_every=0)
+    ssm_est = estimate_cost(_dc.replace(ssm_cfg, n_layers=cfg.n_layers),
+                            shape, mesh, remat)
+    dense_cfg = lambda L: _dc.replace(cfg, family="dense", ssm=None,
+                                      attn_every=0, n_layers=L,
+                                      attn_chunk=max(cfg.attn_chunk,
+                                                     shape.seq_len // 4),
+                                      unroll_layers=True)
+    a1 = _compile_cost(dense_cfg(1), shape, mesh, remat)
+    a2 = _compile_cost(dense_cfg(2), shape, mesh, remat)
+    per_blk = _combine(a1, a2, lambda a, b: b - a)
+    n_groups = cfg.n_layers // cfg.attn_every
+    return _combine(ssm_est, per_blk, lambda s, p: s + n_groups * p)
+
+
+HBM_BUDGET = 15 * 2**30  # leave headroom under 16 GiB
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             remat: str = "dots", cache_dtype=None) -> dict:
+    cfg = get_config(arch)
+    if cache_dtype:
+        import dataclasses as _dcl
+        cfg = _dcl.replace(cfg, cache_dtype=cache_dtype)
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind}
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, shape, mesh, remat=remat)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    hlo_text = None
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)
+        }
+        args_b = rec["memory"].get("argument_size_in_bytes", 0)
+        temp_b = rec["memory"].get("temp_size_in_bytes", 0)
+        out_b = rec["memory"].get("output_size_in_bytes", 0)
+        alias_b = rec["memory"].get("alias_size_in_bytes", 0)
+        rec["memory"]["per_device_total_bytes"] = args_b + temp_b + max(
+            out_b - alias_b, 0)
+        if hlo_text:
+            upcast = cpu_upcast_bytes(hlo_text)
+            rec["memory"]["cpu_bf16_upcast_bytes"] = upcast
+            rec["memory"]["per_device_total_bytes_tpu_estimate"] = max(
+                rec["memory"]["per_device_total_bytes"] - upcast, args_b)
+    except Exception as e:  # noqa: BLE001
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost"] = {k: float(ca[k]) for k in ("flops", "bytes accessed")
+                       if k in ca}
+        for k, v in ca.items():
+            if k.startswith("bytes accessed") and isinstance(v, (int, float)):
+                rec["cost"][k] = float(v)
+    except Exception as e:  # noqa: BLE001
+        rec["cost"] = {"error": str(e)}
+    try:
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    except Exception as e:  # noqa: BLE001
+        rec["collectives"] = {"error": str(e)}
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec["n_chips"] = n_chips
+    try:
+        with mesh:
+            rec["cost_extrapolated"] = estimate_cost(cfg, shape, mesh,
+                                                     remat=remat)
+    except Exception as e:  # noqa: BLE001
+        rec["cost_extrapolated"] = {"error": str(e),
+                                    "trace": traceback.format_exc()}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(OUT_DIR)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for mesh_kind in meshes:
+        os.makedirs(os.path.join(out_dir, mesh_kind), exist_ok=True)
+        for arch, shape in cells:
+            tag = f"{mesh_kind}/{arch}__{shape}"
+            path = os.path.join(out_dir, mesh_kind, f"{arch}__{shape}.json")
+            try:
+                rec = run_cell(arch, shape, mesh_kind, remat=args.remat)
+                mem = rec.get("memory", {})
+                if (rec.get("status") == "ok" and rec.get("kind") == "decode"
+                        and mem.get("argument_size_in_bytes", 0) > HBM_BUDGET):
+                    # bf16 cache alone exceeds HBM: retry with an fp8 cache
+                    rec = run_cell(arch, shape, mesh_kind, remat=args.remat,
+                                   cache_dtype="float8_e4m3fn")
+                    rec["kv_cache_dtype"] = "float8_e4m3fn"
+            except Exception:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "error", "trace": traceback.format_exc()}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status")
+            extra = ""
+            if status == "ok":
+                mem = rec.get("memory", {}).get("per_device_total_bytes")
+                fl = rec.get("cost", {}).get("flops")
+                extra = (f" mem/dev={mem/2**30:.2f}GiB" if mem else "") + \
+                        (f" flops/dev={fl:.3g}" if fl else "") + \
+                        f" compile={rec.get('compile_s')}s"
+            elif status == "skipped":
+                extra = f" ({rec['reason']})"
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

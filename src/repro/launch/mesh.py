@@ -1,0 +1,22 @@
+"""Production meshes. A FUNCTION, not a constant — importing this module
+never touches jax device state (required by the dry-run's
+xla_force_host_platform_device_count dance)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods =
+    512 chips as (pod=2, data=16, model=16); the 'pod' axis carries only
+    data parallelism (gradient all-reduce crosses the inter-pod links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (tests/examples)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,443 @@
+"""Attention: GQA/MHA (+qk_norm, qkv bias, partial RoPE), MLA, KV caches.
+
+Memory discipline: prefill/train attention is computed with a double
+chunked scan (flash-style running-softmax over KV chunks) so the S x S
+score matrix is never materialized — required for the 32k-prefill dry-run
+shapes. Decode attends one query against the cache with fp32 softmax; with
+the cache sequence dimension sharded over 'model', the reductions lower to
+partial-softmax + small all-reduces (flash-decode; see parallel/sharding).
+
+MLA (DeepSeek-V2) caches only the compressed latent (kv_lora + rope dims)
+and uses the absorbed-matmul form at decode, so its 32k cache is ~9x
+smaller than GQA's at kv=16.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .layers import apply_rope, dense_apply, dense_init, head_rmsnorm_init, rmsnorm_apply
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def _fit_chunk(size, want):  # largest divisor of size that is <= want
+    c = min(want, size)
+    while size % c:
+        c -= 1
+    return c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal: bool, q_offset: int, chunk: int, scale: float,
+           unroll: bool = False):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, chunk, scale, unroll)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, chunk, scale, unroll=False):
+    b, sq, hkv, g, d = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    cq, ck = _fit_chunk(sq, chunk), _fit_chunk(sk, chunk)
+    nq, nk = sq // cq, sk // ck
+    qc = jnp.moveaxis(q.reshape(b, nq, cq, hkv, g, d), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, dv), 1, 0)
+
+    def q_step(_, iq_and_q):
+        iq, qi = iq_and_q  # qi: (b, cq, hkv, g, d)
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, ik_and_kv):
+            m, l, acc = carry
+            ik, ki, vi = ik_and_kv
+            s = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", qi, ki, preferred_element_type=jnp.float32
+            ) * scale
+            if causal:
+                kpos = ik * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, cq, hkv, g), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, cq, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, cq, hkv, g, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc), unroll=unroll)
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (b, cq, hkv, g)
+        return None, (out, lse)
+
+    _, (oc, lsec) = jax.lax.scan(q_step, None, (jnp.arange(nq), qc),
+                                 unroll=unroll)
+    out = jnp.moveaxis(oc, 0, 1).reshape(b, sq, hkv, g, dv)
+    lse = jnp.moveaxis(lsec, 0, 1).reshape(b, sq, hkv, g)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset, chunk, scale, unroll=False):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, chunk, scale, unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, chunk, scale, unroll, res, dout):
+    """Flash backward: recompute per-chunk probabilities from (q, k, lse)
+    instead of saving the S x S matrices — O(S) memory, the standard
+    flash-attention gradient."""
+    q, k, v, out, lse = res
+    b, sq, hkv, g, d = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    cq, ck = _fit_chunk(sq, chunk), _fit_chunk(sk, chunk)
+    nq, nk = sq // cq, sk // ck
+    f32 = jnp.float32
+    delta = (dout.astype(f32) * out.astype(f32)).sum(-1)  # (b,sq,hkv,g)
+
+    qc = jnp.moveaxis(q.reshape(b, nq, cq, hkv, g, d), 1, 0)
+    doc = jnp.moveaxis(dout.reshape(b, nq, cq, hkv, g, dv), 1, 0)
+    lc = jnp.moveaxis(lse.reshape(b, nq, cq, hkv, g), 1, 0)
+    dc = jnp.moveaxis(delta.reshape(b, nq, cq, hkv, g), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, hkv, dv), 1, 0)
+
+    def q_step(carry, inp):
+        dk_all, dv_all = carry  # (nk, b, ck, hkv, d/dv) f32
+        iq, qi, doi, lsei, di = inp
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry2, inp2):
+            dqi, dk_a, dv_a = carry2
+            ik, ki, vi = inp2
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, ki,
+                           preferred_element_type=f32) * scale
+            if causal:
+                kpos = ik * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+            p = jnp.exp(s - lsei[..., None])  # (b,cq,hkv,g,ck)
+            dvk = jnp.einsum("bqhgk,bqhgv->bkhv", p, doi.astype(f32))
+            dp = jnp.einsum("bqhgv,bkhv->bqhgk", doi.astype(f32), vi.astype(f32))
+            ds = p * (dp - di[..., None]) * scale
+            dqi = dqi + jnp.einsum("bqhgk,bkhd->bqhgd", ds, ki.astype(f32))
+            dkk = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qi.astype(f32))
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, dk_a[ik] + dkk, ik, 0)
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, dv_a[ik] + dvk, ik, 0)
+            return (dqi, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, cq, hkv, g, d), f32)
+        (dqi, dk_all, dv_all), _ = jax.lax.scan(
+            kv_step, (dq0, dk_all, dv_all), (jnp.arange(nk), kc, vc),
+            unroll=unroll)
+        return (dk_all, dv_all), dqi
+
+    dk0 = jnp.zeros((nk, b, ck, hkv, d), f32)
+    dv0 = jnp.zeros((nk, b, ck, hkv, dv), f32)
+    (dkc, dvc), dqc = jax.lax.scan(q_step, (dk0, dv0),
+                                   (jnp.arange(nq), qc, doc, lc, dc),
+                                   unroll=unroll)
+    dq = jnp.moveaxis(dqc, 0, 1).reshape(b, sq, hkv, g, d).astype(q.dtype)
+    dk = jnp.moveaxis(dkc, 0, 1).reshape(b, sk, hkv, d).astype(k.dtype)
+    dv = jnp.moveaxis(dvc, 0, 1).reshape(b, sk, hkv, dv).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hkv, G, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Chunked attention with a flash custom VJP (never materializes SxS)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    return _flash(q, k, v, bool(causal), int(q_offset), int(chunk), float(scale),
+                  bool(unroll))
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hkv, G, D) single query
+    k_cache: jnp.ndarray,  # (B, Hkv, D, S)  — contraction-friendly layout
+    v_cache: jnp.ndarray,  # (B, Hkv, S, Dv)
+    valid_len: jnp.ndarray,  # () or (B,) number of valid cache slots
+    scale: Optional[float] = None,
+    par=None,
+) -> jnp.ndarray:
+    d = q.shape[-1]
+    s = k_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    # layouts are chosen so both dots are transpose-free: contracting d
+    # (sharded over TP) yields partial logits + one small psum; the cache
+    # is never copied (observed 2.5x cache-size temp with (B,S,H,D))
+    # NOTE: no preferred_element_type here — it would materialize an f32
+    # copy of the whole cache (2x cache bytes); logits are upcast instead.
+    # fp8 caches are read through an explicit convert (fused on TPU).
+    if k_cache.dtype != q.dtype:
+        k_cache = k_cache.astype(q.dtype)
+    logits = jnp.einsum("bhgd,bhds->bhgs", q, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] < jnp.reshape(valid_len, (-1, 1))
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    if v_cache.dtype != q.dtype:
+        v_cache = v_cache.astype(q.dtype)
+    out = jnp.einsum("bhgs,bhsv->bhgv", w.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], d, (h, hd), ("embed", "heads", "head_dim"),
+                                  bias=cfg.qkv_bias)
+    p["wk"], s["wk"] = dense_init(ks[1], d, (hkv, hd), ("embed", "kv_heads", "head_dim"),
+                                  bias=cfg.qkv_bias)
+    p["wv"], s["wv"] = dense_init(ks[2], d, (hkv, hd), ("embed", "kv_heads", "head_dim"),
+                                  bias=cfg.qkv_bias)
+    p["wo"], s["wo"] = dense_init(ks[3], h * hd, d, ("heads_flat", "embed"))
+    if cfg.qk_norm:
+        p["qn"], s["qn"] = head_rmsnorm_init(hd)
+        p["kn"], s["kn"] = head_rmsnorm_init(hd)
+    return p, s
+
+
+def _qk_norm(p, q, k, cfg):
+    if not cfg.qk_norm:
+        return q, k
+    qn = {"scale": p["qn"]["scale"]}
+    kn = {"scale": p["kn"]["scale"]}
+    q = rmsnorm_apply({"scale": qn["scale"]}, q, cfg.norm_eps)
+    k = rmsnorm_apply({"scale": kn["scale"]}, k, cfg.norm_eps)
+    return q, k
+
+
+def attn_apply(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,
+    mode: str = "train",  # train | prefill | decode
+    par=None,
+):
+    b, sq, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    q = dense_apply(p["wq"], x, "btd,dhq->bthq")
+    k = dense_apply(p["wk"], x, "btd,dhq->bthq")
+    v = dense_apply(p["wv"], x, "btd,dhq->bthq")
+    q, k = _qk_norm(p, q, k, cfg)
+    if positions is None:
+        positions = jnp.arange(sq)[None, :]
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        assert sq == 1 and cache is not None
+        idx = cache["pos"]  # scalar int32: slot to write
+        k_t = jnp.moveaxis(k, 1, -1).astype(cache["k"].dtype)  # (b,hkv,d,1)
+        v_t = jnp.moveaxis(v, 1, 2).astype(cache["v"].dtype)  # (b,hkv,1,dv)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, idx, 3)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, idx, 2)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": idx + 1}
+        qh = q[:, 0].reshape(b, hkv, g, hd)
+        out = decode_attention(qh, k_cache, v_cache, valid_len=idx + 1, par=par)
+        out = out.reshape(b, 1, h * hd)
+    else:
+        if mode == "prefill" and cache is not None:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], jnp.moveaxis(k, 1, -1).astype(cache["k"].dtype), 0, 3)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], jnp.moveaxis(v, 1, 2).astype(cache["v"].dtype), 0, 2)
+            new_cache = {"k": k_cache, "v": v_cache, "pos": jnp.int32(sq)}
+        hkv_eff, g_eff = hkv, g
+        if (par is not None and not par.tp_for(hkv) and not par.tp_for(g)
+                and par.tp_for(h) and g > 1):
+            # GQA-TP repair (§Perf iter 1): neither kv-heads (8) nor groups
+            # (6) divide the 16-way TP axis, but FLAT heads (48) do. Repeat
+            # kv to full heads so attention shards head-wise instead of
+            # falling back to sequence-sharded q + replicated kv, which
+            # cost 7.5 TB/device/step of all-gathers on internvl2.
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+            hkv_eff, g_eff = h, 1
+        qg = q.reshape(b, sq, hkv_eff, g_eff, hd)
+        if par is not None:
+            # anchor activation shardings (DESIGN.md §6): prefer kv-head TP,
+            # then q-group TP, else sequence-parallel q with replicated kv
+            dp = par.dp_for(b)
+            if par.tp_for(hkv_eff):
+                qg = par.constrain(qg, dp, None, par.tp_axis, None, None)
+                k = par.constrain(k, dp, None, par.tp_axis, None)
+                v = par.constrain(v, dp, None, par.tp_axis, None)
+            elif par.tp_for(g_eff):
+                qg = par.constrain(qg, dp, None, None, par.tp_axis, None)
+                k = par.constrain(k, dp, None, None, None)
+                v = par.constrain(v, dp, None, None, None)
+            else:
+                qg = par.constrain(qg, dp, par.tp_axis, None, None, None)
+                k = par.constrain(k, dp, None, None, None)
+                v = par.constrain(v, dp, None, None, None)
+        out = flash_attention(qg, k, v, causal=cfg.causal, chunk=cfg.attn_chunk,
+                              unroll=cfg.unroll_layers)
+        out = out.reshape(b, sq, h * hd)
+    out = dense_apply(p["wo"], out, "btf,fd->btd")
+    return out, new_cache
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, hd, max_len), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p["wq"], s["wq"] = dense_init(ks[0], d, (h, qd), ("embed", "heads", "head_dim"))
+    p["wdkv"], s["wdkv"] = dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                                      ("embed", "kv_lora"))
+    p["kv_norm"] = {"scale": jnp.ones((m.kv_lora_rank,), jnp.float32)}
+    s["kv_norm"] = {"scale": ("kv_lora",)}
+    p["wuk"], s["wuk"] = dense_init(ks[2], m.kv_lora_rank, (h, m.qk_nope_head_dim),
+                                    ("kv_lora", "heads", "head_dim"))
+    p["wuv"], s["wuv"] = dense_init(ks[3], m.kv_lora_rank, (h, m.v_head_dim),
+                                    ("kv_lora", "heads", "head_dim"))
+    p["wo"], s["wo"] = dense_init(ks[4], h * m.v_head_dim, d, ("heads_flat", "embed"))
+    return p, s
+
+
+def _mla_qkv(p, x, cfg, positions):
+    m = cfg.mla
+    q = dense_apply(p["wq"], x, "btd,dhq->bthq")
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_pe = apply_rope(q_pe, positions, 1.0, cfg.rope_theta)
+    dkv = dense_apply(p["wdkv"], x, "btd,dl->btl")
+    ckv, k_pe = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank :]
+    ckv = rmsnorm_apply(p["kv_norm"], ckv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, 1.0, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    par=None,
+):
+    m = cfg.mla
+    b, sq, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(sq)[None, :]
+    q_nope, q_pe, ckv, k_pe = _mla_qkv(p, x, cfg, positions)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    new_cache = cache
+    if mode == "decode":
+        assert sq == 1 and cache is not None
+        idx = cache["pos"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], jnp.moveaxis(ckv, 1, -1).astype(cache["ckv"].dtype), idx, 2)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpe"], jnp.moveaxis(k_pe, 1, -1).astype(cache["kpe"].dtype), idx, 2)
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": idx + 1}
+        # absorbed form: score = (q_nope W_uk) . ckv + q_pe . k_pe
+        q_lat = jnp.einsum("bhq,lhq->bhl", q_nope[:, 0], p["wuk"]["w"].astype(x.dtype))
+        ckv_r = ckv_c.astype(x.dtype) if ckv_c.dtype != x.dtype else ckv_c
+        kpe_r = kpe_c.astype(x.dtype) if kpe_c.dtype != x.dtype else kpe_c
+        s_lat = jnp.einsum("bhl,bls->bhs", q_lat, ckv_r).astype(jnp.float32)
+        s_pe = jnp.einsum("bhr,brs->bhs", q_pe[:, 0], kpe_r).astype(jnp.float32)
+        logits = (s_lat + s_pe) * scale
+        pos_ids = jnp.arange(ckv_c.shape[-1])
+        mask = pos_ids[None, :] < jnp.reshape(idx + 1, (-1, 1))
+        logits = jnp.where(mask[:, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhs,bls->bhl", w.astype(ckv_r.dtype),
+                             ckv_r).astype(x.dtype)
+        ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, p["wuv"]["w"].astype(x.dtype))
+        out = ctx.reshape(b, 1, h * m.v_head_dim)
+    else:
+        if mode == "prefill" and cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], jnp.moveaxis(ckv, 1, -1).astype(cache["ckv"].dtype), 0, 2)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["kpe"], jnp.moveaxis(k_pe, 1, -1).astype(cache["kpe"].dtype), 0, 2)
+            new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": jnp.int32(sq)}
+        if par is not None and par.tp_for(h):
+            dp = par.dp_for(b)
+            q_nope = par.constrain(q_nope, dp, None, par.tp_axis, None)
+            q_pe = par.constrain(q_pe, dp, None, par.tp_axis, None)
+        k_nope = jnp.einsum("btl,lhq->bthq", ckv, p["wuk"]["w"].astype(x.dtype))
+        v = jnp.einsum("btl,lhv->bthv", ckv, p["wuv"]["w"].astype(x.dtype))
+        if par is not None and par.tp_for(h):
+            k_nope = par.constrain(k_nope, par.dp_for(b), None, par.tp_axis, None)
+            v = par.constrain(v, par.dp_for(b), None, par.tp_axis, None)
+        k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (b, sq, h, m.qk_rope_head_dim))
+        k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        qg = q[:, :, :, None, :]  # MHA: hkv = h, g = 1
+        out = flash_attention(qg, k, v, causal=cfg.causal, chunk=cfg.attn_chunk,
+                              scale=scale, unroll=cfg.unroll_layers)
+        out = out.reshape(b, sq, h * m.v_head_dim)
+    out = dense_apply(p["wo"], out, "btf,fd->btd")
+    return out, new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, m.kv_lora_rank, max_len), dtype),
+        "kpe": jnp.zeros((batch, m.qk_rope_head_dim, max_len), dtype),
+        "pos": jnp.int32(0),
+    }

@@ -1,0 +1,131 @@
+"""Model building blocks: functional, param-dict based, spec-annotated.
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+param tree with tuples of *logical axis names*; ``repro.parallel.sharding``
+maps logical axes onto mesh axes (FSDP over 'data', TP over 'model').
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Specs = dict
+
+
+def _norm_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(key, in_dim, out_dims, spec, bias=False, scale=None):
+    """W: (in_dim, *out_dims). spec: logical axes, len == 1 + len(out_dims)."""
+    out_dims = tuple(out_dims) if isinstance(out_dims, (tuple, list)) else (out_dims,)
+    fan_out = int(np.prod(out_dims))
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, *out_dims), jnp.float32) * std
+    p, s = {"w": w}, {"w": tuple(spec)}
+    if bias:
+        p["b"] = jnp.zeros(out_dims, jnp.float32)
+        s["b"] = tuple(spec[1:])
+    del fan_out
+    return p, s
+
+
+def dense_apply(p, x, dims: str):
+    """einsum x @ w with ``dims`` like 'btd,dhq->bthq'; adds bias if present."""
+    w = p["w"].astype(x.dtype)
+    y = jnp.einsum(dims, x, w)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim):
+    return {"scale": _norm_init((dim,))}, {"scale": ("embed",)}
+
+
+def rmsnorm_apply(p, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm_init(dim):
+    return {"scale": _norm_init((dim,))}, {"scale": ("head_dim",)}
+
+
+def embed_init(key, vocab, dim):
+    w = jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+    return {"emb": w}, {"emb": ("vocab", "embed")}
+
+
+def embed_apply(p, tokens, dtype):
+    return jnp.take(p["emb"].astype(dtype), tokens, axis=0)
+
+
+def unembed_apply(p_emb, p_head, x, tie: bool):
+    if tie:
+        return jnp.einsum("btd,vd->btv", x, p_emb["emb"].astype(x.dtype))
+    return dense_apply(p_head, x, "btd,dv->btv")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + partial/2D fraction)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return rot, jnp.asarray(inv)
+
+
+def apply_rope(x, positions, fraction: float, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot, inv = rope_freqs(d, fraction, theta)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        pw, sw = dense_init(ks[0], d_model, d_ff, ("embed", "mlp"))
+        pv, sv = dense_init(ks[1], d_model, d_ff, ("embed", "mlp"))
+        po, so = dense_init(ks[2], d_ff, d_model, ("mlp", "embed"))
+        return ({"wi": pw, "wg": pv, "wo": po}, {"wi": sw, "wg": sv, "wo": so})
+    pw, sw = dense_init(ks[0], d_model, d_ff, ("embed", "mlp"))
+    po, so = dense_init(ks[2], d_ff, d_model, ("mlp", "embed"))
+    return ({"wi": pw, "wo": po}, {"wi": sw, "wo": so})
+
+
+def mlp_apply(p, x, act: str):
+    h = dense_apply(p["wi"], x, "btd,df->btf")
+    if act == "swiglu":
+        g = dense_apply(p["wg"], x, "btd,df->btf")
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return dense_apply(p["wo"], h, "btf,fd->btd")

@@ -1,0 +1,123 @@
+"""LM wrapper: init / train loss / prefill / decode for every architecture.
+
+Batch dicts by family:
+  LM (dense/moe/ssm/hybrid): {"tokens": (B, S) int32, "targets": (B, S)}
+  vlm:   + {"patches": (B, frontend_len, frontend_dim)}  (stub embeddings)
+  audio: {"frames": (B, S, frontend_dim), "targets": (B, S)}  (encoder)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_apply, dense_init, embed_apply, embed_init, rmsnorm_apply, rmsnorm_init
+from .transformer import stack_apply, stack_cache_init, stack_init
+
+Params = dict
+
+
+def model_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    if cfg.family == "audio":
+        p["frontend"], s["frontend"] = dense_init(
+            ks[0], cfg.frontend_dim, cfg.d_model, ("frontend", "embed"))
+    else:
+        p["embed"], s["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model)
+        if cfg.family == "vlm":
+            p["patch_proj"], s["patch_proj"] = dense_init(
+                ks[1], cfg.frontend_dim, cfg.d_model, ("frontend", "embed"))
+    p["stack"], s["stack"] = stack_init(ks[2], cfg)
+    p["final_norm"], s["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = dense_init(
+            ks[3], cfg.d_model, cfg.vocab_size, ("embed", "vocab"))
+    return p, s
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _embed_inputs(p, batch, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    if cfg.family == "audio":
+        return dense_apply(p["frontend"], batch["frames"].astype(dt), "btf,fd->btd")
+    x = embed_apply(p["embed"], batch["tokens"], dt)
+    if cfg.family == "vlm" and "patches" in batch:
+        px = dense_apply(p["patch_proj"], batch["patches"].astype(dt), "btf,fd->btd")
+        x = jnp.concatenate([px, x], axis=1)  # patches prefix the text
+    return x
+
+
+def _logits(p, x, cfg: ModelConfig):
+    x = rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x, p["embed"]["emb"].astype(x.dtype))
+    return dense_apply(p["lm_head"], x, "btd,dv->btv")
+
+
+def _cast_params(p, cfg: ModelConfig):
+    """Cast the whole tree to compute dtype ONCE, before the layer scan.
+
+    With fp32 masters and per-layer casts the partitioner all-gathers fp32
+    then converts (2x FSDP gather traffic); casting first makes every
+    gather bf16 (§Perf iter 3)."""
+    dt = _dtype(cfg)
+
+    def leaf(a):
+        return a.astype(dt) if a.dtype == jnp.float32 else a
+
+    return jax.tree.map(leaf, p)
+
+
+def forward(p, batch, cfg: ModelConfig, *, par=None, remat: str = "none"):
+    """Full-sequence forward -> logits (B, S_out, V)."""
+    p = _cast_params(p, cfg)
+    x = _embed_inputs(p, batch, cfg)
+    x, _ = stack_apply(p["stack"], x, cfg, mode="train", par=par, remat=remat)
+    if cfg.family == "vlm":
+        x = x[:, cfg.frontend_len :]  # loss only over text positions
+    return _logits(p, x, cfg)
+
+
+def loss_fn(p, batch, cfg: ModelConfig, *, par=None, remat: str = "none"):
+    """Mean next-token (LM) or per-frame (encoder) cross entropy, fp32."""
+    logits = forward(p, batch, cfg, par=par, remat=remat).astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    assert not cfg.is_encoder_only, "encoder-only archs have no decode step"
+    dt = jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else _dtype(cfg)
+    return stack_cache_init(cfg, batch, max_len, dt)
+
+
+def prefill(p, batch, cache, cfg: ModelConfig, *, par=None):
+    """Run the prompt through the stack, filling the cache.
+
+    Returns (last-position logits (B, V), cache)."""
+    p = _cast_params(p, cfg)
+    x = _embed_inputs(p, batch, cfg)
+    x, cache = stack_apply(p["stack"], x, cfg, mode="prefill", caches=cache, par=par)
+    return _logits(p, x[:, -1:], cfg)[:, 0], cache
+
+
+def decode_step(p, tokens, cache, cfg: ModelConfig, *, positions=None, par=None):
+    """One decode step. tokens: (B, 1) -> (logits (B, V), cache)."""
+    dt = _dtype(cfg)
+    p = _cast_params(p, cfg)
+    x = embed_apply(p["embed"], tokens, dt)
+    x, cache = stack_apply(p["stack"], x, cfg, mode="decode", caches=cache,
+                           positions=positions, par=par)
+    return _logits(p, x, cfg)[:, 0], cache

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts with LOMS routing — the paper's primary integration.
+
+Router: top-k over expert logits computed with the *blockwise LOMS merge*
+(repro.core.topk — local rank-sorts then truncated UP-k/DN-k List Offset
+merges). This is pure-jnp oblivious networking, so GSPMD shards it freely;
+the Pallas realization of the same network lives in repro.kernels.topk and
+is used in the serving sampler.
+
+Dispatch (expert parallelism): tokens are sequence-sharded over the
+'model' axis for the MoE block; each shard buckets its local tokens into
+capacity-bounded per-expert buffers, one all_to_all moves buckets to the
+expert-owning shards, expert FFNs run as dense batched einsums, and a
+second all_to_all returns outputs — deterministic shapes end to end.
+
+``dispatch='sorted'`` demonstrates the paper's oblivious-routing angle:
+bucket positions come from an actual List-Offset sort network over the
+(expert_id, token) pairs instead of the cumsum — bit-identical routing,
+data-oblivious schedule (usable for the paper's safety/security argument).
+Used for small token counts (tests/examples); 'scatter' (cumsum) is the
+production path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import api as loms_api
+from .layers import dense_init
+
+Params = dict
+
+
+def moe_init(key, cfg: ModelConfig):
+    mo = cfg.moe
+    d, e, f = cfg.d_model, mo.n_experts, mo.d_expert
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], d, e, ("embed", "expert"))
+    std = 1.0 / np.sqrt(d)
+    p["wi"] = {"w": jax.random.normal(ks[1], (e, d, f), jnp.float32) * std}
+    p["wg"] = {"w": jax.random.normal(ks[2], (e, d, f), jnp.float32) * std}
+    p["wo"] = {"w": jax.random.normal(ks[3], (e, f, d), jnp.float32) * (1.0 / np.sqrt(f))}
+    s["wi"] = {"w": ("expert", "embed", "mlp")}
+    s["wg"] = {"w": ("expert", "embed", "mlp")}
+    s["wo"] = {"w": ("expert", "mlp", "embed")}
+    if mo.n_shared_experts:
+        fs = f * mo.n_shared_experts
+        p["shared_wi"], s["shared_wi"] = dense_init(ks[4], d, fs, ("embed", "mlp"))
+        p["shared_wg"], s["shared_wg"] = dense_init(ks[5], d, fs, ("embed", "mlp"))
+        p["shared_wo"], s["shared_wo"] = dense_init(
+            jax.random.fold_in(ks[4], 7), fs, d, ("mlp", "embed"))
+    return p, s
+
+
+def router_topk(logits: jnp.ndarray, k: int, block: int):
+    """LOMS blockwise top-k + renormalized softmax gates.
+
+    logits: (T, E) -> gates (T, k) float, expert ids (T, k) int32."""
+    e = logits.shape[-1]
+    blk = min(block, e)
+    while e % blk:
+        blk -= 1
+    vals, idx = loms_api.topk(logits.astype(jnp.float32), k, block=blk)
+    gates = jax.nn.softmax(vals, axis=-1)
+    return gates, idx
+
+
+def _positions_cumsum(flat_e: jnp.ndarray, n_experts: int):
+    """GShard position-in-expert via one-hot cumsum (production path)."""
+    oh = (flat_e[:, None] == jnp.arange(n_experts)[None, :]).astype(jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - 1
+    return (pos * oh).sum(-1)
+
+
+def _positions_sorted(flat_e: jnp.ndarray, n_experts: int):
+    """Oblivious position-in-expert via a List Offset sort network.
+
+    Sort composite keys (expert_id * n + arrival_index) — unique, so the
+    (unstable) LOMS network yields a STABLE expert grouping, bit-identical
+    to the cumsum path; position-in-expert = rank - start_of_expert.
+    Data-oblivious end to end (the paper's security/safety use case)."""
+    n = flat_e.shape[0]
+    keys = flat_e.astype(jnp.int32) * n + jnp.arange(n, dtype=jnp.int32)
+    sorted_keys, perm = loms_api.sort(keys, kind="loms",
+                                      payload=jnp.arange(n, dtype=jnp.int32))
+    sorted_e = sorted_keys // n
+    counts = (flat_e[:, None] == jnp.arange(n_experts)[None, :]).sum(0)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n) - starts[sorted_e]
+    # scatter back to original slot order
+    pos = jnp.zeros((n,), jnp.int32).at[perm].set(pos_sorted.astype(jnp.int32))
+    return pos
+
+
+def _expert_ffn(buf, p, act: str = "swiglu"):
+    """buf: (E_local, C, D); expert weights stacked on the leading axis."""
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"]["w"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"]["w"].astype(buf.dtype))
+    h = jax.nn.silu(h) * g
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"]["w"].astype(buf.dtype))
+
+
+def moe_ffn_local(
+    p: Params,
+    x: jnp.ndarray,  # (T, D) local tokens
+    cfg: ModelConfig,
+    *,
+    axis_name: Optional[str] = None,
+    ep_size: int = 1,
+    ep_psum: bool = False,
+):
+    """Routed expert FFN on local tokens. Two expert-parallel modes:
+    all_to_all (tokens sequence-sharded; training/prefill) and ep_psum
+    (tokens replicated over the EP axis, each rank computes only its own
+    experts' contribution, one psum combines — used at decode where a
+    single token cannot be sequence-sharded)."""
+    mo = cfg.moe
+    t, d = x.shape
+    e, k = mo.n_experts, mo.top_k
+    logits = jnp.einsum("td,de->te", x, p["router"]["w"].astype(x.dtype))
+    gates, eids = router_topk(logits, k, mo.router_block)
+
+    if ep_psum and axis_name is not None and ep_size > 1:
+        e_loc = e // ep_size
+        rank = jax.lax.axis_index(axis_name)
+        local = (eids // e_loc) == rank
+        gates = gates * local  # zero out non-local expert choices
+        eids = jnp.where(local, eids - rank * e_loc, 0)
+        e = e_loc  # bucket over local experts only; weights already local
+
+    flat_e = eids.reshape(-1)
+    tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    cap = int(np.ceil(t * k / e * mo.capacity_factor))
+    cap = max(4, cap + (-cap) % 4)
+    if mo.dispatch == "sorted" and t * k <= 4096:
+        pos = _positions_sorted(flat_e, e)
+    else:
+        pos = _positions_cumsum(flat_e, e)
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow -> spill row
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(x[tok_of])
+    buf = buf[:-1].reshape(e, cap, d)
+
+    if axis_name is not None and ep_size > 1 and not ep_psum:
+        # (E, C, D) -> (E/P, P*C, D): buckets travel to expert owners
+        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=1,
+                                 tiled=True)
+        out = _expert_ffn(buf, p)
+        out = jax.lax.all_to_all(out, axis_name, split_axis=1, concat_axis=0,
+                                 tiled=True)
+    else:
+        out = _expert_ffn(buf, p)
+
+    flat_out = out.reshape(e * cap, d)
+    y_choice = flat_out[jnp.minimum(dest, e * cap - 1)]
+    w = (gates.reshape(-1) * keep).astype(x.dtype)
+    y = (y_choice * w[:, None]).reshape(t, k, d).sum(axis=1)
+
+    if ep_psum and axis_name is not None and ep_size > 1:
+        y = jax.lax.psum(y, axis_name)
+
+    if mo.n_shared_experts:
+        h = jnp.einsum("td,df->tf", x, p["shared_wi"]["w"].astype(x.dtype))
+        g = jnp.einsum("td,df->tf", x, p["shared_wg"]["w"].astype(x.dtype))
+        y = y + jnp.einsum(
+            "tf,fd->td", jax.nn.silu(h) * g, p["shared_wo"]["w"].astype(x.dtype))
+    return y
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, par=None):
+    """x: (B, S, D). With a parallel context, run expert-parallel under
+    shard_map (tokens sequence-sharded over the TP axis for this block)."""
+    b, s, d = x.shape
+    if par is None or not par.ep_enabled:
+        y = moe_ffn_local(p, x.reshape(b * s, d), cfg)
+        return y.reshape(b, s, d)
+
+    from jax.sharding import PartitionSpec as P
+
+    mesh = par.mesh
+    dp, tp = par.dp_axes, par.tp_axis
+    ep_size = mesh.shape[tp]
+
+    seq_shardable = s % ep_size == 0 and s >= ep_size
+
+    def body(xb, pb):
+        bb, sb, _ = xb.shape
+        y = moe_ffn_local(pb, xb.reshape(bb * sb, d), cfg,
+                          axis_name=tp, ep_size=ep_size,
+                          ep_psum=not seq_shardable)
+        return y.reshape(bb, sb, d)
+
+    pspecs = jax.tree.map(lambda _: P(), p)
+    for name in ("wi", "wg", "wo"):
+        pspecs[name] = {"w": P(tp)}  # experts sharded over the TP axis
+    x_spec = P(dp, tp, None) if seq_shardable else P(dp, None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, pspecs),
+        out_specs=x_spec,
+        check_vma=False,
+    )(x, p)

@@ -1,0 +1,198 @@
+"""Mamba2 (State Space Duality) mixer — chunked dual form + recurrent decode.
+
+Faithful to the SSD formulation (arXiv:2405.21060, n_groups=1):
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t + D x_t
+Training/prefill uses the chunked algorithm: intra-chunk attention-like
+matmuls (MXU-heavy) + an inter-chunk state scan of length L/chunk. Decode
+keeps (conv_state, ssm_state) and costs O(1) per token — this is why
+mamba2/zamba2 are the long_500k architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rmsnorm_apply
+
+Params = dict
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return d_in, nh, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p, sp = {}, {}
+    in_dim = 2 * d_in + 2 * s.d_state + nh  # z, x, B, C, dt
+    p["in_proj"], sp["in_proj"] = dense_init(ks[0], d, in_dim, ("embed", "mlp"))
+    p["conv_w"] = {"w": jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.2}
+    sp["conv_w"] = {"w": (None, "mlp")}
+    p["conv_b"] = {"b": jnp.zeros((conv_dim,), jnp.float32)}
+    sp["conv_b"] = {"b": ("mlp",)}
+    p["A_log"] = {"a": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32))}
+    sp["A_log"] = {"a": ("heads",)}
+    p["D"] = {"d": jnp.ones((nh,), jnp.float32)}
+    sp["D"] = {"d": ("heads",)}
+    p["dt_bias"] = {"b": jnp.zeros((nh,), jnp.float32)}
+    sp["dt_bias"] = {"b": ("heads",)}
+    p["norm"] = {"scale": jnp.ones((d_in,), jnp.float32)}
+    sp["norm"] = {"scale": ("mlp",)}
+    p["out_proj"], sp["out_proj"] = dense_init(ks[2], d_in, d, ("mlp", "embed"))
+    return p, sp
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along S. u: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, [(0, 0), (k - 1, 0), (0, 0)])
+    acc = jnp.zeros_like(u, dtype=jnp.float32)
+    s = u.shape[1]
+    for i in range(k):
+        acc = acc + pad[:, i : i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(acc + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _split_zxbcdt(zxbcdt, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, nh, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * s.d_state]
+    dt = zxbcdt[..., 2 * d_in + 2 * s.d_state :]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a_coef, bmat, cmat, chunk: int, unroll: bool = False):
+    """SSD forward. x: (B,L,H,P); dt: (B,L,H); a_coef: (H,) negative;
+    bmat/cmat: (B,L,N). Returns y: (B,L,H,P), final state (B,H,P,N)."""
+    b, l, h, p_ = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0
+    nc = l // q
+    xc = jnp.moveaxis(x.reshape(b, nc, q, h, p_), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h).astype(jnp.float32), 1, 0)
+    bc = jnp.moveaxis(bmat.reshape(b, nc, q, n), 1, 0)
+    cc = jnp.moveaxis(cmat.reshape(b, nc, q, n), 1, 0)
+    i_idx = jnp.arange(q)
+    tri = i_idx[:, None] >= i_idx[None, :]
+
+    def step(hstate, inp):
+        # all per-chunk work lives inside the scan: O(q^2 h) transient only
+        x_c, dt_c, b_c, c_c = inp  # (b,q,h,p) (b,q,h) (b,q,n) (b,q,n)
+        da = dt_c * a_coef[None, None, :]  # (b,q,h)
+        cum = jnp.cumsum(da, axis=1)
+        # mask the exponent BEFORE exp: the upper triangle has positive
+        # (cum_i - cum_j) that overflows to inf, and inf * 0 = NaN
+        expo = cum[:, :, None, :] - cum[:, None, :, :]
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], expo, -jnp.inf))
+        scores = jnp.einsum("bin,bjn->bij", c_c.astype(jnp.float32),
+                            b_c.astype(jnp.float32))
+        w = scores[..., None] * decay * dt_c[:, None, :, :]  # (b,i,j,h)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, x_c.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", c_c.astype(jnp.float32), hstate)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        # update carried state
+        end_decay = jnp.exp(cum[:, -1:, :] - cum)  # (b,q,h)
+        sc = jnp.einsum("bjn,bjh,bjhp->bhpn", b_c.astype(jnp.float32),
+                        end_decay * dt_c, x_c.astype(jnp.float32))
+        hstate = hstate * jnp.exp(cum[:, -1, :])[:, :, None, None] + sc
+        return hstate, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((b, h, p_, n), jnp.float32)
+    if unroll:  # analysis variants only (cost_analysis counts scans once)
+        ys = []
+        hfin = h0
+        for i in range(nc):
+            hfin, yi = step(hfin, jax.tree.map(lambda a, i=i: a[i], (xc, dtc, bc, cc)))
+            ys.append(yi)
+        yc = jnp.stack(ys)
+    else:
+        hfin, yc = jax.lax.scan(step, h0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, l, h, p_)
+    return y, hfin
+
+
+def ssm_apply(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    par=None,
+):
+    s = cfg.ssm
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    b, l, _ = x.shape
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"]["w"].astype(x.dtype))
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+    a_coef = -jnp.exp(p["A_log"]["a"])  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]["b"][None, None, :])
+
+    new_cache = cache
+    if mode == "decode":
+        assert l == 1 and cache is not None
+        conv_state = cache["conv"]  # (B, K-1, conv_dim)
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, K, conv)
+        new_conv = window[:, 1:, :]
+        w = p["conv_w"]["w"].astype(jnp.float32)
+        conv_out = (window.astype(jnp.float32) * w[None, :, :]).sum(axis=1)
+        xbc_t = jax.nn.silu(conv_out + p["conv_b"]["b"][None, :]).astype(x.dtype)
+        xt = xbc_t[:, :d_in].reshape(b, nh, s.head_dim)
+        bt = xbc_t[:, d_in : d_in + s.d_state]
+        ct = xbc_t[:, d_in + s.d_state :]
+        hstate = cache["ssm"]  # (B, H, P, N) fp32
+        dt1 = dt[:, 0, :]  # (B, H)
+        dec = jnp.exp(dt1 * a_coef[None, :])  # (B, H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt1, bt.astype(jnp.float32),
+                         xt.astype(jnp.float32))
+        hstate = hstate * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), hstate)
+        y = y + p["D"]["d"][None, :, None] * xt.astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": hstate}
+    else:
+        xbc = _causal_conv(xbc, p["conv_w"]["w"], p["conv_b"]["b"])
+        xs = xbc[..., :d_in].reshape(b, l, nh, s.head_dim)
+        bmat = xbc[..., d_in : d_in + s.d_state]
+        cmat = xbc[..., d_in + s.d_state :]
+        if par is not None and par.tp_for(nh):
+            xs = par.constrain(xs, par.dp_for(b), None, par.tp_axis, None)
+        y, hfin = ssd_chunked(xs, dt, a_coef, bmat, cmat, s.chunk,
+                              unroll=cfg.unroll_layers)
+        y = y + p["D"]["d"][None, None, :, None].astype(y.dtype) * xs
+        y = y.reshape(b, l, d_in)
+        if mode == "prefill" and cache is not None:
+            k = s.d_conv
+            new_cache = {"conv": xbc_raw_tail(zxbcdt, cfg, k), "ssm": hfin}
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply({"scale": p["norm"]["scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"]["w"].astype(x.dtype)), new_cache
+
+
+def xbc_raw_tail(zxbcdt, cfg, k):
+    """Last k-1 pre-conv xBC inputs (prefill -> decode handoff)."""
+    _, xbc, _ = _split_zxbcdt(zxbcdt, cfg)
+    return xbc[:, -(k - 1) :, :]
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,302 @@
+"""Block assembly and scan-over-layers stacks for all 10 architectures.
+
+Every stack is a ``jax.lax.scan`` over stacked layer params so the HLO (and
+compile time at 512 devices) is O(1) in depth. Heterogeneous pieces —
+DeepSeek's first dense layer, zamba2's shared attention block — sit outside
+the scan or as closures over shared weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import attn_apply, attn_cache_init, attn_init, mla_apply, mla_cache_init, mla_init
+from .layers import mlp_apply, mlp_init, rmsnorm_apply, rmsnorm_init
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_cache_init, ssm_init
+
+Params = dict
+
+
+def _stack_params(per_layer):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, *, ffn: str):
+    """ffn: 'dense' | 'moe' | 'none' (ssm block)."""
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    if cfg.family == "ssm" or ffn == "ssm":
+        p["norm"], s["norm"] = rmsnorm_init(cfg.d_model)
+        p["mixer"], s["mixer"] = ssm_init(ks[0], cfg)
+        return p, s
+    p["ln1"], s["ln1"] = rmsnorm_init(cfg.d_model)
+    if cfg.mla is not None:
+        p["attn"], s["attn"] = mla_init(ks[0], cfg)
+    else:
+        p["attn"], s["attn"] = attn_init(ks[0], cfg)
+    p["ln2"], s["ln2"] = rmsnorm_init(cfg.d_model)
+    if ffn == "moe":
+        p["ffn"], s["ffn"] = moe_init(ks[1], cfg)
+    else:
+        p["ffn"], s["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p, s
+
+
+def block_apply(p, x, cfg: ModelConfig, *, ffn: str, mode: str, cache=None,
+                positions=None, par=None):
+    if par is not None and x.ndim == 3:
+        x = par.constrain(x, par.dp_for(x.shape[0]), None, None)
+    if cfg.family == "ssm" or ffn == "ssm":
+        h = rmsnorm_apply(p["norm"], x, cfg.norm_eps)
+        y, cache = ssm_apply(p["mixer"], h, cfg, cache=cache, mode=mode, par=par)
+        return x + y, cache
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cache = mla_apply(p["attn"], h, cfg, cache=cache, mode=mode,
+                             positions=positions, par=par)
+    else:
+        a, cache = attn_apply(p["attn"], h, cfg, cache=cache, mode=mode,
+                              positions=positions, par=par)
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+    if ffn == "moe":
+        y = moe_apply(p["ffn"], h, cfg, par=par)
+    else:
+        y = mlp_apply(p["ffn"], h, cfg.mlp_act)
+    return x + y, cache
+
+
+def block_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype, *, ffn: str):
+    if cfg.family == "ssm" or ffn == "ssm":
+        return ssm_cache_init(cfg, batch, dtype)
+    if cfg.mla is not None:
+        return mla_cache_init(cfg, batch, max_len, dtype)
+    return attn_cache_init(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def _layer_ffn_kind(cfg: ModelConfig, layer: int) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.moe is not None and layer >= cfg.moe.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def stack_init(key, cfg: ModelConfig):
+    """Returns (params, specs). Layout:
+      head: list of unscanned leading blocks (e.g. DeepSeek dense layer 0)
+      body: scanned stacked params ('layers' leading axis)
+      shared: zamba2 shared attention block (hybrid only)
+    """
+    p, s = {}, {}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        keys = jax.random.split(key, cfg.n_layers + 1)
+        per = [block_init(keys[i], cfg, ffn="ssm") for i in range(cfg.n_layers)]
+        bp, bs = zip(*per)
+        p["body"], s["body"] = _stack_params(bp), bs[0]
+        p["shared"], s["shared"] = block_init(keys[-1], cfg, ffn="dense")
+        del n_groups
+        return p, s
+    n_head = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    keys = jax.random.split(key, cfg.n_layers)
+    head = [block_init(keys[i], cfg, ffn="dense") for i in range(n_head)]
+    body = [
+        block_init(keys[i], cfg, ffn=_layer_ffn_kind(cfg, i))
+        for i in range(n_head, cfg.n_layers)
+    ]
+    if head:
+        hp, hs = zip(*head)
+        p["head"], s["head"] = list(hp), list(hs)
+    bp, bs = zip(*body)
+    p["body"], s["body"] = _stack_params(bp), bs[0]
+    return p, s
+
+
+def stack_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+    positions=None,
+    par=None,
+    remat: str = "none",  # none | full | dots
+):
+    """Run the whole stack. ``caches`` mirrors the param layout:
+    {'head': [cache...], 'body': stacked cache, 'shared': stacked cache}."""
+
+    def wrap(fn):
+        if remat == "full":
+            return jax.checkpoint(fn)
+        if remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return fn
+
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        body = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+            {k: v for k, v in p["body"].items()})
+        shared = p["shared"]
+
+        if caches is not None:
+            def group_fn(x, inp):
+                bp, bc, sc = inp  # group params, group caches, shared cache
+
+                def layer_fn(x, inp2):
+                    lp, lc = inp2
+                    x, lc = wrap(functools.partial(
+                        block_apply, cfg=cfg, ffn="ssm", mode=mode,
+                        positions=positions, par=par))(lp, x, cache=lc)
+                    return x, lc
+
+                if cfg.unroll_layers:
+                    lcs = []
+                    for j in range(cfg.attn_every):
+                        x, lcj = layer_fn(x, (jax.tree.map(lambda a, j=j: a[j], bp),
+                                              jax.tree.map(lambda a, j=j: a[j], bc)))
+                        lcs.append(lcj)
+                    bc = jax.tree.map(lambda *xs: jnp.stack(xs), *lcs)
+                else:
+                    x, bc = jax.lax.scan(layer_fn, x, (bp, bc))
+                x, sc = wrap(functools.partial(
+                    block_apply, cfg=cfg, ffn="dense", mode=mode,
+                    positions=positions, par=par))(shared, x, cache=sc)
+                return x, (bc, sc)
+
+            bcaches = jax.tree.map(
+                lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+                caches["body"])
+            if cfg.unroll_layers:
+                bcs, scs = [], []
+                for i in range(n_groups):
+                    gi = lambda a: a[i]
+                    x, (bci, sci) = group_fn(x, (
+                        jax.tree.map(gi, body), jax.tree.map(gi, bcaches),
+                        jax.tree.map(gi, caches["shared"])))
+                    bcs.append(bci); scs.append(sci)
+                bc = jax.tree.map(lambda *xs: jnp.stack(xs), *bcs)
+                sc = jax.tree.map(lambda *xs: jnp.stack(xs), *scs)
+            else:
+                x, (bc, sc) = jax.lax.scan(group_fn, x,
+                                           (body, bcaches, caches["shared"]))
+            bc = jax.tree.map(
+                lambda a: a.reshape((n_groups * cfg.attn_every,) + a.shape[2:]), bc)
+            return x, {"body": bc, "shared": sc}
+
+        def group_fn_nc(x, bp):
+            def layer_fn(x, lp):
+                x, _ = wrap(functools.partial(
+                    block_apply, cfg=cfg, ffn="ssm", mode=mode,
+                    positions=positions, par=par))(lp, x, cache=None)
+                return x, None
+
+            if cfg.unroll_layers:
+                for j in range(cfg.attn_every):
+                    x, _ = layer_fn(x, jax.tree.map(lambda a, j=j: a[j], bp))
+            else:
+                x, _ = jax.lax.scan(layer_fn, x, bp)
+            x, _ = wrap(functools.partial(
+                block_apply, cfg=cfg, ffn="dense", mode=mode,
+                positions=positions, par=par))(shared, x, cache=None)
+            return x, None
+
+        if cfg.unroll_layers:
+            for i in range(n_groups):
+                x, _ = group_fn_nc(x, jax.tree.map(lambda a, i=i: a[i], body))
+            return x, None
+        x, _ = jax.lax.scan(group_fn_nc, x, body)
+        return x, None
+
+    # homogeneous (dense / moe / ssm / encoder) stacks
+    n_head = len(p.get("head", []))
+    new_head_caches = []
+    for i in range(n_head):
+        c = caches["head"][i] if caches else None
+        x, c = wrap(functools.partial(
+            block_apply, cfg=cfg, ffn="dense", mode=mode,
+            positions=positions, par=par))(p["head"][i], x, cache=c)
+        new_head_caches.append(c)
+
+    ffn_kind = _layer_ffn_kind(cfg, n_head)
+
+    n_body = jax.tree.leaves(p["body"])[0].shape[0]
+
+    if caches is not None:
+        def layer_fn(x, inp):
+            lp, lc = inp
+            x, lc = wrap(functools.partial(
+                block_apply, cfg=cfg, ffn=ffn_kind, mode=mode,
+                positions=positions, par=par))(lp, x, cache=lc)
+            return x, lc
+
+        if cfg.unroll_layers:
+            ncs = []
+            for i in range(n_body):
+                lp = jax.tree.map(lambda a, i=i: a[i], p["body"])
+                lc = jax.tree.map(lambda a, i=i: a[i], caches["body"])
+                x, lc = layer_fn(x, (lp, lc))
+                ncs.append(lc)
+            bc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        else:
+            x, bc = jax.lax.scan(layer_fn, x, (p["body"], caches["body"]))
+        out_caches = {"body": bc}
+        if n_head:
+            out_caches["head"] = new_head_caches
+        return x, out_caches
+
+    def layer_fn_nc(x, lp):
+        x, _ = wrap(functools.partial(
+            block_apply, cfg=cfg, ffn=ffn_kind, mode=mode,
+            positions=positions, par=par))(lp, x, cache=None)
+        return x, None
+
+    if cfg.unroll_layers:
+        for i in range(n_body):
+            x, _ = layer_fn_nc(x, jax.tree.map(lambda a, i=i: a[i], p["body"]))
+        return x, None
+    x, _ = jax.lax.scan(layer_fn_nc, x, p["body"])
+    return x, None
+
+
+def stack_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        body_one = block_cache_init(cfg, batch, max_len, dtype, ffn="ssm")
+        body = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), body_one)
+        sh_one = block_cache_init(cfg, batch, max_len, dtype, ffn="dense")
+        shared = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), sh_one)
+        return {"body": body, "shared": shared}
+    n_head = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    out = {}
+    if n_head:
+        out["head"] = [
+            block_cache_init(cfg, batch, max_len, dtype, ffn="dense")
+            for _ in range(n_head)
+        ]
+    ffn_kind = _layer_ffn_kind(cfg, n_head)
+    body_one = block_cache_init(cfg, batch, max_len, dtype, ffn=ffn_kind)
+    n_body = cfg.n_layers - n_head
+    out["body"] = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_body,) + a.shape), body_one)
+    return out

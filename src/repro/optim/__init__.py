@@ -1,0 +1,1 @@
+from .adamw import OptConfig, opt_init, opt_update, schedule, global_norm  # noqa: F401

@@ -1,0 +1,73 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping (pure JAX).
+
+Optimizer state mirrors the parameter tree, so it inherits the parameter
+shardings (ZeRO: moments are partitioned exactly like their weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(step, oc: OptConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps) /
+                 jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * cos
+
+
+def opt_init(params):
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def opt_update(grads, state, params, oc: OptConfig):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, oc)
+    b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step_ = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    flat_p = jax.tree.leaves(params)
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [n[0] for n in new])
+    new_m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    new_v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, metrics

@@ -1,0 +1,1 @@
+from .sharding import Parallelism, batch_pspecs, build_param_pspecs, cache_pspecs, make_parallelism, to_named  # noqa: F401

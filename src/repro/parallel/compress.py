@@ -1,0 +1,76 @@
+"""Error-feedback int8 gradient compression for cross-replica reduction.
+
+At 1000+ nodes the DP gradient reduce-scatter is the dominant inter-pod
+collective. This module provides a drop-in compressor: per-block int8
+quantization with an error-feedback residual so compression noise is
+re-injected next step (convergence-safe in practice; see DeepSeed/1-bit
+Adam literature).
+
+Usage (manual-DP mode): q, scale = compress(g + err); g_hat = decompress(
+psum(q), ...); err = g - g_hat. Under pure GSPMD the reduction is implicit,
+so the framework applies compression only when ``train.grad_compress`` is
+on AND the step uses the shard_map DP path; the dry-run baseline keeps it
+off (documented in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // BLOCK) * BLOCK
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g (any shape) -> (int8 codes, per-block fp32 scales)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str, err: jnp.ndarray):
+    """Error-feedback compressed all-reduce over ``axis_name`` (inside
+    shard_map). Returns (reduced gradient, new error residual)."""
+    g_in = g + err
+    q, s = compress(g_in)
+    # sum int32 codes and scales: unbiased when scales are close; the error
+    # feedback absorbs the remaining quantization noise
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s_sum = jax.lax.psum(s, axis_name)
+    n_dev = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    g_hat = decompress((q_sum.astype(jnp.float32) / n_dev).astype(jnp.float32),
+                       s_sum / n_dev, g.shape)
+    # local view of what was actually transmitted for this shard
+    g_local_hat = decompress(q.astype(jnp.float32), s, g.shape)
+    new_err = g_in - g_local_hat
+    return g_hat * n_dev, new_err
+
+
+def compress_tree(grads, errs, axis_name: str):
+    """Apply compressed_psum over a gradient pytree."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errs)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        gh, ne = compressed_psum(g, axis_name, e)
+        out_g.append(gh)
+        out_e.append(ne)
+    return jax.tree.unflatten(tdef, out_g), jax.tree.unflatten(tdef, out_e)

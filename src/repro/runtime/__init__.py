@@ -1,0 +1,1 @@
+from .train_loop import TrainConfig, make_train_step, train, train_with_retries  # noqa: F401

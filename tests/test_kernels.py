@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import median_k, merge2, merge_k, topk
+from repro.kernels.bitonic import bitonic_merge2_pallas
+from repro.kernels.loms_merge import loms_merge2_pallas
+from repro.kernels.kway import kway_merge_pallas
+from repro.kernels.topk import router_topk_pallas, vocab_topk_pallas
+from repro.kernels import ref
+from repro.core.loms import loms_kway
+
+RNG = np.random.default_rng(42)
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32, jnp.uint8]
+
+
+def _rand(shape, dtype, lo=0, hi=120):
+    # small integer support so every dtype (incl. uint8/bf16) is exact and
+    # tie-heavy (stresses stability)
+    return jnp.asarray(RNG.integers(lo, hi, shape)).astype(dtype)
+
+
+def _sorted(shape, dtype):
+    return jnp.sort(_rand(shape, dtype), axis=-1)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n,cols", [(8, 8, 2), (16, 16, 4), (32, 32, 8),
+                                      (64, 64, 2), (16, 8, 4), (4, 12, 2)])
+def test_loms_merge2_kernel_sweep(dtype, m, n, cols):
+    a, b = _sorted((8, m), dtype), _sorted((8, n), dtype)
+    got = loms_merge2_pallas(a, b, n_cols=cols, block_batch=4, interpret=True)
+    want = ref.merge2_ref(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(got.astype(jnp.float32)), np.asarray(want.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("use_mxu", [True, False])
+def test_loms_merge2_mxu_vs_fabric_paths(use_mxu):
+    a, b = _sorted((8, 32), jnp.float32), _sorted((8, 32), jnp.float32)
+    got = loms_merge2_pallas(a, b, n_cols=4, use_mxu=use_mxu, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.merge2_ref(a, b)))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m", [4, 8, 32, 64])
+def test_bitonic_kernel_sweep(dtype, m):
+    a, b = _sorted((8, m), dtype), _sorted((8, m), dtype)
+    got = bitonic_merge2_pallas(a, b, block_batch=4, interpret=True)
+    want = ref.merge2_ref(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(got.astype(jnp.float32)), np.asarray(want.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("lens", [(7, 7, 7), (3, 3, 3), (5, 5, 5), (4, 6, 2),
+                                  (3, 3, 3, 3)])
+def test_kway_kernel_sweep(dtype, lens):
+    lists = [_sorted((8, l), dtype) for l in lens]
+    got = merge_k(lists)
+    want = ref.merge_k_ref(jnp.concatenate(lists, axis=-1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("lens", [(3, 3, 3), (7, 7, 7)])
+def test_median_kernel(lens):
+    lists = [_sorted((8, l), jnp.float32) for l in lens]
+    got = median_k(lists)
+    want = ref.median_ref(jnp.concatenate(lists, axis=-1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("e,k,blk", [(160, 6, 20), (128, 8, 16), (160, 6, 32),
+                                     (256, 8, 64), (96, 1, 16)])
+def test_router_topk_kernel_sweep(dtype, e, k, blk):
+    x = _rand((8, e), dtype, -100, 100) if dtype != jnp.uint8 else _rand((8, e), dtype)
+    v, i = router_topk_pallas(x, k=k, block=blk, block_batch=4, interpret=True)
+    rv, _ = ref.topk_ref(x, k)
+    np.testing.assert_array_equal(
+        np.asarray(v.astype(jnp.float32)), np.asarray(rv.astype(jnp.float32)))
+    taken = np.take_along_axis(np.asarray(x), np.asarray(i), -1)
+    np.testing.assert_array_equal(
+        taken.astype(np.float32), np.asarray(rv.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("v,k", [(1024, 16), (5000, 64), (4096, 1), (300, 50)])
+def test_vocab_topk_kernel_sweep(v, k):
+    x = jnp.asarray(RNG.standard_normal((4, v)), dtype=jnp.float32)
+    got_v, got_i = vocab_topk_pallas(x, k=k, block=128, block_batch=4, interpret=True)
+    rv, _ = ref.topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(rv))
+    taken = np.take_along_axis(np.asarray(x), np.asarray(got_i), -1)
+    np.testing.assert_allclose(taken, np.asarray(rv))
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_topk_kernel_property(data):
+    e = data.draw(st.sampled_from([64, 128, 160, 320]))
+    k = data.draw(st.integers(1, 16))
+    x = jnp.asarray(
+        np.asarray(data.draw(st.lists(
+            st.integers(-1000, 1000), min_size=4 * e, max_size=4 * e)))
+        .reshape(4, e), dtype=jnp.int32)
+    v, i = topk(x, k)
+    rv, _ = ref.topk_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+
+
+def test_kernels_jit_under_vmap_grid():
+    # kernels must compose with jit (they are called inside train steps)
+    a, b = _sorted((16, 32), jnp.float32), _sorted((16, 32), jnp.float32)
+    f = jax.jit(lambda a, b: merge2(a, b, n_cols=4))
+    np.testing.assert_array_equal(np.asarray(f(a, b)), np.asarray(ref.merge2_ref(a, b)))

@@ -1,0 +1,86 @@
+"""EXPERIMENTS.md §Paper-validation: the paper's claims C1-C6 as tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (comparator_count, depth, loms_2way, loms_kway,
+                        loms_median, merge_schedule, table1_stages,
+                        validate_01_merge)
+from repro.core.metrics import lut_proxy, series_levels, vmem_bytes
+from repro.core.mwms import mwms_kway, mwms_median
+
+
+def test_C1_loms_2way_always_two_stages_any_mixture():
+    for m, n in [(1, 1), (1, 8), (8, 1), (7, 5), (3, 14), (32, 32), (9, 2)]:
+        s = loms_2way(m, n)
+        assert depth(s) == 2
+        assert validate_01_merge(s, (m, n))
+    # Batcher needs log2(m+n) stages and only handles equal powers of two
+    assert depth(merge_schedule(32, 32, "batcher-oe")) == 6
+    with pytest.raises(ValueError):
+        merge_schedule(7, 5, "batcher-oe")
+
+
+def test_C2_table1_stage_counts():
+    for k in range(2, 9):
+        s = loms_kway(tuple([3] * k))
+        assert depth(s) == table1_stages(k), k
+
+
+def test_C3_3way_vs_mwms():
+    full = loms_kway((7, 7, 7))
+    med, _ = loms_median((7, 7, 7))
+    assert depth(full) == 3 and depth(med) == 2
+    # published MWMS: 5 full / 4 median; our best reconstruction: 6 / 5
+    assert depth(mwms_kway((7, 7, 7))) >= 5
+    assert depth(mwms_median((7, 7, 7))[0]) >= 4
+
+
+def test_C4_resource_ranking():
+    for m in (8, 16, 32, 64):
+        c_s2ms = comparator_count(merge_schedule(m, m, "s2ms"))
+        c_loms = comparator_count(merge_schedule(m, m, "loms"))
+        c_oems = comparator_count(merge_schedule(m, m, "batcher-oe"))
+        assert c_oems < c_loms < c_s2ms  # paper Figs. 13/17 ordering
+    # LUT proxy: LOMS beats S2MS from 32 outputs up (the paper's resource
+    # advantage is for the LARGER devices, Fig. 17; tiny S2MS are cheap)
+    for m in (32, 64, 128):
+        assert (lut_proxy(merge_schedule(m, m, "loms"), 32) <
+                lut_proxy(merge_schedule(m, m, "s2ms"), 32))
+
+
+def test_C4_placement_analog_s2ms_doesnt_fit():
+    # paper: UP-256/DN-256 S2MS did not place in the FPGA; the 8-column
+    # LOMS did. VMEM analog: with a 2 MiB working-set budget per sorter
+    # instance (16 MiB VMEM shared across ~8 concurrent instances for
+    # pipelining), the flat S2MS-256 cloud does not fit; LOMS 8-col does —
+    # and the gap is ~8x, the structural point of the paper's Fig. 10.
+    budget = 2 * 2**20
+    s2 = vmem_bytes(merge_schedule(256, 256, "s2ms"), 32, 8)
+    lo = vmem_bytes(loms_2way(256, 256, n_cols=8), 32, 8)
+    assert s2 > budget > lo
+    assert s2 > 4 * lo
+
+
+def test_C5_obliviousness_fixed_schedule():
+    # the schedule is static: same comparator count/depth regardless of data;
+    # and the 4insLUT mode costs one extra series level (paper §VI-A)
+    s = loms_2way(16, 16)
+    assert series_levels(s, "4insLUT") == series_levels(s, "2insLUT") + depth(s)
+
+
+def test_C6_depth_speed_ordering():
+    # structural delay ordering: S2MS < LOMS < Batcher for every size
+    for m in (4, 8, 16, 32, 64, 128):
+        assert (depth(merge_schedule(m, m, "s2ms"))
+                < depth(merge_schedule(m, m, "loms"))
+                < depth(merge_schedule(m, m, "batcher-bitonic")))
+
+
+def test_paper_headline_22_speedup_depth_analog():
+    # "UP-32/DN-32 ... speedup of 2.63 versus Batcher": depth analog is
+    # 6 stages (Batcher 64-output) vs 2 (LOMS) = 3.0x structural; the
+    # measured FPGA 2.63x sits between depth ratio and per-stage overheads.
+    d_ratio = depth(merge_schedule(32, 32, "batcher-oe")) / depth(
+        merge_schedule(32, 32, "loms"))
+    assert d_ratio == 3.0

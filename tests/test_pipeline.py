@@ -1,0 +1,50 @@
+"""Pipeline-parallel schedule correctness (4 stages, subprocess devices)."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ("pipe",))
+rng = np.random.default_rng(0)
+n_stages, n_micro, mb, d = 4, 6, 2, 8
+ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3, jnp.float32)
+x = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+
+
+def stage_fn(p, h):
+    return jnp.tanh(h @ p["w"])
+
+
+got = pipeline_apply(stage_fn, {"w": ws}, x, mesh, axis="pipe")
+
+ref = x
+for i in range(n_stages):
+    ref = stage_fn({"w": ws[i]}, ref.reshape(-1, d)).reshape(ref.shape)
+err = float(jnp.abs(got - ref).max())
+print(json.dumps({"err": err}))
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    out = subprocess.run(
+        [sys.executable, "-c", SNIPPET],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests", 1)[0],
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-6, res

@@ -1,0 +1,64 @@
+"""Serving engine + samplers."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model_init
+from repro.serving.engine import ServeConfig, generate
+from repro.serving.sample import sample_greedy, sample_topk, sample_topp
+
+RNG = np.random.default_rng(0)
+
+
+def test_topk_sampler_respects_support():
+    logits = jnp.asarray(RNG.standard_normal((64, 500)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    toks = sample_topk(key, logits, k=8, temperature=1.0)
+    top8 = np.asarray(jax.lax.top_k(logits, 8)[1])
+    for b in range(64):
+        assert int(toks[b]) in top8[b]
+
+
+def test_topp_sampler_respects_nucleus():
+    # peaked distribution: nucleus of p=0.5 is a handful of tokens
+    logits = jnp.asarray(RNG.standard_normal((32, 1000)) * 5, jnp.float32)
+    toks = sample_topp(jax.random.PRNGKey(1), logits, p=0.5)
+    probs = np.asarray(jax.nn.softmax(logits, -1))
+    for b in range(32):
+        order = np.argsort(probs[b])[::-1]
+        cum = np.cumsum(probs[b][order])
+        nucleus = set(order[: int(np.searchsorted(cum, 0.5)) + 1].tolist())
+        assert int(toks[b]) in nucleus
+
+
+def test_greedy_is_argmax():
+    logits = jnp.asarray(RNG.standard_normal((8, 100)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sample_greedy(logits)), np.argmax(np.asarray(logits), -1))
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_generate_end_to_end(temperature):
+    cfg = get_smoke_config("chatglm3-6b")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+    out = generate(params, batch, cfg,
+                   ServeConfig(max_new_tokens=6, top_k=8,
+                               temperature=temperature))
+    assert out["tokens"].shape == (2, 6)
+    assert (out["tokens"] >= 0).all() and (out["tokens"] < cfg.vocab_size).all()
+    assert out["tok_per_s"] > 0
+
+
+def test_generate_greedy_deterministic():
+    cfg = get_smoke_config("qwen3-8b")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)}
+    sc = ServeConfig(max_new_tokens=5, temperature=0.0)
+    a = generate(params, batch, cfg, sc)["tokens"]
+    b = generate(params, batch, cfg, sc)["tokens"]
+    np.testing.assert_array_equal(a, b)
