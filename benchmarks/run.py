@@ -19,6 +19,7 @@ def main() -> None:
 
     from . import fig11_12_speed_2way, fig13_resources_2way
     from . import fig14_17_lut_modes, fig18_20_3way, moe_routing
+    from . import streaming_merge
 
     modules = {
         "fig11_12": fig11_12_speed_2way,
@@ -26,6 +27,7 @@ def main() -> None:
         "fig14_17": fig14_17_lut_modes,
         "fig18_20": fig18_20_3way,
         "moe_routing": moe_routing,
+        "streaming": streaming_merge,
     }
     print("name,us_per_call,derived")
     for name, mod in modules.items():

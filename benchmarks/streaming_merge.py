@@ -1,0 +1,80 @@
+"""Streaming subsystem benchmarks: chunked merges, tree top-k, autotune.
+
+  PYTHONPATH=src python -m benchmarks.run --only streaming
+
+Rows:
+  * chunked 2-way merge vs. monolithic jnp.sort of the concatenation, at
+    input lengths far beyond a single kernel tile;
+  * k-way chunked merge across tile sizes (the planner default vs. forced);
+  * single-device tree top-k vs. jax.lax.top_k at vocab scale;
+  * autotuned vs. heuristic plan for a mid-size 2-way merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streaming import (
+    autotune_merge2,
+    chunked_merge,
+    chunked_merge_k,
+    plan_chunked,
+    tree_topk,
+)
+
+from .common import emit, sorted_batch, timeit
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> None:
+    b = 4
+    for n in (8192, 32768):
+        a = sorted_batch(RNG, b, n)
+        c = sorted_batch(RNG, b, n)
+        tile = plan_chunked(n, n, batch=b).tile
+        fn = jax.jit(functools.partial(chunked_merge, tile=tile))
+        t = timeit(fn, a, c)
+        emit(f"chunked_merge2_n{n}_tile{tile}", t * 1e6,
+             f"{2 * n * b / t / 1e6:.1f}Melem/s")
+        ref = jax.jit(lambda x, y: jnp.sort(jnp.concatenate([x, y], -1), -1))
+        t_ref = timeit(ref, a, c)
+        emit(f"concat_sort_n{n}", t_ref * 1e6, "baseline")
+
+    lists = [sorted_batch(RNG, b, 2048) for _ in range(4)]
+    for tile in (64, 128):
+        fn = jax.jit(functools.partial(chunked_merge_k, tile=tile))
+        t = timeit(fn, lists)
+        emit(f"chunked_merge4_tile{tile}", t * 1e6,
+             f"{4 * 2048 * b / t / 1e6:.1f}Melem/s")
+
+    v = jnp.asarray(RNG.standard_normal((b, 32768)), jnp.float32)
+    t = timeit(jax.jit(functools.partial(tree_topk, k=64)), v)
+    emit("tree_topk_v32768_k64", t * 1e6, "")
+    t_ref = timeit(jax.jit(lambda x: jax.lax.top_k(x, 64)), v)
+    emit("lax_topk_v32768_k64", t_ref * 1e6, "baseline")
+
+    from repro.kernels.loms_merge import loms_merge2_pallas
+    from repro.streaming.cache import AutotuneCache
+
+    m = n_ = 256
+    a = sorted_batch(RNG, 8, m)
+    c = sorted_batch(RNG, 8, n_)
+    tuned = autotune_merge2(m, n_, batch=8, cache=AutotuneCache(
+        path="/tmp/repro_bench_autotune.json"))
+    for tag, plan in (("autotuned", tuned),):
+        fn = jax.jit(functools.partial(
+            loms_merge2_pallas, n_cols=plan.n_cols,
+            block_batch=plan.block_batch, use_mxu=plan.use_mxu,
+            interpret=jax.default_backend() != "tpu"))
+        t = timeit(fn, a, c)
+        emit(f"merge2_{m}x{n_}_{tag}", t * 1e6,
+             f"ncols{plan.n_cols}_bb{plan.block_batch}_mxu{int(plan.use_mxu)}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,12 +1,16 @@
 """repro.core — List Offset Merge Sorters as oblivious JAX sort networks."""
 from .api import (  # noqa: F401
+    chunked_merge,
+    chunked_merge_k,
     median9,
     median_of_lists,
     merge,
     merge_k,
     merge_schedule,
+    plan_merge,
     sort,
     topk,
+    tree_topk,
 )
 from .loms import loms_2way, loms_kway, loms_median, table1_stages  # noqa: F401
 from .networks import (  # noqa: F401

@@ -265,3 +265,41 @@ def median9(window: jnp.ndarray):
     rows = rank_sort(window.reshape(window.shape[:-1] + (3, 3)))
     lists = [rows[..., i, :] for i in range(3)]
     return median_of_lists(lists)
+
+
+# ---------------------------------------------------------------------------
+# streaming subsystem mirror (repro.streaming; lazy imports — streaming
+# depends on the kernels, which depend on this module)
+# ---------------------------------------------------------------------------
+
+
+def chunked_merge(a: jnp.ndarray, b: jnp.ndarray, **kw):
+    """Streaming 2-way merge of arbitrarily long sorted inputs in fixed
+    tiles; see :func:`repro.streaming.chunked_merge`."""
+    from repro.streaming import chunked_merge as _cm
+
+    return _cm(a, b, **kw)
+
+
+def chunked_merge_k(lists: Sequence[jnp.ndarray], **kw):
+    """Streaming k-way tiled merge; see
+    :func:`repro.streaming.chunked_merge_k`."""
+    from repro.streaming import chunked_merge_k as _cmk
+
+    return _cmk(lists, **kw)
+
+
+def tree_topk(x: jnp.ndarray, k: int, **kw):
+    """Device-tree (optionally mesh-sharded) top-k; see
+    :func:`repro.streaming.tree_topk`."""
+    from repro.streaming import tree_topk as _tt
+
+    return _tt(x, k, **kw)
+
+
+def plan_merge(m: int, n: int, **kw):
+    """Heuristic kernel plan for one UP-m/DN-n merge; see
+    :func:`repro.streaming.plan_merge2`."""
+    from repro.streaming import plan_merge2 as _pm
+
+    return _pm(m, n, **kw)

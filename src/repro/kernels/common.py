@@ -22,6 +22,44 @@ def _iota(shape, dim, dtype=jnp.int32):
     return jax.lax.broadcasted_iota(dtype, shape, dim)
 
 
+def sentinel_max(dtype):
+    """Finite +sentinel: +/-inf would turn the one-hot MXU permute into
+    0 * inf = NaN, so sentinels must stay finite."""
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return float(jnp.finfo(d).max)
+    return int(jnp.iinfo(d).max)
+
+
+def sentinel_min(dtype):
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return float(jnp.finfo(d).min)
+    return int(jnp.iinfo(d).min)
+
+
+def pad_batch(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    """Pad the leading (batch) axis up to a multiple of ``multiple``.
+
+    Pad rows are zeros — every kernel here treats batch rows independently,
+    so their (garbage) outputs are sliced away by the caller."""
+    pad = (-x.shape[0]) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+def pad_tail_sorted(x: jnp.ndarray, length: int, descending: bool = False) -> jnp.ndarray:
+    """Pad the last (sorted) axis out to ``length`` while keeping each row
+    sorted: +sentinel tail for ascending rows, -sentinel for descending."""
+    pad = length - x.shape[-1]
+    assert pad >= 0, (x.shape, length)
+    if pad == 0:
+        return x
+    fill = sentinel_min(x.dtype) if descending else sentinel_max(x.dtype)
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+
+
 def onehot_permute(vals: jnp.ndarray, rank: jnp.ndarray, payload=None):
     """out[..., rank[i]] = vals[..., i] via one-hot matmul (MXU path).
 

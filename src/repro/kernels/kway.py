@@ -22,7 +22,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.networks import Schedule, _stage_classes
 
-from .common import _iota, onehot_permute, ranks_sort, scatter_permute
+from .common import _iota, onehot_permute, pad_batch, ranks_sort, scatter_permute
 
 
 def _schedule_wiring(sched: Schedule, n_stages=None) -> List[np.ndarray]:
@@ -86,18 +86,23 @@ def kway_merge_pallas(
     use_mxu: bool = True,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Apply an oblivious schedule to (B, n_inputs) batched lists."""
+    """Apply an oblivious schedule to (B, n_inputs) batched lists.
+
+    Ragged batch sizes are padded up to a ``block_batch`` multiple and
+    sliced back."""
     bsz, n_in = x.shape
     assert n_in == sched.n_inputs
-    assert bsz % block_batch == 0
+    x = pad_batch(x, block_batch)
+    padded = x.shape[0]
     wiring = _schedule_wiring(sched, n_stages)
     in_specs = [pl.BlockSpec((block_batch, n_in), lambda i: (i, 0))]
     in_specs += [pl.BlockSpec(w.shape, lambda i: (0,)) for w in wiring]
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kway_kernel, sched=sched, n_stages=n_stages, use_mxu=use_mxu),
-        grid=(bsz // block_batch,),
+        grid=(padded // block_batch,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_batch, sched.n_outputs), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, sched.n_outputs), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded, sched.n_outputs), x.dtype),
         interpret=interpret,
     )(x, *[jnp.asarray(w) for w in wiring])
+    return out[:bsz] if padded != bsz else out

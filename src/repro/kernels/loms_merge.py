@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, sort_nsorter
+from .common import merge2_sorted, pad_batch, sort_nsorter
 
 
 def _loms2_kernel(a_ref, b_ref, o_ref, *, n_cols: int, use_mxu: bool):
@@ -61,12 +61,14 @@ def loms_merge2_pallas(
     """Merge sorted ``a`` (B, m) and ``b`` (B, n) -> (B, m+n).
 
     Requires n_cols | m and n_cols | n (the hole-free fast path; ragged
-    sizes fall back to the schedule executor in ops.py)."""
+    sizes fall back to the schedule executor in ops.py). Ragged batch
+    sizes are padded up to a ``block_batch`` multiple and sliced back."""
     (bsz, m), (_, n) = a.shape, b.shape
     assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
-    assert bsz % block_batch == 0, (bsz, block_batch)
-    grid = (bsz // block_batch,)
-    return pl.pallas_call(
+    a, b = pad_batch(a, block_batch), pad_batch(b, block_batch)
+    padded = a.shape[0]
+    grid = (padded // block_batch,)
+    out = pl.pallas_call(
         functools.partial(_loms2_kernel, n_cols=n_cols, use_mxu=use_mxu),
         grid=grid,
         in_specs=[
@@ -74,6 +76,7 @@ def loms_merge2_pallas(
             pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, m + n), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded, m + n), a.dtype),
         interpret=interpret,
     )(a, b)
+    return out[:bsz] if padded != bsz else out

@@ -24,16 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, sort_nsorter
+from .common import merge2_sorted, sentinel_min, sort_nsorter
 
-
-def _neg_inf(dtype):
-    # finite lowest value: +/-inf would turn the one-hot MXU permute into
-    # 0 * inf = NaN, so sentinels must stay finite
-    d = jnp.dtype(dtype)
-    if jnp.issubdtype(d, jnp.floating):
-        return float(jnp.finfo(d).min)
-    return jnp.iinfo(d).min
+_neg_inf = sentinel_min
 
 
 def _local_sorted_topk(x, idx, k, use_mxu):

@@ -1,1 +1,10 @@
-from .sharding import Parallelism, batch_pspecs, build_param_pspecs, cache_pspecs, make_parallelism, to_named  # noqa: F401
+from .sharding import (  # noqa: F401
+    Parallelism,
+    batch_pspecs,
+    build_param_pspecs,
+    cache_pspecs,
+    make_parallelism,
+    shard_map_compat,
+    to_named,
+    vocab_topk_axis,
+)

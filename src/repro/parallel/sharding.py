@@ -55,6 +55,33 @@ class Parallelism:
             x, NamedSharding(self.mesh, P(*dims)))
 
 
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions: new releases expose it at the
+    top level with ``check_vma``; 0.4.x has ``jax.experimental.shard_map``
+    with ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def vocab_topk_axis(par: Parallelism, vocab_size: int) -> Optional[str]:
+    """Mesh axis for the serving device-tree top-k (streaming.tree), or None
+    when the vocab can't shard over TP and sampling stays single-device."""
+    if par is None or par.tp_size <= 1:
+        return None
+    if vocab_size % par.tp_size != 0:
+        return None
+    return par.tp_axis
+
+
 def make_parallelism(mesh: Mesh, *, ep: bool = True, remat: str = "dots") -> Parallelism:
     axes = mesh.axis_names
     dp = tuple(a for a in axes if a in ("pod", "data"))

@@ -39,7 +39,8 @@ def make_serve_step(cfg: ModelConfig, par=None, top_k: int = 64,
         if temperature <= 0.0:
             nxt = sample_greedy(logits)
         else:
-            nxt = sample_topk(key, logits, k=top_k, temperature=temperature)
+            nxt = sample_topk(key, logits, k=top_k, temperature=temperature,
+                              par=par)
         return nxt[:, None], cache
 
     return serve_step
@@ -76,7 +77,7 @@ def generate(
     else:
         key, sub = jax.random.split(key)
         tok = sample_topk(sub, logits, k=sc.top_k,
-                          temperature=sc.temperature)[:, None]
+                          temperature=sc.temperature, par=par)[:, None]
     out = [np.asarray(tok)]
     t1 = time.perf_counter()
     for i in range(sc.max_new_tokens - 1):

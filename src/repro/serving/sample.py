@@ -5,6 +5,12 @@ per-block sorted lists reduced by truncated UP-k/DN-k List Offset merges
 (repro.kernels.topk). Sampling is data-oblivious up to the final categorical
 draw — the paper's security/safety argument for oblivious sorting applies
 to the scoring path.
+
+When a :class:`~repro.parallel.sharding.Parallelism` with a >1 TP axis is
+passed, the candidate scoring runs as the device-tree sharded top-k from
+``repro.streaming.tree`` — each shard scores its vocab slice and the lists
+reduce over the mesh axis in log depth, instead of gathering the full
+logits row onto one device.
 """
 from __future__ import annotations
 
@@ -16,17 +22,30 @@ import jax.numpy as jnp
 from repro.kernels import topk as kernel_topk
 
 
+def _scored_topk(logits: jnp.ndarray, k: int, par=None):
+    """Descending (values, indices) candidates; sharded tree when possible."""
+    if par is not None:
+        from repro.parallel.sharding import vocab_topk_axis
+        from repro.streaming import tree_topk
+
+        axis = vocab_topk_axis(par, logits.shape[-1])
+        if axis is not None:
+            return tree_topk(logits, k, mesh=par.mesh, axis=axis)
+    return kernel_topk(logits, k)
+
+
 def sample_topk(
     key,
     logits: jnp.ndarray,  # (B, V)
     *,
     k: int = 64,
     temperature: float = 1.0,
+    par=None,
 ) -> jnp.ndarray:
     """Top-k + temperature categorical sampling -> (B,) int32 tokens."""
     if temperature <= 0.0 or k == 1:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    vals, idx = kernel_topk(logits, k)
+    vals, idx = _scored_topk(logits, k, par)
     probs_logits = vals.astype(jnp.float32) / temperature
     choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
@@ -43,6 +62,7 @@ def sample_topp(
     p: float = 0.9,
     k_max: int = 256,
     temperature: float = 1.0,
+    par=None,
 ) -> jnp.ndarray:
     """Nucleus sampling on the LOMS top-k prefix.
 
@@ -50,7 +70,7 @@ def sample_topp(
     so the nucleus is one cumulative sum over the k_max prefix — no extra
     sort. Candidates beyond k_max carry negligible mass for any practical
     p (< 1e-4 at p <= 0.99 for trained LMs)."""
-    vals, idx = kernel_topk(logits, k_max)  # descending
+    vals, idx = _scored_topk(logits, k_max, par)  # descending
     probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     # keep the smallest prefix with mass >= p (always keep the top-1)

@@ -1,0 +1,18 @@
+"""repro.streaming — composed LOMS pipelines for production-scale workloads.
+
+The layer between the fixed-shape Pallas sorters (``repro.kernels``) and
+serving (``repro.serving``): chunked merges that stream arbitrarily long
+sorted inputs through tile-sized kernel invocations, a device-tree sharded
+top-k for TP-sharded vocabs, and a planner + disk-backed autotune cache
+that picks the kernel knobs per problem shape. See DESIGN.md §8.
+"""
+from .cache import AutotuneCache, default_cache, default_cache_path, plan_key  # noqa: F401
+from .chunked import chunked_merge, chunked_merge_k  # noqa: F401
+from .planner import (  # noqa: F401
+    MergePlan,
+    autotune_merge2,
+    plan_chunked,
+    plan_chunked_k,
+    plan_merge2,
+)
+from .tree import local_topk_desc, tree_topk, tree_topk_for  # noqa: F401

@@ -1,0 +1,114 @@
+"""Disk-backed autotune cache for the merge planner.
+
+One JSON file maps a plan key — ``(op, shapes, k, dtype, backend)`` encoded
+as a string — to the winning :class:`~repro.streaming.planner.MergePlan`
+fields plus the measured time. Writes are atomic (tmp file + ``os.rename``)
+so concurrent benchmark runs can never leave a torn file; reads tolerate a
+missing or corrupt file by starting empty (an autotune cache is always
+reconstructible).
+
+The default location is ``$REPRO_AUTOTUNE_CACHE`` or
+``~/.cache/repro_loms/autotune.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_loms", "autotune.json"
+    )
+
+
+def plan_key(op: str, *, shapes, dtype, k: Optional[int] = None,
+             backend: Optional[str] = None) -> str:
+    """Stable string key for one tuning point.
+
+    ``shapes`` is any nested int structure (list lengths + batch); ``k`` the
+    truncation (top-k) if any; ``backend`` defaults to the active JAX
+    backend so TPU and CPU-interpret timings never mix."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    shp = "x".join(str(int(s)) for s in _flat_ints(shapes))
+    return f"{op}|{shp}|k{k if k is not None else '-'}|{dtype}|{backend}"
+
+
+def _flat_ints(obj):
+    if isinstance(obj, (list, tuple)):
+        for o in obj:
+            yield from _flat_ints(o)
+    else:
+        yield int(obj)
+
+
+class AutotuneCache:
+    """get/put dict-of-json-scalars entries keyed by :func:`plan_key`."""
+
+    def __init__(self, path: Optional[str] = None, autosave: bool = True):
+        self.path = path or default_cache_path()
+        self.autosave = autosave
+        self._lock = threading.Lock()
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self.load()
+
+    def load(self) -> None:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self._entries = {str(k): dict(v) for k, v in data.items()}
+        except (OSError, ValueError):
+            self._entries = {}
+
+    def save(self) -> None:
+        with self._lock:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(self.path) or ".", suffix=".tmp"
+            )
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._entries, f, indent=1, sort_keys=True)
+                os.rename(tmp, self.path)  # atomic swap
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(self, key: str, value: Dict[str, Any]) -> None:
+        with self._lock:
+            self._entries[key] = dict(value)
+        if self.autosave:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+
+_default: Optional[AutotuneCache] = None
+
+
+def default_cache() -> AutotuneCache:
+    global _default
+    if _default is None:
+        _default = AutotuneCache()
+    return _default

@@ -1,0 +1,233 @@
+"""Chunked (streaming) merges: arbitrarily long sorted inputs, fixed tiles.
+
+The paper's LOMS devices are fixed-size blocks; this module composes them
+into pipelines the way FLiMS streams a fixed 2-way merger over unbounded
+inputs (DESIGN.md §8):
+
+* :func:`chunked_merge` — 2-way streaming merge with a carry buffer. Each
+  step loads one tile of ``T`` values from whichever stream's *last loaded*
+  element is smaller, merges it with the ``T``-value carry through
+  ``loms_merge2_pallas``, emits the lower half and keeps the upper half as
+  the next carry. Selecting on the last-loaded element (not the head) is
+  what makes a fixed emission rate safe: every carry element is bounded by
+  the larger of the two last-loaded values, so the emitted lower half can
+  never overtake an unloaded element. Working set is O(batch * tile)
+  regardless of input length.
+
+* :func:`chunked_merge_k` — k-way tiled merge via merge-path partitioning:
+  the global rank of every element is computed with vectorized binary
+  searches, output-tile split points are read off the rank arrays, and each
+  output tile is produced by one ``kway_merge_pallas`` call over k
+  tile-sized segments (sentinel-padded at the ragged tails). The scan over
+  output tiles keeps the kernel working set fixed.
+
+Both produce exactly ``sort(concat(inputs))`` — bit-identical values — for
+NaN-free inputs of any length, batched or unbatched.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import loms as core_loms
+from repro.kernels.common import pad_tail_sorted, sentinel_max
+from repro.kernels.kway import kway_merge_pallas
+from repro.kernels.loms_merge import loms_merge2_pallas
+
+from .planner import MergePlan, plan_chunked, plan_chunked_k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _as_batched(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """Flatten leading axes to one batch axis; remember them for unflatten."""
+    if x.ndim == 1:
+        return x[None, :], ()
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _merge_pair(carry: jnp.ndarray, tile: jnp.ndarray, plan: MergePlan,
+                interpret: bool) -> jnp.ndarray:
+    """(B, T) + (B, T) -> (B, 2T) ascending via the 2-way Pallas kernel."""
+    t = carry.shape[-1]
+    if plan.kind == "loms" and t % plan.n_cols == 0:
+        return loms_merge2_pallas(
+            carry, tile, n_cols=plan.n_cols, block_batch=plan.block_batch,
+            use_mxu=plan.use_mxu, interpret=interpret,
+        )
+    from repro.core import api as core_api  # ragged fallback, no Pallas
+
+    return core_api.merge(carry, tile)
+
+
+def chunked_merge(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    tile: Optional[int] = None,
+    plan: Optional[MergePlan] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Streaming 2-way merge of ascending ``a`` (..., Na) and ``b`` (..., Nb).
+
+    Equivalent to ``sort(concat([a, b], -1))`` but built from fixed
+    ``tile``-sized LOMS kernel invocations with an O(batch*tile) carry —
+    inputs far larger than VMEM merge at fixed on-chip memory."""
+    a2, lead = _as_batched(a)
+    b2, lead_b = _as_batched(b)
+    assert lead == lead_b, (a.shape, b.shape)
+    bsz, na = a2.shape
+    nb = b2.shape[-1]
+    if plan is None:
+        plan = plan_chunked(na, nb, batch=bsz, dtype=a2.dtype, tile=tile)
+    t = int(tile if tile is not None else plan.tile)
+    t = max(2, t - (t % 2))
+    if interpret is None:
+        interpret = _interpret()
+    out = _chunked_merge2(a2, b2, tile=t, plan=plan, interpret=interpret)
+    return out.reshape(lead + (na + nb,)) if lead else out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "plan", "interpret"))
+def _chunked_merge2(a, b, *, tile: int, plan: MergePlan, interpret: bool):
+    bsz, na = a.shape
+    nb = b.shape[-1]
+    t = tile
+    total = na + nb
+    out_tiles = -(-total // t)
+    # each stream gets one all-sentinel drain tile past its (padded) tail;
+    # pointers clamp there, so an exhausted stream reads sentinels forever
+    la = (-(-na // t) + 1) * t
+    lb = (-(-nb // t) + 1) * t
+    ap = pad_tail_sorted(a, la)
+    bp = pad_tail_sorted(b, lb)
+
+    # prologue: load the first tile of each stream, emit the lower half
+    ta, tb = ap[:, :t], bp[:, :t]
+    merged = _merge_pair(ta, tb, plan, interpret)
+    out = jnp.zeros((bsz, out_tiles * t), a.dtype)
+    out = jax.lax.dynamic_update_slice(out, merged[:, :t], (0, 0))
+    carry = merged[:, t:]
+    last_a, last_b = ta[:, -1], tb[:, -1]
+    pa = jnp.full((bsz,), t, jnp.int32)
+    pb = jnp.full((bsz,), t, jnp.int32)
+
+    load = jax.vmap(lambda row, p: jax.lax.dynamic_slice(row, (p,), (t,)))
+
+    def body(i, state):
+        out, carry, pa, pb, last_a, last_b = state
+        sel_a = last_a <= last_b  # FLiMS rule: refill the lagging stream
+        tile_a = load(ap, pa)
+        tile_b = load(bp, pb)
+        cur = jnp.where(sel_a[:, None], tile_a, tile_b)
+        last_a = jnp.where(sel_a, cur[:, -1], last_a)
+        last_b = jnp.where(sel_a, last_b, cur[:, -1])
+        pa = jnp.where(sel_a, jnp.minimum(pa + t, la - t), pa)
+        pb = jnp.where(sel_a, pb, jnp.minimum(pb + t, lb - t))
+        merged = _merge_pair(carry, cur, plan, interpret)
+        out = jax.lax.dynamic_update_slice(out, merged[:, :t], (0, i * t))
+        return out, merged[:, t:], pa, pb, last_a, last_b
+
+    state = (out, carry, pa, pb, last_a, last_b)
+    out = jax.lax.fori_loop(1, out_tiles, body, state)[0]
+    return out[:, :total]
+
+
+# ---------------------------------------------------------------------------
+# k-way: merge-path partition + one k-way kernel call per output tile
+# ---------------------------------------------------------------------------
+
+
+def _global_positions(lists: Sequence[jnp.ndarray]) -> list:
+    """Final merged position of every element (stable: list order breaks
+    ties). All counts are vectorized binary searches over sorted rows."""
+    pos = []
+    for j, lj in enumerate(lists):
+        p = jnp.broadcast_to(
+            jnp.arange(lj.shape[-1], dtype=jnp.int32), lj.shape
+        ).astype(jnp.int32)
+        for l, ll in enumerate(lists):
+            if l == j:
+                continue
+            side = "right" if l < j else "left"
+            cnt = jax.vmap(
+                lambda arr, q, s=side: jnp.searchsorted(arr, q, side=s)
+            )(ll, lj)
+            p = p + cnt.astype(jnp.int32)
+        pos.append(p)
+    return pos
+
+
+def chunked_merge_k(
+    lists: Sequence[jnp.ndarray],
+    *,
+    tile: Optional[int] = None,
+    plan: Optional[MergePlan] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """k-way tiled merge of ascending lists -> ascending (..., sum(len)).
+
+    Each output tile is one ``kway_merge_pallas`` call over k sentinel-padded
+    tile segments located by merge-path split points, so the kernel working
+    set stays fixed no matter how long the inputs are."""
+    assert len(lists) >= 2, "need at least two lists"
+    if len(lists) == 2:
+        return chunked_merge(lists[0], lists[1], tile=tile, plan=plan,
+                             interpret=interpret)
+    flat = []
+    lead = None
+    for l in lists:
+        f, ld = _as_batched(l)
+        assert lead is None or ld == lead, [x.shape for x in lists]
+        lead = ld
+        flat.append(f)
+    lens = tuple(int(l.shape[-1]) for l in flat)
+    bsz = flat[0].shape[0]
+    k = len(flat)
+    if plan is None:
+        plan = plan_chunked_k(lens, batch=bsz, dtype=flat[0].dtype, tile=tile)
+    t = int(tile if tile is not None else plan.tile)
+    if interpret is None:
+        interpret = _interpret()
+    total = sum(lens)
+    out_tiles = -(-total // t)
+    sched = core_loms.loms_kway((t,) * k)
+
+    pos = _global_positions(flat)  # per-list (B, n_j) global ranks
+    grid = jnp.arange(out_tiles + 1, dtype=jnp.int32) * t
+    # splits[j][:, i] = how many of list j land in the first i*t outputs
+    splits = [
+        jax.vmap(lambda p: jnp.searchsorted(p, grid, side="left"))(pj).astype(
+            jnp.int32
+        )
+        for pj in pos
+    ]
+    padded = [pad_tail_sorted(f, lens[j] + t) for j, f in enumerate(flat)]
+    fill = sentinel_max(flat[0].dtype)
+    lane = jnp.arange(t, dtype=jnp.int32)
+    load = jax.vmap(lambda row, p: jax.lax.dynamic_slice(row, (p,), (t,)))
+
+    def one_tile(i):
+        segs = []
+        for j in range(k):
+            start = splits[j][:, i]
+            seg_len = splits[j][:, i + 1] - start
+            seg = load(padded[j], start)
+            seg = jnp.where(lane[None, :] < seg_len[:, None], seg, fill)
+            segs.append(seg)
+        merged = kway_merge_pallas(
+            jnp.concatenate(segs, axis=-1), sched,
+            block_batch=plan.block_batch, use_mxu=plan.use_mxu,
+            interpret=interpret,
+        )
+        return merged[:, :t]
+
+    tiles = jax.lax.map(one_tile, jnp.arange(out_tiles, dtype=jnp.int32))
+    out = jnp.moveaxis(tiles, 0, 1).reshape(bsz, out_tiles * t)[:, :total]
+    return out.reshape(lead + (total,)) if lead else out[0]

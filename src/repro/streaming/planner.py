@@ -1,0 +1,229 @@
+"""Merge planner: pick the kernel schedule knobs for a given problem.
+
+Two layers:
+
+* :func:`plan_merge2` / :func:`plan_chunked` — closed-form heuristics from
+  the paper's cost model (stage-1 comparison cloud is ``m*n/C`` comparators,
+  stage-2 row sorts are ``(m+n)*C``; optimal column count sits near
+  ``sqrt(m*n/(m+n))``) plus the ~16 MiB VMEM budget from DESIGN.md §2.
+* :func:`autotune_merge2` — measure a small candidate grid on the live
+  backend and persist the winner in the :mod:`~repro.streaming.cache`
+  autotune cache, so the second process on the same host skips the sweep.
+
+A plan never changes semantics — every candidate computes the same merge —
+so a stale cache entry costs speed, not correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cache import AutotuneCache, default_cache, plan_key
+
+# conservative per-core on-chip working-set budget (bytes); DESIGN.md §2
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePlan:
+    """Resolved knobs for one merge problem (all kernel-static)."""
+
+    kind: str = "loms"  # 'loms' | 'bitonic' | 'schedule' (ragged fallback)
+    n_cols: int = 2
+    block_batch: int = 8
+    use_mxu: bool = True
+    tile: int = 512  # chunked/streaming tile size (per input)
+    source: str = "heuristic"  # 'heuristic' | 'autotune' | 'cache'
+
+    def to_entry(self, us: Optional[float] = None) -> dict:
+        d = {
+            "kind": self.kind,
+            "n_cols": self.n_cols,
+            "block_batch": self.block_batch,
+            "use_mxu": self.use_mxu,
+            "tile": self.tile,
+        }
+        if us is not None:
+            d["us"] = float(us)
+        return d
+
+    @classmethod
+    def from_entry(cls, entry: dict, source: str = "cache") -> "MergePlan":
+        return cls(
+            kind=str(entry.get("kind", "loms")),
+            n_cols=int(entry["n_cols"]),
+            block_batch=int(entry["block_batch"]),
+            use_mxu=bool(entry["use_mxu"]),
+            tile=int(entry.get("tile", 512)),
+            source=source,
+        )
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _is_float(dtype) -> bool:
+    return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+
+def _vmem_bytes_merge2(m: int, n: int, n_cols: int, block_batch: int, dtype) -> int:
+    """Rough stage-1 + stage-2 working set of the 2-way LOMS kernel."""
+    it = max(_itemsize(dtype), 4)  # comparison/permute matrices go via f32
+    vals = (m + n) * it
+    cloud = (m // n_cols) * (n // n_cols) * 4  # widest column S2MS matrix
+    rows = ((m + n) // n_cols) * n_cols * n_cols * 4  # row-sort matrices
+    return block_batch * (vals + cloud + rows)
+
+
+def _feasible_cols(m: int, n: int) -> Tuple[int, ...]:
+    return tuple(c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0)
+
+
+def plan_merge2(
+    m: int,
+    n: int,
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    target_block_batch: int = 8,
+) -> MergePlan:
+    """Heuristic plan for one UP-m/DN-n batched merge."""
+    cols = _feasible_cols(m, n)
+    if not cols:
+        # hole-y setup array: the pure-JAX schedule executor handles it
+        return MergePlan(kind="schedule", n_cols=2, block_batch=1,
+                         use_mxu=_is_float(dtype), source="heuristic")
+    # comparator cost model: stage1 m*n/C + stage2 (m+n)*C, minimized near
+    # C* = sqrt(m*n/(m+n)); take the nearest feasible column count.
+    c_star = float(np.sqrt(m * n / max(m + n, 1)))
+    n_cols = min(cols, key=lambda c: abs(c - c_star))
+    bb = target_block_batch
+    while bb > 1 and _vmem_bytes_merge2(m, n, n_cols, bb, dtype) > _VMEM_BUDGET:
+        bb //= 2
+    bb = max(1, min(bb, batch))
+    # int32+ values overflow the f32 one-hot matmul mantissa; route ints
+    # through the exact scatter permute.
+    use_mxu = _is_float(dtype)
+    return MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
+                     use_mxu=use_mxu, source="heuristic")
+
+
+def plan_chunked(
+    total_a: int,
+    total_b: int,
+    *,
+    batch: int = 1,
+    dtype=jnp.float32,
+    tile: Optional[int] = None,
+) -> MergePlan:
+    """Plan for the streaming 2-way chunked merge (carry + tile kernels)."""
+    if tile is None:
+        # one tile step merges carry(T) with tile(T): keep 2T + matrices in
+        # budget across the whole batch (the streaming loop runs batch-wide)
+        tile = 512
+        while tile > 32 and _vmem_bytes_merge2(
+            tile, tile, 2, max(batch, 1), dtype
+        ) > _VMEM_BUDGET:
+            tile //= 2
+    tile = max(2, tile - (tile % 2))  # n_cols=2 fast path needs even tiles
+    base = plan_merge2(tile, tile, batch=batch, dtype=dtype)
+    return dataclasses.replace(base, tile=tile)
+
+
+def plan_chunked_k(
+    lens: Sequence[int],
+    *,
+    batch: int = 1,
+    dtype=jnp.float32,
+    tile: Optional[int] = None,
+) -> MergePlan:
+    """Plan for the k-way chunked merge (k tile-segments per output tile)."""
+    k = len(lens)
+    if tile is None:
+        tile = 128
+        while tile > 16 and max(batch, 1) * (k * tile) * (k * tile) * 4 > _VMEM_BUDGET:
+            tile //= 2
+    return MergePlan(kind="schedule", n_cols=k, block_batch=max(1, min(8, batch)),
+                     use_mxu=_is_float(dtype), tile=int(tile), source="heuristic")
+
+
+# ---------------------------------------------------------------------------
+# benchmark-backed autotune
+# ---------------------------------------------------------------------------
+
+
+def _time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
+
+
+def _merge2_candidates(m: int, n: int, batch: int, dtype) -> Iterable[MergePlan]:
+    for n_cols in _feasible_cols(m, n) or ():
+        for bb in (16, 8, 4, 1):
+            if bb > batch:
+                continue
+            if _vmem_bytes_merge2(m, n, n_cols, bb, dtype) > 2 * _VMEM_BUDGET:
+                continue
+            for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
+                yield MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
+                                use_mxu=use_mxu, source="autotune")
+
+
+def autotune_merge2(
+    m: int,
+    n: int,
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    cache: Optional[AutotuneCache] = None,
+    candidates: Optional[Sequence[MergePlan]] = None,
+    interpret: Optional[bool] = None,
+    iters: int = 3,
+) -> MergePlan:
+    """Measure candidate (n_cols, block_batch, use_mxu) triples for one
+    UP-m/DN-n batched merge; persist and return the winner.
+
+    A cache hit skips measurement entirely. Falls back to the heuristic
+    plan when no candidate is feasible (ragged m/n)."""
+    from repro.kernels.loms_merge import loms_merge2_pallas
+
+    cache = cache if cache is not None else default_cache()
+    key = plan_key("merge2", shapes=(batch, m, n), dtype=jnp.dtype(dtype).name)
+    hit = cache.get(key)
+    if hit is not None:
+        return MergePlan.from_entry(hit, source="cache")
+    cands = list(candidates) if candidates is not None else list(
+        _merge2_candidates(m, n, batch, dtype)
+    )
+    if not cands:
+        return plan_merge2(m, n, batch=batch, dtype=dtype)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(0)
+    a = jnp.sort(jnp.asarray(rng.integers(0, 1 << 16, (batch, m))).astype(dtype), -1)
+    b = jnp.sort(jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype), -1)
+    best, best_us = None, float("inf")
+    for plan in cands:
+        us = _time_call(
+            lambda x, y, p=plan: loms_merge2_pallas(
+                x, y, n_cols=p.n_cols, block_batch=p.block_batch,
+                use_mxu=p.use_mxu, interpret=interpret,
+            ),
+            a, b, iters=iters,
+        )
+        if us < best_us:
+            best, best_us = plan, us
+    cache.put(key, best.to_entry(best_us))
+    return best

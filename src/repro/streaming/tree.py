@@ -1,0 +1,156 @@
+"""Device-tree sharded top-k: log-depth LOMS merge reduction over a mesh axis.
+
+Serving-scale decode needs top-k over a vocab that is sharded across the
+tensor-parallel axis. Each device computes a local blockwise LOMS top-k of
+its vocab slice (global indices restored from the shard offset), then the
+per-shard (value, index) candidate lists reduce across the axis through a
+log-depth tree of truncated UP-k/DN-k merges — the paper's 2-stage merge
+device reading only its upper rows, exactly as in ``kernels/topk.py`` but
+with the tree edges mapped onto inter-device links:
+
+* power-of-two axis: a butterfly exchange (``lax.ppermute`` partners at
+  XOR distance 1, 2, 4, ...) — k values per link per step, every shard
+  finishes with the replicated global top-k;
+* any other axis size: one ``lax.all_gather`` of the k-candidate lists
+  followed by the same log-depth merge tree computed redundantly per shard.
+
+Everything inside the ``shard_map`` body is plain jnp built from the same
+comparison-cloud/one-hot primitives the Pallas kernels use, so it traces
+under manual sharding on any backend.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.common import merge2_sorted, sentinel_min, sort_nsorter
+
+
+def _merge_desc(av, ai, bv, bi, keep: int, use_mxu: bool):
+    """Merge two descending (value, index) lists, keep the top ``keep``."""
+    mv, mi = merge2_sorted(av[..., ::-1], bv[..., ::-1],
+                           payload=(ai[..., ::-1], bi[..., ::-1]),
+                           use_mxu=use_mxu)
+    return mv[..., ::-1][..., :keep], mi[..., ::-1][..., :keep]
+
+
+def _tree_reduce_desc(vs, is_, k: int, use_mxu: bool):
+    """Reduce a (..., S, k) stack of descending lists to (..., k)."""
+    neg = sentinel_min(vs.dtype)
+    while vs.shape[-2] > 1:
+        if vs.shape[-2] % 2:
+            pad = [(0, 0)] * (vs.ndim - 2) + [(0, 1), (0, 0)]
+            vs = jnp.pad(vs, pad, constant_values=neg)
+            is_ = jnp.pad(is_, pad, constant_values=0)
+        vs, is_ = _merge_desc(vs[..., 0::2, :], is_[..., 0::2, :],
+                              vs[..., 1::2, :], is_[..., 1::2, :], k, use_mxu)
+    return vs[..., 0, :], is_[..., 0, :]
+
+
+def local_topk_desc(
+    x: jnp.ndarray,
+    k: int,
+    *,
+    block: int = 128,
+    offset=0,
+    use_mxu: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise descending top-k of (B, E) with global indices ``+offset``.
+
+    The in-kernel algorithm of ``router_topk_pallas`` as plain jnp: N-sorter
+    per block, then a log-depth tree of truncated LOMS merges. Safe inside
+    shard_map/vmap (no pallas_call)."""
+    bsz, e = x.shape
+    neg = sentinel_min(x.dtype)
+    nblk = -(-e // block)
+    ep = nblk * block
+    if ep != e:
+        x = jnp.pad(x, [(0, 0), (0, ep - e)], constant_values=neg)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + jnp.asarray(
+        offset, jnp.int32
+    )
+    xb = x.reshape(bsz, nblk, block)
+    ib = idx.reshape(bsz, nblk, block)
+    vs, is_ = sort_nsorter(xb, ib, use_mxu=use_mxu)
+    kk = min(k, block)
+    vs = vs[..., ::-1][..., :kk]
+    is_ = is_[..., ::-1][..., :kk]
+    vs, is_ = _tree_reduce_desc(vs, is_, k, use_mxu)
+    if vs.shape[-1] < k:  # degenerate: fewer candidates than k on this shard
+        pad = [(0, 0)] * (vs.ndim - 1) + [(0, k - vs.shape[-1])]
+        vs = jnp.pad(vs, pad, constant_values=neg)
+        is_ = jnp.pad(is_, pad, constant_values=0)
+    return vs, is_
+
+
+def _butterfly_topk(vals, idxs, k: int, axis: str, size: int, use_mxu: bool):
+    """XOR-partner butterfly: after log2(size) exchange+merge steps every
+    shard holds the identical global top-k."""
+    step = 1
+    while step < size:
+        perm = [(i, i ^ step) for i in range(size)]
+        ov = jax.lax.ppermute(vals, axis, perm)
+        oi = jax.lax.ppermute(idxs, axis, perm)
+        vals, idxs = _merge_desc(vals, idxs, ov, oi, k, use_mxu)
+        step *= 2
+    return vals, idxs
+
+
+def tree_topk(
+    x: jnp.ndarray,
+    k: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    axis: Optional[str] = None,
+    block: int = 128,
+    use_mxu: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Descending top-k (values, int32 indices) over the last axis of (B, E).
+
+    With ``mesh``/``axis`` given and the axis larger than 1, E is treated as
+    sharded over that axis and reduced by the device-tree; otherwise this is
+    the single-device log-tree (same merge network, local edges)."""
+    assert x.ndim == 2, x.shape
+    bsz, e = x.shape
+    if mesh is None or axis is None or mesh.shape[axis] == 1:
+        vs, is_ = local_topk_desc(x, k, block=block, use_mxu=use_mxu)
+        return vs, is_
+    size = int(mesh.shape[axis])
+    assert e % size == 0, (e, size)
+    shard = e // size
+    pow2 = size & (size - 1) == 0
+
+    def body(xs):  # xs: (B, E/size) local shard
+        me = jax.lax.axis_index(axis)
+        off = (me * shard).astype(jnp.int32)
+        vs, is_ = local_topk_desc(xs, k, block=min(block, shard), offset=off,
+                                  use_mxu=use_mxu)
+        if pow2:
+            return _butterfly_topk(vs, is_, k, axis, size, use_mxu)
+        allv = jax.lax.all_gather(vs, axis, axis=1)  # (B, S, k)
+        alli = jax.lax.all_gather(is_, axis, axis=1)
+        return _tree_reduce_desc(allv, alli, k, use_mxu)
+
+    from repro.parallel.sharding import shard_map_compat
+
+    fn = shard_map_compat(
+        body,
+        mesh,
+        in_specs=P(None, axis),
+        out_specs=(P(None, None), P(None, None)),
+    )
+    return fn(x)
+
+
+def tree_topk_for(par, x: jnp.ndarray, k: int, **kw):
+    """Top-k routed by a :class:`repro.parallel.sharding.Parallelism`: the
+    device-tree over the TP axis when the vocab divides it, else local."""
+    from repro.parallel.sharding import vocab_topk_axis
+
+    axis = vocab_topk_axis(par, x.shape[-1]) if par is not None else None
+    if axis is None:
+        return tree_topk(x, k, **kw)
+    return tree_topk(x, k, mesh=par.mesh, axis=axis, **kw)

@@ -1,0 +1,224 @@
+"""Streaming subsystem: chunked merges, device-tree top-k, planner cache.
+
+Multi-device cases run in a subprocess (pattern from test_sharding.py) so
+the forced host-device-count flag never leaks into other tests.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.kway import kway_merge_pallas
+from repro.kernels.loms_merge import loms_merge2_pallas
+from repro.core.loms import loms_kway
+from repro.streaming import (
+    AutotuneCache,
+    MergePlan,
+    autotune_merge2,
+    chunked_merge,
+    chunked_merge_k,
+    plan_chunked,
+    plan_key,
+    plan_merge2,
+    tree_topk,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _sorted(shape, dtype=jnp.float32, hi=50_000):
+    return jnp.sort(jnp.asarray(RNG.integers(0, hi, shape)).astype(dtype), -1)
+
+
+# ---------------------------------------------------------------------------
+# chunked merges
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+def test_chunked_merge_long_sequences(dtype):
+    """>=16x the tile size, ragged lengths, ragged batch: bit-identical to
+    np.sort of the concatenation."""
+    tile = 64
+    hi = 200 if dtype == jnp.bfloat16 else 50_000  # keep bf16 exact
+    a = jnp.sort(jnp.asarray(RNG.integers(0, hi, (3, 16 * tile))).astype(dtype), -1)
+    b = jnp.sort(jnp.asarray(RNG.integers(0, hi, (3, 16 * tile + 37))).astype(dtype), -1)
+    out = chunked_merge(a, b, tile=tile)
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1)
+    assert out.dtype == a.dtype
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_chunked_merge_unbatched_and_tiny():
+    a = _sorted((1000,))
+    b = _sorted((3,))
+    out = chunked_merge(a, b, tile=32)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.sort(np.concatenate([np.asarray(a), np.asarray(b)]))
+    )
+
+
+def test_chunked_merge_matches_plan_default():
+    a, b = _sorted((2, 700)), _sorted((2, 700))
+    plan = plan_chunked(700, 700, batch=2, dtype=jnp.float32)
+    out = chunked_merge(a, b, plan=plan)
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@pytest.mark.parametrize("lens", [(100, 45, 210), (64, 64, 64, 64), (33, 1, 500)])
+def test_chunked_merge_k(lens):
+    lists = [_sorted((2, n)) for n in lens]
+    out = chunked_merge_k(lists, tile=32)
+    ref = np.sort(np.concatenate([np.asarray(x) for x in lists], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_chunked_merge_k_long():
+    """k-way with every list >=16x the tile."""
+    tile = 16
+    lists = [_sorted((1, 16 * tile + d)) for d in (0, 5, 11)]
+    out = chunked_merge_k(lists, tile=tile)
+    ref = np.sort(np.concatenate([np.asarray(x) for x in lists], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+# ---------------------------------------------------------------------------
+# ragged-batch auto padding in the kernels (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_loms_merge2_ragged_batch():
+    a, b = _sorted((5, 8)), _sorted((5, 12))
+    out = loms_merge2_pallas(a, b, block_batch=4)
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1)
+    assert out.shape == (5, 20)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_kway_ragged_batch():
+    sched = loms_kway((4, 4, 4))
+    x = jnp.concatenate([_sorted((7, 4)) for _ in range(3)], -1)
+    out = kway_merge_pallas(x, sched, block_batch=4)
+    assert out.shape == (7, 12)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x), -1))
+
+
+# ---------------------------------------------------------------------------
+# device-tree top-k
+# ---------------------------------------------------------------------------
+
+
+def test_tree_topk_single_device():
+    x = jnp.asarray(RNG.standard_normal((4, 1000)), jnp.float32)
+    v, i = tree_topk(x, 8)
+    rv, ri = jax.lax.top_k(x, 8)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+MULTIDEV_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.streaming import tree_topk
+from repro.parallel.sharding import Parallelism, vocab_topk_axis
+from repro.serving.sample import sample_topk
+
+rng = np.random.default_rng(3)
+results = {}
+
+# butterfly (8 shards, power of two) and gather-tree (6 shards) paths
+for shards in (8, 6):
+    mesh = Mesh(np.array(jax.devices()[:shards]).reshape(1, shards),
+                ("data", "model"))
+    x = jnp.asarray(rng.standard_normal((4, shards * 96)), jnp.float32)
+    v, i = tree_topk(x, 16, mesh=mesh, axis="model")
+    rv, ri = jax.lax.top_k(x, 16)
+    results[f"vals_{shards}"] = bool(np.allclose(np.asarray(v), np.asarray(rv)))
+    results[f"idx_{shards}"] = bool(np.array_equal(np.asarray(i), np.asarray(ri)))
+
+# serving sampler path: sharded vocab top-k feeds the categorical draw
+mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+par = Parallelism(mesh=mesh, dp_axes=("data",), tp_axis="model")
+logits = jnp.asarray(rng.standard_normal((8, 8 * 128)), jnp.float32)
+results["axis"] = vocab_topk_axis(par, logits.shape[-1])
+toks = sample_topk(jax.random.PRNGKey(0), logits, k=8, temperature=1.0,
+                   par=par)
+support = np.asarray(jax.lax.top_k(logits, 8)[1])
+results["sampler_in_support"] = bool(all(
+    int(toks[b]) in support[b] for b in range(logits.shape[0])))
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_tree_topk_sharded_matches_lax_topk():
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SNIPPET],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests", 1)[0],
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["vals_8"] and res["idx_8"], res
+    assert res["vals_6"] and res["idx_6"], res
+    assert res["axis"] == "model"
+    assert res["sampler_in_support"]
+
+
+# ---------------------------------------------------------------------------
+# planner + autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_merge2_heuristics():
+    p = plan_merge2(64, 64, batch=8, dtype=jnp.float32)
+    assert p.kind == "loms" and 64 % p.n_cols == 0 and p.block_batch >= 1
+    # integer values must avoid the lossy f32 one-hot matmul
+    assert plan_merge2(64, 64, batch=8, dtype=jnp.int32).use_mxu is False
+    # ragged sizes fall back to the schedule executor
+    assert plan_merge2(7, 11, batch=8, dtype=jnp.float32).kind == "schedule"
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    cache = AutotuneCache(path)
+    plan = autotune_merge2(16, 16, batch=4, dtype=jnp.float32, cache=cache,
+                           iters=1)
+    assert plan.source == "autotune"
+    # same problem again: served from the in-memory cache
+    again = autotune_merge2(16, 16, batch=4, dtype=jnp.float32, cache=cache,
+                            iters=1)
+    assert again.source == "cache"
+    assert (again.n_cols, again.block_batch, again.use_mxu) == (
+        plan.n_cols, plan.block_batch, plan.use_mxu)
+    # and from a fresh process-equivalent: a new object reading the file
+    fresh = AutotuneCache(path)
+    key = plan_key("merge2", shapes=(4, 16, 16), dtype="float32")
+    entry = fresh.get(key)
+    assert entry is not None and "us" in entry
+    assert MergePlan.from_entry(entry).n_cols == plan.n_cols
+
+
+def test_autotuned_plan_is_correct(tmp_path):
+    """Whatever the tuner picks must still produce the exact merge."""
+    cache = AutotuneCache(str(tmp_path / "t.json"))
+    plan = autotune_merge2(32, 32, batch=4, dtype=jnp.float32, cache=cache,
+                           iters=1)
+    a, b = _sorted((4, 32)), _sorted((4, 32))
+    out = loms_merge2_pallas(a, b, n_cols=plan.n_cols,
+                             block_batch=plan.block_batch,
+                             use_mxu=plan.use_mxu)
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out), ref)
