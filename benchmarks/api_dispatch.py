@@ -1,0 +1,80 @@
+"""Dispatch-layer benchmark: auto-routing overhead + the backend table.
+
+Two questions the unified API (repro.api, DESIGN.md §9) must answer:
+
+1. What does ``backend="auto"`` cost over calling the chosen realization
+   directly? Measured both jitted (steady state — the planner runs at
+   trace time, so the answer should be ~0) and eager (per-call planning +
+   canonicalization overhead).
+2. What does the planner actually choose? Emits the decision table for
+   the README / DESIGN.md §9.
+
+  PYTHONPATH=src python -m benchmarks.api_dispatch
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.api import schedules
+from repro.kernels.loms_merge import loms_merge2_pallas
+from repro.kernels.ops import topk as kernel_topk
+
+from .common import emit, timeit
+
+
+def dispatch_overhead():
+    rng = np.random.default_rng(0)
+
+    # --- merge: auto vs the direct kernel / executor calls ----------------
+    a = jnp.sort(jnp.asarray(rng.standard_normal((8, 256)), jnp.float32), -1)
+    b = jnp.sort(jnp.asarray(rng.standard_normal((8, 256)), jnp.float32), -1)
+    f_auto = jax.jit(lambda x, y: repro.merge(x, y))
+    f_sched = jax.jit(schedules.merge)
+    f_kern = jax.jit(lambda x, y: loms_merge2_pallas(x, y, n_cols=4))
+    emit("dispatch/merge_auto_jit/256", timeit(f_auto, a, b) * 1e6,
+         "repro.merge, planner at trace time")
+    emit("dispatch/merge_schedule_jit/256", timeit(f_sched, a, b) * 1e6,
+         "schedules.merge direct")
+    emit("dispatch/merge_kernel_jit/256", timeit(f_kern, a, b) * 1e6,
+         "loms_merge2_pallas direct")
+    # eager: per-call spec build + plan() + axis canonicalization
+    emit("dispatch/merge_auto_eager/256",
+         timeit(lambda x, y: repro.merge(x, y), a, b) * 1e6,
+         "un-jitted, includes planning per call")
+    emit("dispatch/merge_schedule_eager/256",
+         timeit(schedules.merge, a, b) * 1e6, "un-jitted direct")
+
+    # --- topk: auto vs direct ---------------------------------------------
+    logits = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
+    f_auto = jax.jit(lambda x: repro.topk(x, 64)[0])
+    f_kern = jax.jit(lambda x: kernel_topk(x, 64)[0])
+    f_sched = jax.jit(lambda x: schedules.topk(x, 64)[0])
+    emit("dispatch/topk_auto_jit/4096", timeit(f_auto, logits) * 1e6,
+         "repro.topk auto")
+    emit("dispatch/topk_kernel_jit/4096", timeit(f_kern, logits) * 1e6,
+         "kernels.ops.topk direct")
+    emit("dispatch/topk_schedule_jit/4096", timeit(f_sched, logits) * 1e6,
+         "schedules.topk direct")
+
+
+def backend_table():
+    print("\nbackend-choice table (repro.decision_table):")
+    rows = repro.decision_table()
+    header = f"{'problem':<44} {'payload':<8} {'sharded':<8} {'backend':<10} detail"
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(f"{r['problem']:<44} {str(r['payload']):<8} "
+              f"{str(r['sharded']):<8} {r['backend']:<10} {r['detail']}")
+
+
+def run():
+    dispatch_overhead()
+    backend_table()
+
+
+if __name__ == "__main__":
+    run()

@@ -11,8 +11,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import topk as loms_topk
-from repro.kernels import topk as kernel_topk
+from repro.api import topk as unified_topk
 from repro.models.moe import _positions_cumsum, _positions_sorted
 from .common import emit, timeit
 
@@ -22,7 +21,8 @@ def run():
     # (a) router top-k: deepseek (64e top-6) and qwen3-moe (128e top-8)
     for e, k in ((64, 6), (128, 8), (160, 6)):
         logits = jnp.asarray(rng.standard_normal((4096, e)), jnp.float32)
-        f_loms = jax.jit(lambda x: loms_topk(x, k, block=32))
+        f_loms = jax.jit(lambda x: unified_topk(x, k, block=32,
+                                                backend="schedule"))
         f_xla = jax.jit(lambda x: jax.lax.top_k(x, k))
         emit(f"moe_router/loms/e{e}k{k}", timeit(f_loms, logits) * 1e6,
              "blockwise LOMS merge")
@@ -31,7 +31,7 @@ def run():
     # (b) vocab top-k (decode sampling)
     v = 32_000
     logits = jnp.asarray(rng.standard_normal((8, v)), jnp.float32)
-    f_kern = jax.jit(lambda x: kernel_topk(x, 64))
+    f_kern = jax.jit(lambda x: unified_topk(x, 64, backend="pallas"))
     f_xla = jax.jit(lambda x: jax.lax.top_k(x, 64))
     emit("vocab_topk/loms_kernel/v32k", timeit(f_kern, logits, iters=3) * 1e6, "")
     emit("vocab_topk/xla/v32k", timeit(f_xla, logits, iters=3) * 1e6, "")

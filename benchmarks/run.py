@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import fig11_12_speed_2way, fig13_resources_2way
+    from . import api_dispatch, fig11_12_speed_2way, fig13_resources_2way
     from . import fig14_17_lut_modes, fig18_20_3way, moe_routing
     from . import streaming_merge
 
@@ -28,6 +28,7 @@ def main() -> None:
         "fig18_20": fig18_20_3way,
         "moe_routing": moe_routing,
         "streaming": streaming_merge,
+        "api_dispatch": api_dispatch,
     }
     print("name,us_per_call,derived")
     for name, mod in modules.items():

@@ -1,38 +1,66 @@
-"""Quickstart: the paper's List Offset Merge Sorters as a JAX library.
+"""Quickstart: the paper's List Offset Merge Sorters behind one namespace.
 
   PYTHONPATH=src python examples/quickstart.py
+
+``repro.merge / merge_k / sort / topk / median_of_lists`` — callers state
+*what* to sort (any axis, either direction, stable or not, arbitrary
+pytree payloads riding the permutation) and the planner picks *how*:
+schedule executor, Pallas kernel, chunked streaming pipeline, or the
+device-tree sharded reduction (DESIGN.md §9).
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (depth, comparator_count, loms_2way, loms_kway,
-                        merge, merge_k, merge_schedule, median_of_lists,
-                        sort, topk)
+import repro
+from repro import SortSpec
+from repro.api import schedules
+from repro.core import comparator_count, depth, loms_2way, loms_kway
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # --- 2-way merge: any UP-x/DN-y mixture, always 2 stages -------------
+    # --- 2-way merge: any UP-x/DN-y mixture, always a 2-stage device ------
     a = jnp.sort(jnp.asarray(rng.integers(0, 100, 7)))
     b = jnp.sort(jnp.asarray(rng.integers(0, 100, 5)))
-    print("UP-7/DN-5 merged:", merge(a, b))
+    print("UP-7/DN-5 merged:", repro.merge(a, b))
     print("  LOMS stages:", depth(loms_2way(7, 5)),
-          "| Batcher 8+8 stages:", depth(merge_schedule(8, 8, "batcher-oe")))
+          "| Batcher 8+8 stages:",
+          depth(schedules.merge_schedule(8, 8, "batcher-oe")))
 
     # --- 3-way merge + 2-stage median (paper Fig. 6) ----------------------
     lists = [jnp.sort(jnp.asarray(rng.integers(0, 100, 7))) for _ in range(3)]
-    print("3c_7r merged:", merge_k(lists))
-    print("median after 2 stages:", median_of_lists(lists))
+    print("3c_7r merged:", repro.merge_k(lists))
+    print("median after 2 stages:", repro.median_of_lists(lists))
     s3 = loms_kway((7, 7, 7))
     print("  stages:", depth(s3), "comparators:", comparator_count(s3))
 
-    # --- batched full sort + top-k (the LLM hot paths) --------------------
+    # --- uniform semantics: axis, descending, stable, pytree payloads -----
     x = jnp.asarray(rng.standard_normal((4, 160)), jnp.float32)
-    v, i = topk(x, 6, block=32)  # the MoE router op (blockwise LOMS merges)
+    col_sorted = repro.sort(x, axis=0, descending=True)  # sort each column
+    print("axis=0 descending sort ok:",
+          bool((jnp.diff(col_sorted, axis=0) <= 0).all()))
+    toks = jnp.asarray(rng.integers(0, 50, 12), jnp.int32)
+    emb = jnp.asarray(rng.standard_normal((12, 8)), jnp.float32)
+    sorted_toks, carried = repro.sort(
+        toks, stable=True, payload={"emb": emb, "pos": jnp.arange(12)})
+    print("pytree payload rides the permutation:",
+          sorted_toks.shape, carried["emb"].shape, carried["pos"][:4])
+
+    # --- top-k (the MoE-router / sampler primitive), planner-routed -------
+    v, i = repro.topk(x, 6)
     print("router top-6 values:", np.asarray(v[0]).round(2))
     print("full sort matches numpy:",
-          bool((np.asarray(sort(x)) == np.sort(np.asarray(x), -1)).all()))
+          bool((np.asarray(repro.sort(x)) == np.sort(np.asarray(x), -1)).all()))
+
+    # --- the dispatch layer is inspectable --------------------------------
+    for spec in (
+        SortSpec(op="topk", lengths=(x.shape[-1],), k=6, batch=4, device="cpu"),
+        SortSpec(op="topk", lengths=(152_064,), k=64, batch=8, device="tpu"),
+        SortSpec(op="merge", lengths=(100_000, 100_000), device="tpu"),
+    ):
+        d = repro.plan(spec)
+        print(f"plan {spec.describe():42s} -> {d.backend}/{d.detail}")
 
 
 if __name__ == "__main__":

@@ -9,9 +9,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro
+from repro import SortSpec
 from repro.streaming import (
     autotune_merge2,
-    chunked_merge,
     chunked_merge_k,
     plan_chunked,
     tree_topk,
@@ -22,14 +23,17 @@ from repro.streaming.cache import AutotuneCache
 def main():
     rng = np.random.default_rng(0)
 
-    # 1) two sorted streams far larger than any single kernel tile
+    # 1) two sorted streams far larger than any single kernel tile: the
+    #    unified API's planner routes this to the chunked pipeline itself
     a = jnp.sort(jnp.asarray(rng.standard_normal(100_000), jnp.float32))
     b = jnp.sort(jnp.asarray(rng.standard_normal(100_000), jnp.float32))
+    dec = repro.plan(SortSpec(op="merge", lengths=(100_000, 100_000),
+                              device=jax.default_backend()))
     plan = plan_chunked(a.shape[-1], b.shape[-1], batch=1)
-    out = chunked_merge(a, b, plan=plan)
+    out = repro.merge(a, b)
     ok = bool(jnp.all(out[1:] >= out[:-1]))
-    print(f"chunked 2-way: merged {out.shape[-1]} elems "
-          f"in {plan.tile}-wide tiles, sorted={ok}")
+    print(f"repro.merge -> {dec.backend}/{dec.detail}: merged "
+          f"{out.shape[-1]} elems in {plan.tile}-wide tiles, sorted={ok}")
 
     # 2) k-way: ragged per-shard candidate lists
     lists = [jnp.sort(jnp.asarray(rng.standard_normal(n), jnp.float32))

@@ -1,0 +1,46 @@
+"""repro — List Offset Merge Sorters (LOMS/S2MS) reproduction in JAX/Pallas.
+
+The top level re-exports the unified sort API (see ``repro.api``): one
+namespace, planner-driven backend selection, pytree payloads.
+
+    import repro
+    vals, idx = repro.topk(logits, 64)          # auto-routed
+    merged = repro.merge(a, b, axis=0)          # any axis
+    x, tree = repro.sort(x, stable=True, payload={"emb": emb})
+
+Subsystems: ``repro.core`` (schedules + executor), ``repro.kernels``
+(Pallas TPU sorters), ``repro.streaming`` (chunked pipelines, planner,
+device-tree top-k), ``repro.models`` / ``repro.serving`` (the LLM stack
+consuming them).
+"""
+from repro.api import (  # noqa: F401
+    Backend,
+    Decision,
+    SortSpec,
+    backend_names,
+    decision_table,
+    get_backend,
+    median_of_lists,
+    merge,
+    merge_k,
+    plan,
+    register_backend,
+    sort,
+    topk,
+)
+
+__all__ = [
+    "Backend",
+    "Decision",
+    "SortSpec",
+    "backend_names",
+    "decision_table",
+    "get_backend",
+    "median_of_lists",
+    "merge",
+    "merge_k",
+    "plan",
+    "register_backend",
+    "sort",
+    "topk",
+]

@@ -1,0 +1,24 @@
+"""repro.api — the unified sort dispatch layer (DESIGN.md §9).
+
+One namespace over every merge/sort realization in the repo: callers state
+*what* to sort (``merge``/``merge_k``/``sort``/``topk``/``median_of_lists``
+with ``axis``/``descending``/``stable``/pytree ``payload``) and the
+planner-driven dispatcher picks *how* (schedule executor, Pallas kernel,
+chunked streaming pipeline, or the device-tree sharded reduction). The
+same functions are re-exported at the top level: ``repro.topk(...)``.
+"""
+from .dispatch import Decision, ROUTER_TOPK_MAX, decision_table, plan  # noqa: F401
+from .ops import (  # noqa: F401
+    median_of_lists,
+    merge,
+    merge_k,
+    sort,
+    topk,
+)
+from .registry import (  # noqa: F401
+    Backend,
+    backend_names,
+    get_backend,
+    register_backend,
+)
+from .spec import SortSpec  # noqa: F401

@@ -1,0 +1,190 @@
+"""Planner-driven backend selection for the unified sort ops.
+
+``plan(spec, par)`` maps a :class:`~repro.api.spec.SortSpec` to a
+:class:`Decision` — which backend runs the problem and why. The rules lean
+on :mod:`repro.streaming.planner` (the paper's comparator cost model plus
+the VMEM budget from DESIGN.md §2), the live JAX platform, and the offered
+sharding, so callers state *what* to sort and this module picks *how* —
+the one-abstraction-many-realizations stance of the merge literature
+(FLiMS, Merge Path) applied to our device family.
+
+The decision table (DESIGN.md §9):
+
+  op       condition                                  backend    detail
+  -------  -----------------------------------------  ---------  -----------
+  topk     TP-sharded vocab (Parallelism + divisible) sharded    tree_topk
+  topk     TPU, axis > 512                            pallas     vocab_topk
+  topk     TPU, axis <= 512                           pallas     router_topk
+  topk     otherwise (CPU/GPU hosts)                  schedule   blockwise
+  merge    payload / stable (perm needed)             schedule   payload
+  merge    ragged lengths (no common column count)    schedule   ragged
+  merge    working set past the VMEM budget           streaming  chunked
+  merge    TPU, fits VMEM                             pallas     loms_merge2
+  merge    otherwise                                  schedule   loms_2way
+  merge_k  same ladder as merge                       ...        kway/chunked
+  sort     always (no Pallas full-sort kernel yet)    schedule   merge_tree
+  median   TPU + equal odd lists, no perm             pallas     kway_median
+  median   otherwise                                  schedule   loms_median
+
+Explicit ``backend=`` hints skip the ladder but are still validated against
+the backend's capability predicate, so impossible asks fail loudly instead
+of silently computing the wrong thing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.topk import ROUTER_TOPK_MAX  # noqa: F401  (re-exported)
+
+from .registry import get_backend
+from .spec import BACKEND_AUTO, SortSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One routing outcome: backend name, kernel detail, human reason."""
+
+    backend: str
+    detail: str = ""
+    reason: str = ""
+
+
+def _merge2_fits_vmem(spec: SortSpec) -> bool:
+    from repro.streaming.planner import fits_vmem
+
+    m, n = spec.lengths[0], sum(spec.lengths[1:])
+    return fits_vmem(m, n, dtype=jnp.dtype(spec.dtype))
+
+
+def _kway_fits_vmem(spec: SortSpec) -> bool:
+    # the schedule-driven k-way kernel materializes the cross-list
+    # comparison cloud: total^2 f32 per batch row (planner plan_chunked_k)
+    from repro.streaming.planner import vmem_budget
+
+    return spec.total * spec.total * 4 <= vmem_budget()
+
+
+def plan(spec: SortSpec, par=None) -> Decision:
+    """Resolve the backend for one problem. Pure function of (spec, par)."""
+    if spec.backend != BACKEND_AUTO:
+        be = get_backend(spec.backend)
+        if not be.supports(spec):
+            raise ValueError(
+                f"backend {spec.backend!r} cannot run {spec.describe()} "
+                f"(payload/stable={spec.needs_perm}, network={spec.network!r})"
+            )
+        return Decision(spec.backend, detail="explicit", reason="caller override")
+
+    if spec.op == "topk":
+        if spec.sharded:
+            return Decision(
+                "sharded", "tree_topk",
+                "TP-sharded vocab: log-depth merge reduction over the mesh axis",
+            )
+        if spec.device == "tpu":
+            if spec.total > ROUTER_TOPK_MAX:
+                return Decision(
+                    "pallas", "vocab_topk",
+                    f"TPU, axis {spec.total} > {ROUTER_TOPK_MAX}: two-phase "
+                    "block kernel + truncated merge levels",
+                )
+            return Decision(
+                "pallas", "router_topk",
+                f"TPU, axis {spec.total} <= {ROUTER_TOPK_MAX}: single-kernel "
+                "blockwise top-k",
+            )
+        return Decision(
+            "schedule", "blockwise_topk",
+            f"{spec.device or 'non-TPU'} host: pure-JAX truncated-merge tree",
+        )
+
+    if spec.op == "sort":
+        return Decision(
+            "schedule", "loms_merge_tree",
+            "full sort = 2-sorter pairs + LOMS merge tree (no Pallas "
+            "full-sort kernel yet)",
+        )
+
+    if spec.op == "median":
+        if spec.device == "tpu" and get_backend("pallas").supports(spec):
+            return Decision("pallas", "kway_median", "TPU, equal odd lists")
+        return Decision("schedule", "loms_median", "schedule executor median")
+
+    # merge / merge_k
+    if spec.needs_perm:
+        return Decision(
+            "schedule", "payload",
+            "payload/stable needs the permutation-carrying executor",
+        )
+    if spec.network != "loms":
+        # pallas/streaming realize the LOMS devices only; an explicit
+        # Batcher/MWMS/tree ask must not be silently swapped for LOMS
+        return Decision(
+            "schedule", "network",
+            f"non-default network {spec.network!r}: schedule executor",
+        )
+    if spec.op == "merge":
+        if spec.ragged2:
+            return Decision(
+                "schedule", "ragged",
+                "no common column count divides both lists: hole-y setup "
+                "array, executor handles it",
+            )
+        if not _merge2_fits_vmem(spec):
+            return Decision(
+                "streaming", "chunked_merge",
+                "working set past the VMEM budget: fixed-tile carry-buffer "
+                "pipeline",
+            )
+        if spec.device == "tpu":
+            return Decision("pallas", "loms_merge2", "TPU, fits VMEM")
+        return Decision(
+            "schedule", "loms_2way", f"{spec.device or 'non-TPU'} host"
+        )
+    # merge_k
+    if not _kway_fits_vmem(spec):
+        return Decision(
+            "streaming", "chunked_merge_k",
+            "comparison cloud past the VMEM budget: merge-path tiled pipeline",
+        )
+    if spec.device == "tpu":
+        return Decision("pallas", "kway_merge", "TPU, fits VMEM")
+    return Decision("schedule", "loms_kway", f"{spec.device or 'non-TPU'} host")
+
+
+def decision_table(device: Optional[str] = None) -> List[dict]:
+    """Representative routing grid for docs and the dispatch benchmark."""
+    devices = (device,) if device else ("cpu", "tpu")
+    rows: List[dict] = []
+    cases = []
+    for dev in devices:
+        cases += [
+            SortSpec(op="topk", lengths=(256,), k=8, batch=64, device=dev),
+            SortSpec(op="topk", lengths=(32_000,), k=64, batch=8, device=dev),
+            SortSpec(op="topk", lengths=(32_000,), k=64, batch=8, device=dev,
+                     sharded=True),
+            SortSpec(op="merge", lengths=(512, 512), batch=8, device=dev),
+            SortSpec(op="merge", lengths=(7, 5), batch=8, device=dev),
+            SortSpec(op="merge", lengths=(100_000, 100_000), device=dev),
+            SortSpec(op="merge", lengths=(512, 512), batch=8, device=dev,
+                     has_payload=True),
+            SortSpec(op="merge_k", lengths=(64,) * 4, batch=8, device=dev),
+            SortSpec(op="merge_k", lengths=(50_000,) * 4, device=dev),
+            SortSpec(op="sort", lengths=(1024,), batch=8, device=dev),
+            SortSpec(op="median", lengths=(7, 7, 7), batch=8, device=dev),
+        ]
+    for spec in cases:
+        dec = plan(spec)
+        rows.append({
+            "op": spec.op,
+            "problem": spec.describe(),
+            "sharded": spec.sharded,
+            "payload": spec.has_payload,
+            "backend": dec.backend,
+            "detail": dec.detail,
+            "reason": dec.reason,
+        })
+    return rows

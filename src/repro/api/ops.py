@@ -1,0 +1,299 @@
+"""The unified sort namespace: ``repro.merge / merge_k / sort / topk / ...``.
+
+One entry point per operation with uniform semantics across every backend:
+
+* ``axis=`` — sort along any axis, not just the last;
+* ``descending=`` — inputs/outputs ordered descending (merges expect the
+  inputs pre-sorted in the same direction);
+* ``stable=`` — index-augmented tie-break: equal values keep ascending
+  input position (earlier list first for merges);
+* ``payload=`` — an arbitrary pytree rides the permutation (leaves may
+  carry extra trailing feature dims);
+* ``backend=`` — ``"auto"`` routes through the planner
+  (:mod:`repro.api.dispatch`); explicit names force a registered backend.
+
+Callers state *what* to sort; the planner picks *how* — schedule executor,
+Pallas kernel, chunked streaming pipeline, or the device-tree sharded
+reduction — based on size, dtype, platform, and an optional
+:class:`~repro.parallel.sharding.Parallelism`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dispatch import plan
+from .payload import (
+    canonical_axis,
+    concat_payload_trees,
+    from_batched_last,
+    stabilize_ties,
+    take_payload_tree,
+    to_batched_last,
+)
+from .registry import get_backend
+from .spec import SortSpec
+
+__all__ = ["merge", "merge_k", "sort", "topk", "median_of_lists"]
+
+
+def _device() -> str:
+    return jax.default_backend()
+
+
+def _iota_rows(length: int, batch: int, reverse: bool, offset: int = 0):
+    pos = jnp.arange(length, dtype=jnp.int32) + offset
+    if reverse:
+        pos = pos[::-1]
+    return jnp.broadcast_to(pos, (batch, length))
+
+
+# ---------------------------------------------------------------------------
+# merge / merge_k
+# ---------------------------------------------------------------------------
+
+
+def merge(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    axis: int = -1,
+    descending: bool = False,
+    stable: bool = False,
+    payload=None,
+    backend: str = "auto",
+    network: str = "loms",
+    par=None,
+):
+    """Merge two lists sorted along ``axis`` into one sorted list.
+
+    ``payload`` is a pair ``(tree_a, tree_b)`` of matching pytrees whose
+    leaves ride the merge permutation. Returns the merged values, or
+    ``(values, merged_payload_tree)`` when a payload is given.
+    """
+    return merge_k(
+        [a, b], axis=axis, descending=descending, stable=stable,
+        payload=payload, backend=backend, network=network, par=par,
+    )
+
+
+def merge_k(
+    lists: Sequence[jnp.ndarray],
+    *,
+    axis: int = -1,
+    descending: bool = False,
+    stable: bool = False,
+    payload=None,
+    backend: str = "auto",
+    network: str = "loms",
+    par=None,
+):
+    """k-way merge of lists sorted along ``axis``.
+
+    ``payload`` is a sequence of pytrees (one per list, matching
+    structures). Returns merged values, or ``(values, payload_tree)``.
+    """
+    lists = list(lists)
+    assert len(lists) >= 2, "need at least two lists"
+    ndim = lists[0].ndim
+    ax = canonical_axis(axis, ndim)
+    lens = tuple(int(x.shape[ax]) for x in lists)
+    flats, lead = [], None
+    for x in lists:
+        f, ld = to_batched_last(x, ax)
+        assert lead is None or ld == lead, [y.shape for y in lists]
+        lead = ld
+        flats.append(f)
+    batch = flats[0].shape[0]
+    spec = SortSpec(
+        op="merge" if len(lists) == 2 else "merge_k",
+        lengths=lens, batch=batch, dtype=jnp.dtype(flats[0].dtype).name,
+        axis=axis, descending=descending, stable=stable,
+        has_payload=payload is not None, network=network, backend=backend,
+        device=_device(),
+    )
+    dec = plan(spec, par)
+    be = get_backend(dec.backend)
+
+    if descending:  # descending-sorted inputs: reverse -> ascending problem
+        flats = [f[:, ::-1] for f in flats]
+    pos = None
+    if spec.needs_perm:
+        offs = [sum(lens[:i]) for i in range(len(lens))]
+        pos = [_iota_rows(ln, batch, descending, off)
+               for ln, off in zip(lens, offs)]
+    opname = "merge" if spec.op == "merge" else "merge_k"
+    if opname == "merge":
+        out2, perm2 = be.run["merge"](flats[0], flats[1], spec=spec,
+                                      pos=None if pos is None else (pos[0], pos[1]))
+    else:
+        out2, perm2 = be.run["merge_k"](flats, spec=spec, pos=pos)
+    if descending:
+        out2 = out2[:, ::-1]
+        perm2 = None if perm2 is None else perm2[:, ::-1]
+    if stable:
+        out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
+    out = from_batched_last(out2, lead, ax, ndim)
+    if payload is None:
+        return out
+    ptree = concat_payload_trees(list(payload), ax, ndim)
+    perm = from_batched_last(perm2, lead, ax, ndim)
+    return out, take_payload_tree(ptree, perm, ax, ndim)
+
+
+# ---------------------------------------------------------------------------
+# sort
+# ---------------------------------------------------------------------------
+
+
+def sort(
+    x: jnp.ndarray,
+    *,
+    axis: int = -1,
+    descending: bool = False,
+    stable: bool = False,
+    payload=None,
+    backend: str = "auto",
+    network: str = "loms",
+    par=None,
+):
+    """Full sort of unsorted values along ``axis``.
+
+    ``payload`` is a pytree whose leaves match ``x``'s shape (extra
+    trailing dims allowed) and ride the sort permutation. Returns sorted
+    values, or ``(values, payload_tree)``.
+    """
+    ndim = x.ndim
+    ax = canonical_axis(axis, ndim)
+    x2, lead = to_batched_last(x, ax)
+    batch, n = x2.shape
+    spec = SortSpec(
+        op="sort", lengths=(n,), batch=batch, dtype=jnp.dtype(x.dtype).name,
+        axis=axis, descending=descending, stable=stable,
+        has_payload=payload is not None, network=network, backend=backend,
+        device=_device(),
+    )
+    dec = plan(spec, par)
+    be = get_backend(dec.backend)
+    pos = _iota_rows(n, batch, False) if spec.needs_perm else None
+    out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos)
+    if descending:  # ascending network sort, reversed read-out
+        out2 = out2[:, ::-1]
+        perm2 = None if perm2 is None else perm2[:, ::-1]
+    if stable:
+        out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
+    out = from_batched_last(out2, lead, ax, ndim)
+    if payload is None:
+        return out
+    perm = from_batched_last(perm2, lead, ax, ndim)
+    return out, take_payload_tree(payload, perm, ax, ndim)
+
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+
+def topk(
+    x: jnp.ndarray,
+    k: int,
+    *,
+    axis: int = -1,
+    descending: bool = True,
+    stable: bool = False,
+    payload=None,
+    backend: str = "auto",
+    block: Optional[int] = None,
+    par=None,
+    with_indices: bool = True,
+):
+    """Top-k along ``axis``: largest ``k`` descending (default), or the
+    smallest ``k`` ascending with ``descending=False``.
+
+    Returns ``(values, indices)`` — indices are positions along ``axis``,
+    int32, with ``-1`` marking pad-sentinel slots. A ``-1`` appears when
+    ``k`` exceeds the real candidates, and can appear when a real value
+    equals the dtype minimum (e.g. masked ``-inf`` logits) and ties the
+    padding; with ``stable=True`` such sentinels order after every real
+    index in the tie. With ``payload`` (a pytree shaped like ``x``),
+    returns ``(values, indices, payload_tree)`` gathered at the winners.
+    With a TP-sharded :class:`Parallelism` whose axis divides the vocab,
+    ``backend="auto"`` routes to the device-tree reduction.
+    """
+    ndim = x.ndim
+    ax = canonical_axis(axis, ndim)
+    x2, lead = to_batched_last(x, ax)
+    batch, n = x2.shape
+    assert 1 <= k <= n, (k, n)
+    sharded = False
+    if par is not None and ax == ndim - 1 and ndim == 2:
+        from repro.parallel.sharding import vocab_topk_axis
+
+        sharded = vocab_topk_axis(par, n) is not None
+    spec = SortSpec(
+        op="topk", lengths=(n,), batch=batch, dtype=jnp.dtype(x.dtype).name,
+        k=k, axis=axis, descending=descending, stable=stable,
+        has_payload=payload is not None, backend=backend, device=_device(),
+        sharded=sharded,
+    )
+    if not descending:
+        # bottom-k ascending: ascending sort prefix (executor path only)
+        if backend not in ("auto", "schedule", "lax"):
+            raise ValueError("descending=False supports backend auto|schedule|lax")
+        be = get_backend("schedule" if backend == "auto" else backend)
+        pos = _iota_rows(n, batch, False)
+        out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos)
+        vals2, idx2 = out2[:, :k], perm2[:, :k]
+    else:
+        dec = plan(spec, par)
+        be = get_backend(dec.backend)
+        vals2, idx2 = be.run["topk"](x2, k, spec=spec, par=par, block=block)
+        idx2 = idx2.astype(jnp.int32)
+    if stable:
+        vals2, idx2 = stabilize_ties(vals2, idx2, descending=descending)
+    vals = from_batched_last(vals2, lead, ax, ndim)
+    idx = from_batched_last(idx2, lead, ax, ndim)
+    if payload is not None:
+        ptree = take_payload_tree(payload, idx, ax, ndim)
+        return vals, idx, ptree
+    if with_indices:
+        return vals, idx
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# median
+# ---------------------------------------------------------------------------
+
+
+def median_of_lists(
+    lists: Sequence[jnp.ndarray],
+    *,
+    axis: int = -1,
+    backend: str = "auto",
+    network: str = "loms",
+    par=None,
+):
+    """Median of k equal odd-length sorted lists (paper §V-A early exit)."""
+    lists = list(lists)
+    ndim = lists[0].ndim
+    ax = canonical_axis(axis, ndim)
+    lens = tuple(int(x.shape[ax]) for x in lists)
+    flats, lead = [], None
+    for x in lists:
+        f, ld = to_batched_last(x, ax)
+        assert lead is None or ld == lead
+        lead = ld
+        flats.append(f)
+    spec = SortSpec(
+        op="median", lengths=lens, batch=flats[0].shape[0],
+        dtype=jnp.dtype(flats[0].dtype).name, axis=axis, network=network,
+        backend=backend, device=_device(),
+    )
+    dec = plan(spec, par)
+    be = get_backend(dec.backend)
+    out2 = be.run["median"](flats, spec=spec)
+    # scalar per batch row: restore the lead shape
+    return out2.reshape(lead)

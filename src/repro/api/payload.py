@@ -1,0 +1,130 @@
+"""Axis canonicalization and pytree payload plumbing for the unified API.
+
+Every backend operates on canonical 2-D problems — ``(batch, length)`` with
+the sort axis last and ascending order. This module supplies the
+translation: moving an arbitrary ``axis`` to the back, flattening leading
+dims, gathering arbitrary pytree payloads through the permutation a backend
+returns, and the lexicographic (value, position) tie-stabilization pass
+that implements ``stable=True`` on top of any backend.
+
+Payload leaves may carry extra *trailing* feature dims beyond the value
+array's shape (e.g. sorting tokens that carry embeddings): the permutation
+broadcasts across them.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def canonical_axis(axis: int, ndim: int) -> int:
+    ax = axis + ndim if axis < 0 else axis
+    if not 0 <= ax < ndim:
+        raise ValueError(f"axis {axis} out of range for ndim {ndim}")
+    return ax
+
+
+def to_batched_last(x: jnp.ndarray, axis: int) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """Move ``axis`` last and flatten the rest -> ((B, L), lead shape)."""
+    ax = canonical_axis(axis, x.ndim)
+    xm = jnp.moveaxis(x, ax, -1)
+    lead = xm.shape[:-1]
+    return xm.reshape((-1, xm.shape[-1])), lead
+
+
+def from_batched_last(
+    x2: jnp.ndarray, lead: Tuple[int, ...], axis: int, ndim: int
+) -> jnp.ndarray:
+    """Inverse of :func:`to_batched_last` (length along the axis may differ,
+    e.g. after a merge grew it or a top-k truncated it)."""
+    ax = canonical_axis(axis, ndim)
+    xm = x2.reshape(lead + (x2.shape[-1],))
+    return jnp.moveaxis(xm, -1, ax)
+
+
+def take_payload_tree(tree, perm: jnp.ndarray, axis: int, ndim: int):
+    """Gather every leaf of ``tree`` at ``perm`` along ``axis``.
+
+    ``perm`` has the shape of the *output* values array (ndim dims) and
+    holds positions along ``axis`` of the input leaves. Leaves must match
+    the value array's shape on its first ``ndim`` dims; extra trailing dims
+    ride along (the permutation broadcasts across them). Negative positions
+    (top-k pad sentinels) clamp to 0 — their values are sentinels anyway.
+    """
+    ax = canonical_axis(axis, ndim)
+    safe = jnp.where(perm < 0, 0, perm)
+
+    def take_leaf(leaf):
+        assert leaf.ndim >= ndim, (leaf.shape, ndim)
+        lm = jnp.moveaxis(leaf, ax, ndim - 1)
+        idx = jnp.moveaxis(safe, ax, ndim - 1)
+        if lm.ndim > ndim:  # broadcast over trailing feature dims
+            idx = idx.reshape(idx.shape + (1,) * (lm.ndim - ndim))
+        out = jnp.take_along_axis(lm, idx, axis=ndim - 1)
+        return jnp.moveaxis(out, ndim - 1, ax)
+
+    return jax.tree.map(take_leaf, tree)
+
+
+def concat_payload_trees(trees, axis: int, ndim: int):
+    """Concatenate per-list payload pytrees along the sort axis (the merge
+    analog of ``concat(lists)``); structures must match across lists."""
+    ax = canonical_axis(axis, ndim)
+    return jax.tree.map(lambda *leaves: jnp.concatenate(leaves, axis=ax), *trees)
+
+
+#: largest last-axis size stabilized with the oblivious comparison cloud;
+#: beyond it the O(L^2) matrix would dwarf the sort itself, so the pass
+#: switches to a run-id lexsort (same result, not oblivious).
+STABILIZE_CLOUD_MAX = 1024
+
+
+def stabilize_ties(
+    vals: jnp.ndarray, perm: jnp.ndarray, descending: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reorder equal-value runs by ascending original position.
+
+    Backends are per-primitive stable but the multi-stage LOMS routing does
+    not preserve global input order among equal keys; this pass restores
+    the index-augmented tie-break the API promises for ``stable=True``.
+    ``vals`` is already value-sorted — only positions within equal-value
+    runs move.
+
+    Up to ``STABILIZE_CLOUD_MAX`` elements this is a depth-1 N-sorter with
+    the lexicographic (value, position) comparison cloud — oblivious,
+    O(L^2) comparators, matching the paper's devices. Past that, the cloud
+    itself would be the memory bottleneck, so the pass switches to sorting
+    ``perm`` keyed by the equal-value run id (O(L log L), identical
+    output, not oblivious).
+
+    Negative positions are top-k pad sentinels, not real inputs: within a
+    tie run they order *after* every real index (a masked -inf logit that
+    ties the dtype-min pad must not be displaced by it).
+    """
+    pos = jnp.where(perm < 0, jnp.iinfo(jnp.int32).max, perm)
+    if vals.shape[-1] > STABILIZE_CLOUD_MAX:
+        # run id increments whenever the (sorted) value changes, so it is
+        # ascending along the axis in both directions; lexsort by
+        # (run, position) moves only within-tie positions.
+        changed = vals[..., 1:] != vals[..., :-1]
+        run = jnp.cumsum(
+            jnp.concatenate(
+                [jnp.zeros_like(changed[..., :1]), changed], axis=-1
+            ).astype(jnp.int32), axis=-1)
+        order = jnp.lexsort((pos, run), axis=-1)
+        return (jnp.take_along_axis(vals, order, axis=-1),
+                jnp.take_along_axis(perm, order, axis=-1))
+    v_i, v_j = vals[..., :, None], vals[..., None, :]
+    p_i, p_j = pos[..., :, None], pos[..., None, :]
+    if descending:
+        before = (v_j > v_i) | ((v_j == v_i) & (p_j < p_i))
+    else:
+        before = (v_j < v_i) | ((v_j == v_i) & (p_j < p_i))
+    rank = before.sum(axis=-1).astype(jnp.int32)
+    out_v = jnp.put_along_axis(jnp.zeros_like(vals), rank, vals, axis=-1,
+                               inplace=False)
+    out_p = jnp.put_along_axis(jnp.zeros_like(perm), rank, perm, axis=-1,
+                               inplace=False)
+    return out_v, out_p

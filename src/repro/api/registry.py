@@ -1,0 +1,272 @@
+"""Backend registry: pluggable realizations of the unified sort ops.
+
+Every backend is a :class:`Backend` — a name, a capability predicate over
+:class:`~repro.api.spec.SortSpec`, and one adapter per op it implements.
+Adapters all speak the same canonical calling convention, so the dispatch
+layer (and any future backend: a GPU Pallas port, a ``jax.lax.sort``
+wrapper, an FPGA bridge) plugs in without touching the public ops:
+
+  merge(a, b, *, spec, pos=None)        -> (out, perm | None)
+  merge_k(lists, *, spec, pos=None)     -> (out, perm | None)
+  sort(x, *, spec, pos=None)            -> (out, perm | None)
+  topk(x, k, *, spec, par=None, block=None) -> (vals desc, idx)
+  median(lists, *, spec)                -> out
+
+Inputs are canonical 2-D ``(batch, length)`` problems, sort axis last,
+ascending (the ops layer handles axis moves, descending flips, stability,
+and payload gathers). ``pos`` is the int32 position payload to thread
+through the permutation when the caller needs it; a backend that cannot
+carry it must say so in ``supports``.
+
+Built-in backends: ``schedule`` (pure-JAX executor — runs everything),
+``pallas`` (TPU kernels), ``streaming`` (chunked pipelines), ``sharded``
+(device-tree top-k over a mesh axis), ``lax`` (XLA reference, explicit
+opt-in only — never chosen by auto).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .spec import SortSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    run: Mapping[str, Callable]  # op name -> adapter
+    supports: Callable[[SortSpec], bool]
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, overwrite: bool = False) -> None:
+    """Add a backend to the registry (``overwrite=True`` to replace)."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def backend_names():
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# schedule — the pure-JAX executor; runs every op, carries payloads
+# ---------------------------------------------------------------------------
+
+
+def _sched_merge(a, b, *, spec, pos=None):
+    from . import schedules
+
+    if pos is None:
+        return schedules.merge(a, b, kind=spec.network), None
+    return schedules.merge(a, b, kind=spec.network, payload=pos)
+
+
+def _sched_merge_k(lists, *, spec, pos=None):
+    from . import schedules
+
+    if pos is None:
+        return schedules.merge_k(lists, kind=spec.network), None
+    return schedules.merge_k(lists, kind=spec.network, payload=pos)
+
+
+def _sched_sort(x, *, spec, pos=None):
+    from . import schedules
+
+    kind = spec.network if spec.network != "batcher-bitonic" else "bitonic"
+    if pos is None:
+        return schedules.sort(x, kind=kind), None
+    return schedules.sort(x, kind=kind, payload=pos)
+
+
+def _sched_topk(x, k, *, spec, par=None, block=None):
+    from . import schedules
+
+    return schedules.topk(x, k, block=block or 0)
+
+
+def _sched_median(lists, *, spec):
+    from . import schedules
+
+    kind = "mwms" if spec.network == "mwms" else "loms"
+    return schedules.median_of_lists(lists, kind=kind)
+
+
+register_backend(Backend(
+    name="schedule",
+    run={"merge": _sched_merge, "merge_k": _sched_merge_k, "sort": _sched_sort,
+         "topk": _sched_topk, "median": _sched_median},
+    supports=lambda spec: True,
+    description="pure-JAX schedule executor (any shape/op, payload-capable, "
+                "GSPMD/shard_map-safe)",
+))
+
+
+# ---------------------------------------------------------------------------
+# pallas — the TPU kernels (interpret mode elsewhere); values only
+# ---------------------------------------------------------------------------
+
+
+def _pallas_merge(a, b, *, spec, pos=None):
+    assert pos is None
+    from repro.kernels.loms_merge import loms_merge2_pallas
+    from repro.streaming.planner import plan_merge2
+
+    plan = plan_merge2(a.shape[-1], b.shape[-1], batch=a.shape[0], dtype=a.dtype)
+    if plan.kind != "loms":  # ragged hole-y layout: executor fallback
+        from . import schedules
+
+        return schedules.merge(a, b), None
+    return loms_merge2_pallas(
+        a, b, n_cols=plan.n_cols, block_batch=plan.block_batch,
+        use_mxu=plan.use_mxu,
+    ), None
+
+
+def _pallas_merge_k(lists, *, spec, pos=None):
+    assert pos is None
+    from repro.kernels.ops import merge_k as kernel_merge_k
+
+    return kernel_merge_k(lists), None
+
+
+def _pallas_topk(x, k, *, spec, par=None, block=None):
+    from repro.kernels.ops import topk as kernel_topk
+
+    return kernel_topk(x, k, block=block)
+
+
+def _pallas_median(lists, *, spec):
+    from repro.kernels.ops import median_k
+
+    return median_k(lists)
+
+
+def _pallas_supports(spec: SortSpec) -> bool:
+    if spec.op == "sort" or spec.network not in ("loms",):
+        return False
+    if spec.op == "topk":
+        return True  # indices are native; payload/stable ride them
+    if spec.needs_perm:
+        return False  # value-only kernels cannot hand back the permutation
+    if spec.op == "median":  # loms_median wants equal odd-length lists
+        return len(set(spec.lengths)) == 1 and spec.lengths[0] % 2 == 1
+    return True
+
+
+register_backend(Backend(
+    name="pallas",
+    run={"merge": _pallas_merge, "merge_k": _pallas_merge_k,
+         "topk": _pallas_topk, "median": _pallas_median},
+    supports=_pallas_supports,
+    description="Pallas TPU kernels (interpret mode off-TPU); value-only "
+                "merges, index-carrying top-k",
+))
+
+
+# ---------------------------------------------------------------------------
+# streaming — chunked pipelines for inputs past the VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def _streaming_merge(a, b, *, spec, pos=None):
+    assert pos is None
+    from repro.streaming import chunked_merge
+
+    return chunked_merge(a, b), None
+
+
+def _streaming_merge_k(lists, *, spec, pos=None):
+    assert pos is None
+    from repro.streaming import chunked_merge_k
+
+    return chunked_merge_k(lists), None
+
+
+register_backend(Backend(
+    name="streaming",
+    run={"merge": _streaming_merge, "merge_k": _streaming_merge_k},
+    supports=lambda spec: spec.op in ("merge", "merge_k") and not spec.needs_perm,
+    description="chunked carry-buffer / merge-path pipelines; fixed working "
+                "set for unbounded inputs",
+))
+
+
+# ---------------------------------------------------------------------------
+# sharded — device-tree top-k over a TP mesh axis
+# ---------------------------------------------------------------------------
+
+
+def _sharded_topk(x, k, *, spec, par=None, block=None):
+    from repro.streaming.tree import tree_topk_for
+
+    assert par is not None, "sharded backend needs a Parallelism"
+    return tree_topk_for(par, x, k)
+
+
+register_backend(Backend(
+    name="sharded",
+    run={"topk": _sharded_topk},
+    supports=lambda spec: spec.op == "topk" and spec.sharded,
+    description="log-depth LOMS reduction over the TP axis (butterfly / "
+                "gather-tree); vocab never gathers to one device",
+))
+
+
+# ---------------------------------------------------------------------------
+# lax — XLA reference implementations (explicit opt-in; never auto-picked)
+# ---------------------------------------------------------------------------
+
+
+def _lax_merge(a, b, *, spec, pos=None):
+    return _lax_sort(jnp.concatenate([a, b], axis=-1), spec=spec, pos=(
+        None if pos is None else jnp.concatenate([pos[0], pos[1]], axis=-1)))
+
+
+def _lax_merge_k(lists, *, spec, pos=None):
+    return _lax_sort(jnp.concatenate(list(lists), axis=-1), spec=spec, pos=(
+        None if pos is None else jnp.concatenate(list(pos), axis=-1)))
+
+
+def _lax_sort(x, *, spec, pos=None):
+    if pos is None:
+        return jnp.sort(x, axis=-1), None
+    order = jnp.argsort(x, axis=-1, stable=True)
+    return (jnp.take_along_axis(x, order, axis=-1),
+            jnp.take_along_axis(pos, order, axis=-1))
+
+
+def _lax_topk(x, k, *, spec, par=None, block=None):
+    vals, idx = jax.lax.top_k(x, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def _lax_median(lists, *, spec):
+    x = jnp.sort(jnp.concatenate(list(lists), axis=-1), axis=-1)
+    return x[..., x.shape[-1] // 2]
+
+
+register_backend(Backend(
+    name="lax",
+    run={"merge": _lax_merge, "merge_k": _lax_merge_k, "sort": _lax_sort,
+         "topk": _lax_topk, "median": _lax_median},
+    supports=lambda spec: True,
+    description="XLA sort/top_k reference (not oblivious; benchmarking and "
+                "cross-checking only)",
+))

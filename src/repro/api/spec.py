@@ -1,0 +1,66 @@
+"""SortSpec: the static problem descriptor the dispatch layer plans from.
+
+One frozen dataclass captures everything the planner needs to choose a
+backend for a call — operation, per-list lengths, batch, dtype, axis,
+ordering/stability flags, payload presence, the caller's backend hint, the
+live JAX platform, and whether a usable TP sharding was offered. Specs are
+plain static data (no arrays), so they can be built inside a jit trace,
+compared in tests, and printed in decision tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+OPS = ("merge", "merge_k", "sort", "topk", "median")
+
+BACKEND_AUTO = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class SortSpec:
+    """Static description of one sort/merge/top-k problem."""
+
+    op: str  # 'merge' | 'merge_k' | 'sort' | 'topk' | 'median'
+    lengths: Tuple[int, ...]  # per-input-list lengths along the sort axis
+    batch: int = 1  # product of all non-sort dims
+    dtype: str = "float32"
+    k: Optional[int] = None  # top-k truncation, if any
+    axis: int = -1  # caller's sort axis (pre-canonicalization)
+    descending: bool = False
+    stable: bool = False  # index-augmented tie-break requested
+    has_payload: bool = False  # a pytree payload rides the permutation
+    network: str = "loms"  # schedule family for the executor backend
+    backend: str = BACKEND_AUTO  # caller hint: auto|schedule|pallas|...
+    device: str = "cpu"  # jax.default_backend() at call time
+    sharded: bool = False  # a Parallelism with a usable TP axis was passed
+
+    def __post_init__(self):
+        assert self.op in OPS, f"unknown op {self.op!r}"
+        assert self.lengths, "at least one input list required"
+
+    @property
+    def total(self) -> int:
+        """Total element count along the sort axis."""
+        return sum(self.lengths)
+
+    @property
+    def n_lists(self) -> int:
+        return len(self.lengths)
+
+    @property
+    def needs_perm(self) -> bool:
+        """True when the backend must hand back the input permutation
+        (payload gathers and stable tie-breaks both consume it)."""
+        return self.stable or self.has_payload
+
+    @property
+    def ragged2(self) -> bool:
+        """2-way merge whose lengths defeat the hole-free kernel layout
+        (no common column count >= 2 divides both lists)."""
+        return self.op == "merge" and any(ln % 2 for ln in self.lengths)
+
+    def describe(self) -> str:
+        shape = "x".join(str(ln) for ln in self.lengths)
+        extra = f" k={self.k}" if self.k is not None else ""
+        return f"{self.op}[{shape}]{extra} b={self.batch} {self.dtype} ({self.device})"

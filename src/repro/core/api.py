@@ -1,305 +1,90 @@
-"""Public functional sorting API built on the oblivious schedules.
+"""DEPRECATED — use the unified :mod:`repro.api` namespace.
 
-Everything here is jit/vmap/pjit-safe pure JAX: static shapes in, fixed
-compare-exchange schedules, no data-dependent control flow. The last axis is
-always the sorted axis; leading axes broadcast (batch).
-
-  merge(a, b)            2-way merge of two sorted lists (LOMS/S2MS/Batcher)
-  merge_k(lists)         k-way merge (LOMS k-way / MWMS / 2-way tree)
-  sort(x)                full sort (2-sorter pairs + LOMS merge tree, or
-                         Batcher bitonic/OEMS, or single-stage rank sort)
-  topk(x, k)             blockwise top-k via truncated LOMS merges
-  median_of_lists(ls)    2-stage LOMS median (paper §V-A)
-  median9(x)             3x3 median filter core (paper ref [19] use case)
+This module was the original public sorting API. The implementations moved
+to :mod:`repro.api.schedules` (the "schedule" backend of the dispatch
+layer) and the public surface is now ``repro.merge / merge_k / sort /
+topk / median_of_lists`` with planner-driven backend selection, any-axis
+support, and pytree payloads. Every function here forwards to its
+replacement and emits a :class:`DeprecationWarning`; the shims last one
+release and then this module goes away.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-from . import batcher as _batcher
-from . import loms as _loms
-from . import mwms as _mwms
-from .networks import (
-    Schedule,
-    apply_schedule,
-    apply_schedule_with_payload,
-    rank_merge_runs,
-    rank_sort,
-)
-
-# ---------------------------------------------------------------------------
-# schedule selection
-# ---------------------------------------------------------------------------
+import warnings
 
 
-def merge_schedule(m: int, n: int, kind: str = "loms", n_cols: int = 2) -> Schedule:
-    if kind == "loms":
-        return _loms.loms_2way(m, n, n_cols)
-    if kind == "s2ms":
-        # single-stage 2-way merge: one merge group over everything
-        from .networks import Group, Stage
-
-        return Schedule(
-            name=f"s2ms_up{m}_dn{n}",
-            size=m + n,
-            setup_scatter=tuple(range(m + n)),
-            output_gather=tuple(range(m + n)),
-            stages=(Stage(groups=(Group(idx=tuple(range(m + n)), runs=(m, n)),)),),
-            meta=(("kind", "s2ms"), ("lens", (m, n))),
-        )
-    if kind == "batcher-oe":
-        return _batcher.oems_merge(m, n)
-    if kind == "batcher-bitonic":
-        return _batcher.bitonic_merge(m, n)
-    raise ValueError(f"unknown merge kind {kind!r}")
-
-
-def merge(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    kind: str = "loms",
-    n_cols: int = 2,
-    payload: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-):
-    """Merge two sorted-ascending lists along the last axis."""
-    m, n = a.shape[-1], b.shape[-1]
-    sched = merge_schedule(m, n, kind, n_cols)
-    x = jnp.concatenate([a, b], axis=-1)
-    if payload is None:
-        return apply_schedule(sched, x)
-    p = jnp.concatenate([payload[0], payload[1]], axis=-1)
-    return apply_schedule_with_payload(sched, x, p)
-
-
-def merge_k(
-    lists: Sequence[jnp.ndarray],
-    kind: str = "loms",
-    payload: Optional[Sequence[jnp.ndarray]] = None,
-):
-    """k-way merge of sorted lists. kind: loms | mwms | tree."""
-    lens = tuple(int(l.shape[-1]) for l in lists)
-    if kind in ("loms", "mwms"):
-        sched = _loms.loms_kway(lens) if kind == "loms" else _mwms.mwms_kway(lens)
-        x = jnp.concatenate(list(lists), axis=-1)
-        if payload is None:
-            return apply_schedule(sched, x)
-        return apply_schedule_with_payload(
-            sched, x, jnp.concatenate(list(payload), axis=-1)
-        )
-    if kind == "tree":  # binary tree of 2-way LOMS merges (prior-art pattern)
-        items = list(lists)
-        pls = list(payload) if payload is not None else None
-        while len(items) > 1:
-            nxt, npl = [], []
-            for i in range(0, len(items) - 1, 2):
-                if pls is None:
-                    nxt.append(merge(items[i], items[i + 1]))
-                else:
-                    v, p = merge(items[i], items[i + 1], payload=(pls[i], pls[i + 1]))
-                    nxt.append(v)
-                    npl.append(p)
-            if len(items) % 2:
-                nxt.append(items[-1])
-                if pls is not None:
-                    npl.append(pls[-1])
-            items, pls = nxt, (npl if pls is not None else None)
-        return items[0] if payload is None else (items[0], pls[0])
-    raise ValueError(f"unknown merge_k kind {kind!r}")
-
-
-# ---------------------------------------------------------------------------
-# full sort
-# ---------------------------------------------------------------------------
-
-
-def _dtype_max(dtype):
-    d = jnp.dtype(dtype)
-    if jnp.issubdtype(d, jnp.floating):
-        return jnp.inf
-    return jnp.iinfo(d).max
-
-
-def sort(x: jnp.ndarray, kind: str = "loms", payload: Optional[jnp.ndarray] = None):
-    """Full ascending sort along the last axis of unsorted values.
-
-    kind='loms': 2-sorter pair stage, then a LOMS 2-way merge tree with
-    doubling runs — every level is a fixed 2-stage device (total depth
-    1 + 2*ceil(log2(n/2)) vs Batcher's ~log^2/2). Non-power-of-two sizes are
-    padded with +max sentinels and sliced back.
-    kind='bitonic'|'oems': Batcher full sorts. kind='rank': single-stage
-    rank sort (the N-sorter; O(n^2) comparators, depth 1).
-    """
-    n = x.shape[-1]
-    if n == 1:
-        return x if payload is None else (x, payload)
-    if kind == "rank":
-        return rank_sort(x, payload)
-    if kind in ("bitonic", "oems"):
-        npad = 1 << (n - 1).bit_length()
-        sched = _batcher.bitonic_sort(npad) if kind == "bitonic" else _batcher.oems_sort(npad)
-        xp = _pad_to(x, npad)
-        if payload is None:
-            return apply_schedule(sched, xp)[..., :n]
-        pp = _pad_to(payload, npad)
-        v, p = apply_schedule_with_payload(sched, xp, pp)
-        return v[..., :n], p[..., :n]
-    if kind != "loms":
-        raise ValueError(f"unknown sort kind {kind!r}")
-    npad = 1 << (n - 1).bit_length()
-    xp = _pad_to(x, npad)
-    pp = _pad_to(payload, npad) if payload is not None else None
-    run = 1
-    while run < npad:
-        # view as rows of two sorted runs and LOMS-merge each pair of runs
-        shape = xp.shape[:-1] + (npad // (2 * run), 2 * run)
-        xv = xp.reshape(shape)
-        if pp is not None:
-            pv = pp.reshape(shape)
-            xv, pv = merge(
-                xv[..., :run], xv[..., run:], payload=(pv[..., :run], pv[..., run:])
+def _deprecated(replacement: str):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            warnings.warn(
+                f"repro.core.api.{fn.__name__} is deprecated; "
+                f"use {replacement} instead",
+                DeprecationWarning,
+                stacklevel=2,
             )
-            pp = pv.reshape(pp.shape)
-        else:
-            xv = merge(xv[..., :run], xv[..., run:])
-        xp = xv.reshape(xp.shape)
-        run *= 2
-    if payload is None:
-        return xp[..., :n]
-    return xp[..., :n], pp[..., :n]
+            return fn(*args, **kwargs)
 
-
-def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
-    pad = n - x.shape[-1]
-    if pad == 0:
-        return x
-    fill = _dtype_max(x.dtype)
-    pad_widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-    return jnp.pad(x, pad_widths, constant_values=fill)
-
-
-# ---------------------------------------------------------------------------
-# top-k via truncated LOMS merges (the MoE-router / sampler primitive)
-# ---------------------------------------------------------------------------
-
-
-def topk(
-    x: jnp.ndarray,
-    k: int,
-    block: int = 0,
-    with_indices: bool = True,
-):
-    """Top-k (descending) along the last axis via blockwise oblivious merge.
-
-    Split the axis into blocks; single-stage rank-sort each block descending;
-    then reduce the per-block top-k sorted lists pairwise with *truncated*
-    LOMS UP-k/DN-k merges (keep the top half). Depth = 1 + 2*ceil(log2(#blocks))
-    stages, comparator count O(n*block + k^2 * n/block).
-    """
-    n = x.shape[-1]
-    assert 1 <= k <= n
-    if block <= 0:
-        block = max(k, 16)
-    block = min(block, n)
-    nblk = -(-n // block)
-    npad = nblk * block
-    neg_inf = -_dtype_max(x.dtype)
-    pad_widths = [(0, 0)] * (x.ndim - 1) + [(0, npad - n)]
-    xp = jnp.pad(x, pad_widths, constant_values=neg_inf)
-    idx = jnp.broadcast_to(jnp.arange(npad, dtype=jnp.int32), xp.shape)
-    xb = xp.reshape(xp.shape[:-1] + (nblk, block))
-    ib = idx.reshape(xp.shape[:-1] + (nblk, block))
-    # descending local sort: rank-sort ascending on negated ordering trick is
-    # dtype-hostile; instead sort ascending and reverse.
-    vs, is_ = rank_sort(xb, ib)
-    vs = vs[..., ::-1][..., : min(k, block)]  # per-block top-k, descending
-    is_ = is_[..., ::-1][..., : min(k, block)]
-    kk = vs.shape[-1]
-    # pairwise truncated merges of descending lists
-    while vs.shape[-2] > 1:
-        g = vs.shape[-2]
-        if g % 2:  # carry odd tail block
-            pad = [(0, 0)] * (vs.ndim - 2) + [(0, 1), (0, 0)]
-            vs = jnp.pad(vs, pad, constant_values=neg_inf)
-            is_ = jnp.pad(is_, pad, constant_values=0)
-            g += 1
-        a_v, b_v = vs[..., 0::2, :], vs[..., 1::2, :]
-        a_i, b_i = is_[..., 0::2, :], is_[..., 1::2, :]
-        # merge two descending lists: reverse -> ascending merge -> take top
-        mv, mi = merge(
-            a_v[..., ::-1], b_v[..., ::-1], payload=(a_i[..., ::-1], b_i[..., ::-1])
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__name__
+        wrapper.__doc__ = (
+            f"Deprecated: use ``{replacement}``.\n\n{fn.__doc__ or ''}"
         )
-        kk = min(k, 2 * kk)
-        vs = mv[..., ::-1][..., :kk]
-        is_ = mi[..., ::-1][..., :kk]
-    vs = vs[..., 0, :k]
-    is_ = is_[..., 0, :k]
-    if with_indices:
-        return vs, is_
-    return vs
+        return wrapper
+
+    return deco
+
+
+def _shim(name: str, replacement: str):
+    """Late-bound forward into repro.api.schedules — the implementation
+    module imports repro.core, so binding must wait until first call."""
+
+    def fn(*args, **kwargs):
+        from repro.api import schedules as _impl
+
+        return getattr(_impl, name)(*args, **kwargs)
+
+    fn.__name__ = name
+    fn.__doc__ = f"Forwarded to repro.api.schedules.{name}."
+    return _deprecated(replacement)(fn)
+
+
+merge_schedule = _shim("merge_schedule", "repro.api.schedules.merge_schedule")
+merge = _shim("merge", "repro.merge")
+merge_k = _shim("merge_k", "repro.merge_k")
+sort = _shim("sort", "repro.sort")
+topk = _shim("topk", "repro.topk")
+median_of_lists = _shim("median_of_lists", "repro.median_of_lists")
+median9 = _shim("median9", "repro.api.schedules.median9")
 
 
 # ---------------------------------------------------------------------------
-# medians (paper §V-A early exit)
+# streaming subsystem mirrors (use repro.streaming / repro.merge directly)
 # ---------------------------------------------------------------------------
 
 
-def median_of_lists(lists: Sequence[jnp.ndarray], kind: str = "loms"):
-    """Median of k equal odd-length sorted lists after 2 LOMS stages."""
-    lens = tuple(int(l.shape[-1]) for l in lists)
-    if kind == "loms":
-        sched, pos = _loms.loms_median(lens)
-    else:
-        sched, pos = _mwms.mwms_median(lens)
-    out = apply_schedule(sched, jnp.concatenate(list(lists), axis=-1))
-    return out[..., pos]
-
-
-def median9(window: jnp.ndarray):
-    """Median of 9 unsorted values (3x3 image window, ref [19]): 3 parallel
-    3-sorters, then the 2-stage 3c_3r LOMS median. Total depth 3."""
-    assert window.shape[-1] == 9
-    rows = rank_sort(window.reshape(window.shape[:-1] + (3, 3)))
-    lists = [rows[..., i, :] for i in range(3)]
-    return median_of_lists(lists)
-
-
-# ---------------------------------------------------------------------------
-# streaming subsystem mirror (repro.streaming; lazy imports — streaming
-# depends on the kernels, which depend on this module)
-# ---------------------------------------------------------------------------
-
-
-def chunked_merge(a: jnp.ndarray, b: jnp.ndarray, **kw):
-    """Streaming 2-way merge of arbitrarily long sorted inputs in fixed
-    tiles; see :func:`repro.streaming.chunked_merge`."""
+@_deprecated("repro.streaming.chunked_merge (or repro.merge, auto-routed)")
+def chunked_merge(a, b, **kw):
     from repro.streaming import chunked_merge as _cm
 
     return _cm(a, b, **kw)
 
 
-def chunked_merge_k(lists: Sequence[jnp.ndarray], **kw):
-    """Streaming k-way tiled merge; see
-    :func:`repro.streaming.chunked_merge_k`."""
+@_deprecated("repro.streaming.chunked_merge_k (or repro.merge_k, auto-routed)")
+def chunked_merge_k(lists, **kw):
     from repro.streaming import chunked_merge_k as _cmk
 
     return _cmk(lists, **kw)
 
 
-def tree_topk(x: jnp.ndarray, k: int, **kw):
-    """Device-tree (optionally mesh-sharded) top-k; see
-    :func:`repro.streaming.tree_topk`."""
+@_deprecated("repro.streaming.tree_topk (or repro.topk with par=)")
+def tree_topk(x, k, **kw):
     from repro.streaming import tree_topk as _tt
 
     return _tt(x, k, **kw)
 
 
-def plan_merge(m: int, n: int, **kw):
-    """Heuristic kernel plan for one UP-m/DN-n merge; see
-    :func:`repro.streaming.plan_merge2`."""
+@_deprecated("repro.streaming.plan_merge2")
+def plan_merge(m, n, **kw):
     from repro.streaming import plan_merge2 as _pm
 
     return _pm(m, n, **kw)

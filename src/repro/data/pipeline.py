@@ -45,7 +45,13 @@ class TokenPipeline:
             rng = np.random.default_rng((self.dc.seed, step))
             starts = rng.integers(0, n_tok - s - 1, size=(self.dc.global_batch,))
             starts = starts[self.dc.host_index * b : (self.dc.host_index + 1) * b]
-            out = np.stack([self._mm[st : st + s + 1] for st in starts])
+            # read the memmap in offset order (sequential-ish I/O instead of
+            # b random seeks) and scatter rows back to their batch slots, so
+            # the emitted batch is bit-identical to the unsorted read
+            order = np.argsort(starts)
+            rows = np.stack([self._mm[st : st + s + 1] for st in starts[order]])
+            out = np.empty_like(rows)
+            out[order] = rows
             return out.astype(np.int32) % self.cfg.vocab_size
         rng = np.random.default_rng(
             (self.dc.seed, step, self.dc.host_index))

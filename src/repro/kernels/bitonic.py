@@ -8,10 +8,13 @@ full passes over the VMEM tile. The benchmark harness contrasts the two.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .common import resolve_interpret
 
 
 def _bitonic_merge_kernel(a_ref, b_ref, o_ref):
@@ -32,10 +35,12 @@ def _bitonic_merge_kernel(a_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
 def bitonic_merge2_pallas(
-    a: jnp.ndarray, b: jnp.ndarray, *, block_batch: int = 8, interpret: bool = True
+    a: jnp.ndarray, b: jnp.ndarray, *, block_batch: int = 8,
+    interpret: Optional[bool] = None
 ) -> jnp.ndarray:
     """Merge sorted (B, m) and (B, n); m == n == power of two (Batcher's
-    constraint, paper §VI)."""
+    constraint, paper §VI). ``interpret=None`` auto-resolves."""
+    interpret = resolve_interpret(interpret)
     (bsz, m), (_, n) = a.shape, b.shape
     assert m == n and (m & (m - 1)) == 0, "Batcher merge needs equal power-of-2 lists"
     assert bsz % block_batch == 0

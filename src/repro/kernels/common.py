@@ -22,6 +22,16 @@ def _iota(shape, dim, dtype=jnp.int32):
     return jax.lax.broadcasted_iota(dtype, shape, dim)
 
 
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``interpret=None`` -> auto: compile natively on TPU, run the kernel
+    body as jnp (interpret mode) on every other platform. A trace-time
+    Python decision — safe inside the jit wrappers because ``interpret``
+    is always a static argument."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def sentinel_max(dtype):
     """Finite +sentinel: +/-inf would turn the one-hot MXU permute into
     0 * inf = NaN, so sentinels must stay finite."""

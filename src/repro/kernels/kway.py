@@ -22,7 +22,14 @@ from jax.experimental import pallas as pl
 
 from repro.core.networks import Schedule, _stage_classes
 
-from .common import _iota, onehot_permute, pad_batch, ranks_sort, scatter_permute
+from .common import (
+    _iota,
+    onehot_permute,
+    pad_batch,
+    ranks_sort,
+    resolve_interpret,
+    scatter_permute,
+)
 
 
 def _schedule_wiring(sched: Schedule, n_stages=None) -> List[np.ndarray]:
@@ -84,12 +91,14 @@ def kway_merge_pallas(
     n_stages: Optional[int] = None,
     block_batch: int = 8,
     use_mxu: bool = True,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Apply an oblivious schedule to (B, n_inputs) batched lists.
 
     Ragged batch sizes are padded up to a ``block_batch`` multiple and
-    sliced back."""
+    sliced back. ``interpret=None`` auto-resolves: compile on TPU,
+    interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     bsz, n_in = x.shape
     assert n_in == sched.n_inputs
     x = pad_batch(x, block_batch)

@@ -17,12 +17,13 @@ fits the ~16 MiB VMEM budget (``ops.loms_merge2`` picks the tile).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, pad_batch, sort_nsorter
+from .common import merge2_sorted, pad_batch, resolve_interpret, sort_nsorter
 
 
 def _loms2_kernel(a_ref, b_ref, o_ref, *, n_cols: int, use_mxu: bool):
@@ -56,13 +57,15 @@ def loms_merge2_pallas(
     n_cols: int = 2,
     block_batch: int = 8,
     use_mxu: bool = True,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Merge sorted ``a`` (B, m) and ``b`` (B, n) -> (B, m+n).
 
     Requires n_cols | m and n_cols | n (the hole-free fast path; ragged
     sizes fall back to the schedule executor in ops.py). Ragged batch
-    sizes are padded up to a ``block_batch`` multiple and sliced back."""
+    sizes are padded up to a ``block_batch`` multiple and sliced back.
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     (bsz, m), (_, n) = a.shape, b.shape
     assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
     a, b = pad_batch(a, block_batch), pad_batch(b, block_batch)

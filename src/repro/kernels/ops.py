@@ -2,29 +2,27 @@
 
 On TPU hosts the kernels compile natively; everywhere else they run in
 ``interpret=True`` mode (the kernel body executes as jnp on CPU), so the
-whole framework is runnable and testable on this CPU container. Ragged
+whole framework is runnable and testable on this CPU container — the
+kernels' ``interpret=None`` default auto-resolves per platform. Ragged
 shapes that the fast kernels don't cover fall back to the pure-JAX
 schedule executor — same oblivious semantics, no shape restrictions.
+
+These wrappers are the "pallas" backend of the unified dispatch layer
+(:mod:`repro.api`); prefer ``repro.merge / merge_k / topk`` unless you
+need this exact realization.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import api as core_api
 from repro.core import loms as core_loms
 
 from .bitonic import bitonic_merge2_pallas
 from .kway import kway_merge_pallas
 from .loms_merge import loms_merge2_pallas
-from .topk import router_topk_pallas, vocab_topk_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .topk import ROUTER_TOPK_MAX, router_topk_pallas, vocab_topk_pallas
 
 
 def _pick_block_batch(bsz: int, target: int = 8) -> int:
@@ -42,15 +40,18 @@ def merge2(
     m, n = a.shape[-1], b.shape[-1]
     if kind == "bitonic":
         return bitonic_merge2_pallas(
-            a, b, block_batch=_pick_block_batch(a.shape[0]), interpret=_interpret()
+            a, b, block_batch=_pick_block_batch(a.shape[0])
         )
     assert kind == "loms"
     if m % n_cols == 0 and n % n_cols == 0:
         return loms_merge2_pallas(
-            a, b, n_cols=n_cols,
-            block_batch=_pick_block_batch(a.shape[0]), interpret=_interpret(),
+            a, b, n_cols=n_cols, block_batch=_pick_block_batch(a.shape[0])
         )
-    return core_api.merge(a, b, n_cols=n_cols)  # ragged fallback
+    # ragged fallback: the pure-JAX executor (function-level import so the
+    # module graph keeps the api -> streaming -> kernels -> core arrow)
+    from repro.api import schedules as sched_api
+
+    return sched_api.merge(a, b, n_cols=n_cols)
 
 
 def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -58,9 +59,7 @@ def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched = core_loms.loms_kway(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    return kway_merge_pallas(
-        x, sched, block_batch=_pick_block_batch(x.shape[0]), interpret=_interpret()
-    )
+    return kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]))
 
 
 def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -68,9 +67,7 @@ def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched, pos = core_loms.loms_median(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    out = kway_merge_pallas(
-        x, sched, block_batch=_pick_block_batch(x.shape[0]), interpret=_interpret()
-    )
+    out = kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]))
     return out[..., pos]
 
 
@@ -84,13 +81,9 @@ def topk(
     assert x.ndim == 2
     bsz, e = x.shape
     bb = _pick_block_batch(bsz)
-    if e <= 512:
+    if e <= ROUTER_TOPK_MAX:
         blk = block or max(16, min(64, e))
         while e % blk:
             blk -= 1
-        return router_topk_pallas(
-            x, k=k, block=blk, block_batch=bb, interpret=_interpret()
-        )
-    return vocab_topk_pallas(
-        x, k=k, block=block or 128, block_batch=bb, interpret=_interpret()
-    )
+        return router_topk_pallas(x, k=k, block=blk, block_batch=bb)
+    return vocab_topk_pallas(x, k=k, block=block or 128, block_batch=bb)

@@ -12,19 +12,27 @@ decode-time top-k over the vocab). Two kernels:
     exactly the paper's 2-stage device, reading only the upper rows).
 
 Values carry int32 payload indices throughout (compare on value, tie-break
-on nothing — payloads ride the permutation).
+on nothing — payloads ride the permutation). Sentinel slots — block padding
+and odd-group merge pads — carry index -1, never an in-range position: a
+pad ties with a real dtype-min element, and any non-negative index would
+silently alias that element's slot (the repro.topk index contract).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, sentinel_min, sort_nsorter
+from .common import merge2_sorted, resolve_interpret, sentinel_min, sort_nsorter
+
+#: largest last-axis size the single-kernel router path handles; beyond it
+#: the two-phase vocab kernel grids over (batch, vocab-block). The dispatch
+#: layer (repro.api.dispatch) imports this so routing and realization agree.
+ROUTER_TOPK_MAX = 512
 
 _neg_inf = sentinel_min
 
@@ -55,7 +63,7 @@ def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu):
         if vs.shape[-2] % 2:
             pad = [(0, 0)] * (vs.ndim - 2) + [(0, 1), (0, 0)]
             vs = jnp.pad(vs, pad, constant_values=_neg_inf(vs.dtype))
-            is_ = jnp.pad(is_, pad, constant_values=0)
+            is_ = jnp.pad(is_, pad, constant_values=-1)
         kk = min(k, 2 * kk)
         vs, is_ = _merge_desc(vs[..., 0::2, :], is_[..., 0::2, :],
                               vs[..., 1::2, :], is_[..., 1::2, :], kk, use_mxu)
@@ -66,9 +74,11 @@ def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu):
 @functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
 def router_topk_pallas(
     x: jnp.ndarray, *, k: int, block: int = 32, block_batch: int = 8,
-    use_mxu: bool = True, interpret: bool = True,
+    use_mxu: bool = True, interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k over the last axis of (T, E) router logits; E % block == 0."""
+    """Top-k over the last axis of (T, E) router logits; E % block == 0.
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     t, e = x.shape
     assert e % block == 0 and t % block_batch == 0
     return pl.pallas_call(
@@ -92,11 +102,12 @@ def router_topk_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _phase1_kernel(x_ref, v_ref, i_ref, *, k, use_mxu):
+def _phase1_kernel(x_ref, v_ref, i_ref, *, k, v_real, use_mxu):
     j = pl.program_id(1)
     x = x_ref[...]  # (bt, bs)
     bt, bs = x.shape
     idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + (j * bs).astype(jnp.int32)
+    idx = jnp.where(idx < v_real, idx, -1)  # V-padding slots must not alias
     vs, is_ = sort_nsorter(x, idx, use_mxu=use_mxu)
     v_ref[...] = vs[..., ::-1][..., None, :k]
     i_ref[...] = is_[..., ::-1][..., None, :k]
@@ -113,9 +124,11 @@ def _merge_level_kernel(v_ref, i_ref, vo_ref, io_ref, *, keep, use_mxu):
 @functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
 def vocab_topk_pallas(
     x: jnp.ndarray, *, k: int, block: int = 128, block_batch: int = 8,
-    use_mxu: bool = True, interpret: bool = True,
+    use_mxu: bool = True, interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k over a large last axis (B, V). Pads V to a block multiple."""
+    """Top-k over a large last axis (B, V). Pads V to a block multiple.
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     bsz, v = x.shape
     assert bsz % block_batch == 0
     nblk = -(-v // block)
@@ -126,7 +139,7 @@ def vocab_topk_pallas(
         x = jnp.pad(x, [(0, 0), (0, vp - v)], constant_values=_neg_inf(x.dtype))
     kk = min(k, block)
     vs, is_ = pl.pallas_call(
-        functools.partial(_phase1_kernel, k=kk, use_mxu=use_mxu),
+        functools.partial(_phase1_kernel, k=kk, v_real=v, use_mxu=use_mxu),
         grid=(bsz // block_batch, nblk),
         in_specs=[pl.BlockSpec((block_batch, block), lambda i, j: (i, j))],
         out_specs=[

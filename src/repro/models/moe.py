@@ -1,10 +1,10 @@
 """Mixture-of-Experts with LOMS routing — the paper's primary integration.
 
 Router: top-k over expert logits computed with the *blockwise LOMS merge*
-(repro.core.topk — local rank-sorts then truncated UP-k/DN-k List Offset
-merges). This is pure-jnp oblivious networking, so GSPMD shards it freely;
-the Pallas realization of the same network lives in repro.kernels.topk and
-is used in the serving sampler.
+(``repro.topk(backend="schedule")`` — local rank-sorts then truncated
+UP-k/DN-k List Offset merges). This is pure-jnp oblivious networking, so
+GSPMD shards it freely; the Pallas realization of the same network lives
+in repro.kernels.topk and is used in the serving sampler.
 
 Dispatch (expert parallelism): tokens are sequence-sharded over the
 'model' axis for the MoE block; each shard buckets its local tokens into
@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import sort as unified_sort
+from repro.api import topk as unified_topk
 from repro.configs.base import ModelConfig
-from repro.core import api as loms_api
 from .layers import dense_init
 
 Params = dict
@@ -65,7 +66,10 @@ def router_topk(logits: jnp.ndarray, k: int, block: int):
     blk = min(block, e)
     while e % blk:
         blk -= 1
-    vals, idx = loms_api.topk(logits.astype(jnp.float32), k, block=blk)
+    # backend pinned to the pure-jnp schedule executor: the router runs
+    # inside shard_map/GSPMD traces where the oblivious network shards freely
+    vals, idx = unified_topk(
+        logits.astype(jnp.float32), k, block=blk, backend="schedule")
     gates = jax.nn.softmax(vals, axis=-1)
     return gates, idx
 
@@ -86,8 +90,8 @@ def _positions_sorted(flat_e: jnp.ndarray, n_experts: int):
     Data-oblivious end to end (the paper's security/safety use case)."""
     n = flat_e.shape[0]
     keys = flat_e.astype(jnp.int32) * n + jnp.arange(n, dtype=jnp.int32)
-    sorted_keys, perm = loms_api.sort(keys, kind="loms",
-                                      payload=jnp.arange(n, dtype=jnp.int32))
+    sorted_keys, perm = unified_sort(
+        keys, payload=jnp.arange(n, dtype=jnp.int32), backend="schedule")
     sorted_e = sorted_keys // n
     counts = (flat_e[:, None] == jnp.arange(n_experts)[None, :]).sum(0)
     starts = jnp.cumsum(counts) - counts

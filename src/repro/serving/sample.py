@@ -6,32 +6,20 @@ per-block sorted lists reduced by truncated UP-k/DN-k List Offset merges
 draw — the paper's security/safety argument for oblivious sorting applies
 to the scoring path.
 
-When a :class:`~repro.parallel.sharding.Parallelism` with a >1 TP axis is
-passed, the candidate scoring runs as the device-tree sharded top-k from
+Candidate scoring goes through the unified dispatch API (``repro.topk``):
+with a :class:`~repro.parallel.sharding.Parallelism` whose TP axis divides
+the vocab, the planner routes to the device-tree sharded top-k from
 ``repro.streaming.tree`` — each shard scores its vocab slice and the lists
-reduce over the mesh axis in log depth, instead of gathering the full
-logits row onto one device.
+reduce over the mesh axis in log depth instead of gathering the full
+logits row onto one device; otherwise it picks the Pallas vocab kernel on
+TPU and the schedule executor elsewhere.
 """
 from __future__ import annotations
-
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import topk as kernel_topk
-
-
-def _scored_topk(logits: jnp.ndarray, k: int, par=None):
-    """Descending (values, indices) candidates; sharded tree when possible."""
-    if par is not None:
-        from repro.parallel.sharding import vocab_topk_axis
-        from repro.streaming import tree_topk
-
-        axis = vocab_topk_axis(par, logits.shape[-1])
-        if axis is not None:
-            return tree_topk(logits, k, mesh=par.mesh, axis=axis)
-    return kernel_topk(logits, k)
+from repro.api import topk as unified_topk
 
 
 def sample_topk(
@@ -45,7 +33,7 @@ def sample_topk(
     """Top-k + temperature categorical sampling -> (B,) int32 tokens."""
     if temperature <= 0.0 or k == 1:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    vals, idx = _scored_topk(logits, k, par)
+    vals, idx = unified_topk(logits, k, par=par)
     probs_logits = vals.astype(jnp.float32) / temperature
     choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
@@ -70,7 +58,7 @@ def sample_topp(
     so the nucleus is one cumulative sum over the k_max prefix — no extra
     sort. Candidates beyond k_max carry negligible mass for any practical
     p (< 1e-4 at p <= 0.99 for trained LMs)."""
-    vals, idx = _scored_topk(logits, k_max, par)  # descending
+    vals, idx = unified_topk(logits, k_max, par=par)  # descending
     probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     # keep the smallest prefix with mass >= p (always keep the top-1)

@@ -5,14 +5,21 @@ serving (``repro.serving``): chunked merges that stream arbitrarily long
 sorted inputs through tile-sized kernel invocations, a device-tree sharded
 top-k for TP-sharded vocabs, and a planner + disk-backed autotune cache
 that picks the kernel knobs per problem shape. See DESIGN.md §8.
+
+This package provides the "streaming" and "sharded" backends of the
+unified dispatch layer (``repro.merge``/``repro.topk`` route here for
+past-VMEM inputs and TP-sharded vocabs; DESIGN.md §9) — prefer those
+entry points unless you need a specific realization.
 """
 from .cache import AutotuneCache, default_cache, default_cache_path, plan_key  # noqa: F401
 from .chunked import chunked_merge, chunked_merge_k  # noqa: F401
 from .planner import (  # noqa: F401
     MergePlan,
     autotune_merge2,
+    fits_vmem,
     plan_chunked,
     plan_chunked_k,
     plan_merge2,
+    vmem_budget,
 )
 from .tree import local_topk_desc, tree_topk, tree_topk_for  # noqa: F401

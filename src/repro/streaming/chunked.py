@@ -61,9 +61,9 @@ def _merge_pair(carry: jnp.ndarray, tile: jnp.ndarray, plan: MergePlan,
             carry, tile, n_cols=plan.n_cols, block_batch=plan.block_batch,
             use_mxu=plan.use_mxu, interpret=interpret,
         )
-    from repro.core import api as core_api  # ragged fallback, no Pallas
+    from repro.api import schedules as sched_api  # ragged fallback, no Pallas
 
-    return core_api.merge(carry, tile)
+    return sched_api.merge(carry, tile)
 
 
 def chunked_merge(

@@ -85,6 +85,19 @@ def _feasible_cols(m: int, n: int) -> Tuple[int, ...]:
     return tuple(c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0)
 
 
+def vmem_budget() -> int:
+    """Per-core on-chip working-set budget (bytes) the plans target."""
+    return _VMEM_BUDGET
+
+
+def fits_vmem(
+    m: int, n: int, *, n_cols: int = 2, block_batch: int = 1, dtype=jnp.float32
+) -> bool:
+    """Whether one UP-m/DN-n kernel invocation stays inside the VMEM
+    budget — the dispatch layer's direct-kernel vs streaming cutover."""
+    return _vmem_bytes_merge2(m, n, n_cols, block_batch, dtype) <= _VMEM_BUDGET
+
+
 def plan_merge2(
     m: int,
     n: int,

@@ -44,7 +44,7 @@ def _tree_reduce_desc(vs, is_, k: int, use_mxu: bool):
         if vs.shape[-2] % 2:
             pad = [(0, 0)] * (vs.ndim - 2) + [(0, 1), (0, 0)]
             vs = jnp.pad(vs, pad, constant_values=neg)
-            is_ = jnp.pad(is_, pad, constant_values=0)
+            is_ = jnp.pad(is_, pad, constant_values=-1)  # never alias slot 0
         vs, is_ = _merge_desc(vs[..., 0::2, :], is_[..., 0::2, :],
                               vs[..., 1::2, :], is_[..., 1::2, :], k, use_mxu)
     return vs[..., 0, :], is_[..., 0, :]
@@ -69,9 +69,8 @@ def local_topk_desc(
     ep = nblk * block
     if ep != e:
         x = jnp.pad(x, [(0, 0), (0, ep - e)], constant_values=neg)
-    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + jnp.asarray(
-        offset, jnp.int32
-    )
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    idx = jnp.where(lane < e, lane + jnp.asarray(offset, jnp.int32), -1)
     xb = x.reshape(bsz, nblk, block)
     ib = idx.reshape(bsz, nblk, block)
     vs, is_ = sort_nsorter(xb, ib, use_mxu=use_mxu)
@@ -82,7 +81,7 @@ def local_topk_desc(
     if vs.shape[-1] < k:  # degenerate: fewer candidates than k on this shard
         pad = [(0, 0)] * (vs.ndim - 1) + [(0, k - vs.shape[-1])]
         vs = jnp.pad(vs, pad, constant_values=neg)
-        is_ = jnp.pad(is_, pad, constant_values=0)
+        is_ = jnp.pad(is_, pad, constant_values=-1)
     return vs, is_
 
 

@@ -1,0 +1,112 @@
+"""Hypothesis property sweeps for the unified API (repro.api).
+
+Randomized versions of the deterministic checks in test_api.py: the new
+namespace must match jnp.sort / jax.lax.top_k references for any shape,
+axis, direction, tie pattern, and dtype in {f32, bf16, i32}, and pytree
+payloads must ride the permutation exactly.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import repro
+
+RNG = np.random.default_rng(23)
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+
+
+def _rand(shape, dtype, lo=0, hi=100):
+    return jnp.asarray(RNG.integers(lo, hi, shape)).astype(dtype)
+
+
+@given(data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_sort_property_any_axis_direction_dtype(data):
+    dtype = data.draw(st.sampled_from(DTYPES))
+    ndim = data.draw(st.integers(1, 3))
+    shape = tuple(data.draw(st.integers(1, 9)) for _ in range(ndim))
+    axis = data.draw(st.integers(-ndim, ndim - 1))
+    descending = data.draw(st.booleans())
+    x = _rand(shape, dtype)
+    out = repro.sort(x, axis=axis, descending=descending)
+    ref = np.sort(np.asarray(x.astype(jnp.float32)), axis=axis)
+    if descending:
+        ref = np.flip(ref, axis=axis)
+    np.testing.assert_array_equal(np.asarray(out.astype(jnp.float32)), ref)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_sort_stable_property_matches_stable_argsort(data):
+    dtype = data.draw(st.sampled_from(DTYPES))
+    n = data.draw(st.integers(2, 24))
+    descending = data.draw(st.booleans())
+    x = _rand((3, n), dtype, hi=5)  # heavy ties
+    out, perm = repro.sort(x, stable=True, descending=descending,
+                           payload=jnp.broadcast_to(
+                               jnp.arange(n, dtype=jnp.int32), (3, n)))
+    xa = np.asarray(x.astype(jnp.float32))
+    order = np.argsort(-xa if descending else xa, axis=-1, kind="stable")
+    np.testing.assert_array_equal(
+        np.asarray(out.astype(jnp.float32)), np.take_along_axis(xa, order, -1))
+    np.testing.assert_array_equal(np.asarray(perm), order)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_merge_property_matches_sorted_concat(data):
+    dtype = data.draw(st.sampled_from(DTYPES))
+    m = data.draw(st.integers(1, 20))
+    n = data.draw(st.integers(1, 20))
+    descending = data.draw(st.booleans())
+    a = jnp.sort(_rand((2, m), dtype), -1)
+    b = jnp.sort(_rand((2, n), dtype), -1)
+    if descending:
+        a, b = a[..., ::-1], b[..., ::-1]
+    out = repro.merge(a, b, descending=descending)
+    ref = np.sort(np.concatenate(
+        [np.asarray(a.astype(jnp.float32)), np.asarray(b.astype(jnp.float32))],
+        -1), -1)
+    if descending:
+        ref = ref[..., ::-1]
+    np.testing.assert_array_equal(np.asarray(out.astype(jnp.float32)), ref)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_topk_property_matches_lax_topk(data):
+    dtype = data.draw(st.sampled_from(DTYPES))
+    n = data.draw(st.integers(4, 200))
+    k = data.draw(st.integers(1, min(n, 16)))
+    x = _rand((3, n), dtype, hi=10_000)
+    v, i = repro.topk(x, k)
+    rv, _ = jax.lax.top_k(x.astype(jnp.float32), k)
+    np.testing.assert_array_equal(np.asarray(v.astype(jnp.float32)),
+                                  np.asarray(rv))
+    taken = np.take_along_axis(np.asarray(x.astype(jnp.float32)),
+                               np.asarray(i), -1)
+    np.testing.assert_array_equal(taken, np.asarray(rv))
+
+
+@given(data=st.data())
+@settings(max_examples=15, deadline=None)
+def test_payload_property_rides_permutation(data):
+    dtype = data.draw(st.sampled_from(DTYPES))
+    n = data.draw(st.integers(2, 24))
+    x = _rand((2, n), dtype, hi=8)  # ties: payload must follow its exact key
+    feat = jnp.asarray(RNG.standard_normal((2, n, 3)), jnp.float32)
+    out, tree = repro.sort(x, payload={"pos": jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32), (2, n)), "feat": feat})
+    perm = np.asarray(tree["pos"])
+    xa = np.asarray(x.astype(jnp.float32))
+    # the permutation reproduces the sorted values...
+    np.testing.assert_array_equal(np.take_along_axis(xa, perm, -1),
+                                  np.asarray(out.astype(jnp.float32)))
+    # ...and every payload leaf was gathered by that same permutation
+    np.testing.assert_array_equal(
+        np.asarray(tree["feat"]),
+        np.take_along_axis(np.asarray(feat), perm[..., None], 1))
