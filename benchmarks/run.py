@@ -17,9 +17,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import api_dispatch, fig11_12_speed_2way, fig13_resources_2way
-    from . import fig14_17_lut_modes, fig18_20_3way, moe_routing
-    from . import streaming_merge
+    from . import api_dispatch, dist_sort, fig11_12_speed_2way
+    from . import fig13_resources_2way, fig14_17_lut_modes, fig18_20_3way
+    from . import moe_routing, streaming_merge
 
     modules = {
         "fig11_12": fig11_12_speed_2way,
@@ -29,6 +29,7 @@ def main() -> None:
         "moe_routing": moe_routing,
         "streaming": streaming_merge,
         "api_dispatch": api_dispatch,
+        "dist_sort": dist_sort,
     }
     print("name,us_per_call,derived")
     for name, mod in modules.items():

@@ -16,15 +16,22 @@ The decision table (DESIGN.md §9):
   topk     TPU, axis > 512                            pallas     vocab_topk
   topk     TPU, axis <= 512                           pallas     router_topk
   topk     otherwise (CPU/GPU hosts)                  schedule   blockwise
+  sort     TP-sharded + total >= DIST_MIN_TOTAL       sharded    sample_sort
+  sort     otherwise (no Pallas full-sort kernel)     schedule   merge_tree
+  merge    TP-sharded + total >= DIST_MIN_TOTAL       sharded    sample_merge
   merge    payload / stable (perm needed)             schedule   payload
   merge    ragged lengths (no common column count)    schedule   ragged
   merge    working set past the VMEM budget           streaming  chunked
   merge    TPU, fits VMEM                             pallas     loms_merge2
   merge    otherwise                                  schedule   loms_2way
   merge_k  same ladder as merge                       ...        kway/chunked
-  sort     always (no Pallas full-sort kernel yet)    schedule   merge_tree
   median   TPU + equal odd lists, no perm             pallas     kway_median
   median   otherwise                                  schedule   loms_median
+
+The sharded rows engage when the caller offered a Parallelism whose TP
+axis divides every list length (spec.sharded); below DIST_MIN_TOTAL the
+partition + two all_to_alls cost more than they parallelize away, so
+small sharded problems stay on the single-device ladder.
 
 Explicit ``backend=`` hints skip the ladder but are still validated against
 the backend's capability predicate, so impossible asks fail loudly instead
@@ -60,11 +67,23 @@ def _merge2_fits_vmem(spec: SortSpec) -> bool:
 
 
 def _kway_fits_vmem(spec: SortSpec) -> bool:
-    # the schedule-driven k-way kernel materializes the cross-list
-    # comparison cloud: total^2 f32 per batch row (planner plan_chunked_k)
-    from repro.streaming.planner import vmem_budget
+    from repro.streaming.planner import kway_fits_vmem
 
-    return spec.total * spec.total * 4 <= vmem_budget()
+    return kway_fits_vmem(spec.total)
+
+
+def _dist_min_total() -> int:
+    from repro.parallel.dist_sort import DIST_MIN_TOTAL
+
+    return DIST_MIN_TOTAL
+
+
+def _dist_eligible(spec: SortSpec) -> bool:
+    """Sharded sample-sort rows: a usable TP axis was offered (the ops
+    layer sets spec.sharded only when every list length divides it) and
+    the problem is large enough to amortize the two all_to_alls."""
+    return (spec.sharded and spec.network == "loms"
+            and spec.total >= _dist_min_total())
 
 
 def plan(spec: SortSpec, par=None) -> Decision:
@@ -102,6 +121,12 @@ def plan(spec: SortSpec, par=None) -> Decision:
         )
 
     if spec.op == "sort":
+        if _dist_eligible(spec):
+            return Decision(
+                "sharded", "sample_sort",
+                f"TP-sharded, total {spec.total} >= {_dist_min_total()}: "
+                "PSRS sample-sort over the mesh axis",
+            )
         return Decision(
             "schedule", "loms_merge_tree",
             "full sort = 2-sorter pairs + LOMS merge tree (no Pallas "
@@ -114,6 +139,14 @@ def plan(spec: SortSpec, par=None) -> Decision:
         return Decision("schedule", "loms_median", "schedule executor median")
 
     # merge / merge_k
+    if _dist_eligible(spec):
+        # checked before needs_perm: the sample-sort path carries the
+        # position payload through both all_to_alls
+        return Decision(
+            "sharded", "sample_merge_k",
+            f"TP-sharded, total {spec.total} >= {_dist_min_total()}: "
+            "local k-way LOMS merge of list slices + PSRS exchange",
+        )
     if spec.needs_perm:
         return Decision(
             "schedule", "payload",
@@ -173,7 +206,11 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
                      has_payload=True),
             SortSpec(op="merge_k", lengths=(64,) * 4, batch=8, device=dev),
             SortSpec(op="merge_k", lengths=(50_000,) * 4, device=dev),
+            SortSpec(op="merge_k", lengths=(50_000,) * 4, device=dev,
+                     sharded=True),
             SortSpec(op="sort", lengths=(1024,), batch=8, device=dev),
+            SortSpec(op="sort", lengths=(1 << 20,), batch=8, device=dev,
+                     sharded=True),
             SortSpec(op="median", lengths=(7, 7, 7), batch=8, device=dev),
         ]
     for spec in cases:

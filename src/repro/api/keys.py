@@ -1,0 +1,66 @@
+"""Total-order float keys: the NaN/±inf pre-pass behind ``nan_policy``.
+
+Comparison networks mis-sort special float values two ways:
+
+* a NaN makes every comparator output False, so the rank arithmetic stops
+  being a permutation — the output is not even a reordering of the input
+  and disagrees with ``jnp.sort`` (which puts NaNs last);
+* a genuine ±inf fed through the one-hot MXU permute produces
+  ``0 * inf = NaN`` garbage (``kernels/common.py`` keeps *sentinels*
+  finite for exactly this reason, but can do nothing about infinite
+  *inputs*).
+
+The fix is the classic radix-sort trick: bitcast the float to its signed
+integer representation and flip the low bits of the negative half — a
+bijective, strictly monotonic map from every float (finite, ±0, ±inf)
+onto *finite* integer keys. NaNs are first canonicalized to the positive
+quiet-NaN pattern, which maps above ``key(+inf)``: NaNs sort last, the
+``jnp.sort`` convention documented on :class:`~repro.api.spec.SortSpec`.
+Integer networks never touch the MXU one-hot path (the planner steers
+them to the exact scatter permute), so ±inf and NaN inputs become safe on
+every backend, including the distributed sample-sort whose splitter
+searches would otherwise see unordered rows.
+
+Because the map is bijective, decoding the sorted keys restores the exact
+input bit patterns — except that every NaN comes back as the canonical
+quiet NaN, which numpy/jnp comparisons treat as the same NaN. The total
+order ranks ``-0.0`` strictly below ``+0.0`` (like ``jax.lax.sort``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: float itemsize -> same-width signed integer type carrying the bit trick
+#: (int64 keys require jax_enable_x64, but so does having f64 inputs)
+_ITYPE = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}
+
+
+def has_key_transform(dtype) -> bool:
+    """Whether ``dtype`` is a float type the key transform covers."""
+    d = jnp.dtype(dtype)
+    return jnp.issubdtype(d, jnp.floating) and d.itemsize in _ITYPE
+
+
+def encode_keys(x: jnp.ndarray) -> jnp.ndarray:
+    """Float array -> integer keys with the same sort order, NaNs last.
+
+    f32/bf16/f16 keys widen to int32 (the networks' native lane width);
+    f64 keys stay int64."""
+    d = jnp.dtype(x.dtype)
+    itype = _ITYPE[d.itemsize]
+    mask = itype(jnp.iinfo(itype).max)  # 0x7fff.. : flip all but the sign
+    x = jnp.where(jnp.isnan(x), jnp.asarray(jnp.nan, d), x)  # canonical qNaN
+    y = jax.lax.bitcast_convert_type(x, itype)
+    k = jnp.where(y < 0, y ^ mask, y)
+    return k if d.itemsize == 8 else k.astype(jnp.int32)
+
+
+def decode_keys(k: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Exact inverse of :func:`encode_keys` (``dtype`` = original float)."""
+    d = jnp.dtype(dtype)
+    itype = _ITYPE[d.itemsize]
+    mask = itype(jnp.iinfo(itype).max)
+    y = k.astype(itype)  # downcast first: the xor must run at key width
+    y = jnp.where(y < 0, y ^ mask, y)
+    return jax.lax.bitcast_convert_type(y, d)

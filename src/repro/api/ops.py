@@ -19,12 +19,14 @@ reduction — based on size, dtype, platform, and an optional
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from .dispatch import plan
+from .keys import decode_keys, encode_keys, has_key_transform
 from .payload import (
     canonical_axis,
     concat_payload_trees,
@@ -50,6 +52,99 @@ def _iota_rows(length: int, batch: int, reverse: bool, offset: int = 0):
     return jnp.broadcast_to(pos, (batch, length))
 
 
+def _encode_lists(flats, nan_policy: str):
+    """NaN-policy pre-pass (repro.api.keys): floats become total-order
+    int keys when nan_policy='last'. Returns (arrays, decode) — decode is
+    None when no transform ran (identity)."""
+    if nan_policy == "unsafe" or not has_key_transform(flats[0].dtype):
+        return list(flats), None
+    dtype = flats[0].dtype
+    return [encode_keys(f) for f in flats], (lambda out: decode_keys(out, dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _decode_sorted(raw, out_keys, descending):
+    """decode of sorted keys with the VJP of a value sort w.r.t. ``raw``.
+
+    The bitcast decode has no meaningful derivative, so a plain decode
+    would silently zero every gradient through values-only float sorts and
+    merges. The primal is still the cheap decode; the backward pass
+    recovers the sorting permutation with one stable argsort of the keys
+    (the same tie convention as ``jnp.sort``'s own VJP) and scatters the
+    cotangent back to the inputs."""
+    return decode_keys(out_keys, raw.dtype)
+
+
+def _decode_sorted_fwd(raw, out_keys, descending):
+    return decode_keys(out_keys, raw.dtype), raw
+
+
+def _decode_sorted_bwd(descending, raw, ct):
+    order = jnp.argsort(encode_keys(raw), axis=-1, stable=True)
+    if descending:
+        order = order[..., ::-1]
+    g = jnp.put_along_axis(jnp.zeros_like(raw), order, ct, axis=-1,
+                           inplace=False)
+    return g, None
+
+
+_decode_sorted.defvjp(_decode_sorted_fwd, _decode_sorted_bwd)
+
+
+@jax.custom_vjp
+def _decode_median(raw, out_keys):
+    """decode of the (B,) median keys with a real VJP w.r.t. (B, L) raw.
+
+    Backward recovers which input held the median (stable argsort of the
+    keys, middle position) and routes the cotangent there — same
+    subgradient convention as differentiating through jnp.sort."""
+    return decode_keys(out_keys, raw.dtype)
+
+
+def _decode_median_fwd(raw, out_keys):
+    return decode_keys(out_keys, raw.dtype), raw
+
+
+def _decode_median_bwd(raw, ct):
+    order = jnp.argsort(encode_keys(raw), axis=-1, stable=True)
+    j = order[..., raw.shape[-1] // 2]
+    lane = jnp.arange(raw.shape[-1])
+    g = jnp.where(lane == j[..., None], ct[..., None], 0).astype(raw.dtype)
+    return g, None
+
+
+_decode_median.defvjp(_decode_median_fwd, _decode_median_bwd)
+
+
+def _restore_values(out2, perm2, raw, decode, descending=False):
+    """Map sorted keys back to float values.
+
+    When the permutation is available, gather from the raw float input —
+    bit-exact (modulo NaN canonicalization, which gather skips) and, unlike
+    the bitcast decode, differentiable: gradients keep flowing into the
+    selected entries (the MoE router trains through its top-k values).
+    Negative entries are pad sentinels (top-k only): those slots keep the
+    decoded sentinel value and carry no gradient. Without a permutation
+    (values-only sorts/merges) the custom-VJP decode keeps the gradient
+    path alive at zero forward cost."""
+    if decode is None:
+        return out2
+    if perm2 is None:
+        return _decode_sorted(raw, out2, descending)
+    safe = jnp.where(perm2 < 0, 0, perm2)
+    gathered = jnp.take_along_axis(raw, safe, axis=-1)
+    return jnp.where(perm2 < 0, decode(out2), gathered)
+
+
+def _dist_sharded(par, lens) -> bool:
+    """Whether the offered Parallelism makes the spec sample-sortable."""
+    if par is None:
+        return False
+    from repro.parallel.sharding import dist_sort_axis
+
+    return dist_sort_axis(par, lens) is not None
+
+
 # ---------------------------------------------------------------------------
 # merge / merge_k
 # ---------------------------------------------------------------------------
@@ -66,6 +161,7 @@ def merge(
     backend: str = "auto",
     network: str = "loms",
     par=None,
+    nan_policy: str = "last",
 ):
     """Merge two lists sorted along ``axis`` into one sorted list.
 
@@ -76,6 +172,7 @@ def merge(
     return merge_k(
         [a, b], axis=axis, descending=descending, stable=stable,
         payload=payload, backend=backend, network=network, par=par,
+        nan_policy=nan_policy,
     )
 
 
@@ -89,11 +186,15 @@ def merge_k(
     backend: str = "auto",
     network: str = "loms",
     par=None,
+    nan_policy: str = "last",
 ):
     """k-way merge of lists sorted along ``axis``.
 
     ``payload`` is a sequence of pytrees (one per list, matching
     structures). Returns merged values, or ``(values, payload_tree)``.
+    ``nan_policy="last"`` (default) orders float NaNs last like
+    ``jnp.sort`` via the total-order key pre-pass; ``"unsafe"`` skips it
+    (raw-float fast path — inputs must be finite and NaN-free).
     """
     lists = list(lists)
     assert len(lists) >= 2, "need at least two lists"
@@ -107,15 +208,25 @@ def merge_k(
         lead = ld
         flats.append(f)
     batch = flats[0].shape[0]
+    if len({f.dtype for f in flats}) > 1:
+        # mixed dtypes promoted up front: per-list key encoding at
+        # different widths would produce incomparable keys (the pre-key
+        # behavior promoted at the backend's concatenate anyway)
+        ct = jnp.result_type(*flats)
+        flats = [f.astype(ct) for f in flats]
+    raw_flats = flats  # original floats: value restore gathers from these
+    flats, decode = _encode_lists(flats, nan_policy)
     spec = SortSpec(
         op="merge" if len(lists) == 2 else "merge_k",
         lengths=lens, batch=batch, dtype=jnp.dtype(flats[0].dtype).name,
         axis=axis, descending=descending, stable=stable,
         has_payload=payload is not None, network=network, backend=backend,
-        device=_device(),
+        device=_device(), sharded=_dist_sharded(par, lens),
+        nan_policy=nan_policy,
     )
     dec = plan(spec, par)
     be = get_backend(dec.backend)
+    run_kw = {} if par is None else {"par": par}
 
     if descending:  # descending-sorted inputs: reverse -> ascending problem
         flats = [f[:, ::-1] for f in flats]
@@ -127,15 +238,19 @@ def merge_k(
     opname = "merge" if spec.op == "merge" else "merge_k"
     if opname == "merge":
         out2, perm2 = be.run["merge"](flats[0], flats[1], spec=spec,
-                                      pos=None if pos is None else (pos[0], pos[1]))
+                                      pos=None if pos is None else (pos[0], pos[1]),
+                                      **run_kw)
     else:
-        out2, perm2 = be.run["merge_k"](flats, spec=spec, pos=pos)
+        out2, perm2 = be.run["merge_k"](flats, spec=spec, pos=pos, **run_kw)
     if descending:
         out2 = out2[:, ::-1]
         perm2 = None if perm2 is None else perm2[:, ::-1]
     if stable:
         out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
-    out = from_batched_last(out2, lead, ax, ndim)
+    raw_cat = None if decode is None else jnp.concatenate(raw_flats, axis=-1)
+    out = from_batched_last(
+        _restore_values(out2, perm2, raw_cat, decode, descending),
+        lead, ax, ndim)
     if payload is None:
         return out
     ptree = concat_payload_trees(list(payload), ax, ndim)
@@ -158,33 +273,44 @@ def sort(
     backend: str = "auto",
     network: str = "loms",
     par=None,
+    nan_policy: str = "last",
 ):
     """Full sort of unsorted values along ``axis``.
 
     ``payload`` is a pytree whose leaves match ``x``'s shape (extra
     trailing dims allowed) and ride the sort permutation. Returns sorted
-    values, or ``(values, payload_tree)``.
+    values, or ``(values, payload_tree)``. ``nan_policy="last"``
+    (default): float NaNs sort last, like ``jnp.sort``; ``"unsafe"``
+    skips the key pre-pass (finite NaN-free inputs only). With a
+    TP-sharded :class:`Parallelism` whose axis divides the length, large
+    sorts route to the distributed sample-sort (parallel.dist_sort).
     """
     ndim = x.ndim
     ax = canonical_axis(axis, ndim)
     x2, lead = to_batched_last(x, ax)
     batch, n = x2.shape
+    raw_x2 = x2  # original floats: value restore gathers from these
+    (x2,), decode = _encode_lists([x2], nan_policy)
     spec = SortSpec(
-        op="sort", lengths=(n,), batch=batch, dtype=jnp.dtype(x.dtype).name,
+        op="sort", lengths=(n,), batch=batch, dtype=jnp.dtype(x2.dtype).name,
         axis=axis, descending=descending, stable=stable,
         has_payload=payload is not None, network=network, backend=backend,
-        device=_device(),
+        device=_device(), sharded=_dist_sharded(par, (n,)),
+        nan_policy=nan_policy,
     )
     dec = plan(spec, par)
     be = get_backend(dec.backend)
+    run_kw = {} if par is None else {"par": par}
     pos = _iota_rows(n, batch, False) if spec.needs_perm else None
-    out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos)
+    out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos, **run_kw)
     if descending:  # ascending network sort, reversed read-out
         out2 = out2[:, ::-1]
         perm2 = None if perm2 is None else perm2[:, ::-1]
     if stable:
         out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
-    out = from_batched_last(out2, lead, ax, ndim)
+    out = from_batched_last(
+        _restore_values(out2, perm2, raw_x2, decode, descending),
+        lead, ax, ndim)
     if payload is None:
         return out
     perm = from_batched_last(perm2, lead, ax, ndim)
@@ -208,6 +334,7 @@ def topk(
     block: Optional[int] = None,
     par=None,
     with_indices: bool = True,
+    nan_policy: str = "last",
 ):
     """Top-k along ``axis``: largest ``k`` descending (default), or the
     smallest ``k`` ascending with ``descending=False``.
@@ -221,22 +348,29 @@ def topk(
     returns ``(values, indices, payload_tree)`` gathered at the winners.
     With a TP-sharded :class:`Parallelism` whose axis divides the vocab,
     ``backend="auto"`` routes to the device-tree reduction.
+
+    ``nan_policy="last"`` (default): float NaNs rank above +inf in the
+    descending output (the flipped jnp ascending order) and masked
+    ``-inf`` logits stay genuine candidates with real indices;
+    ``"unsafe"`` skips the key pre-pass (finite NaN-free inputs only).
     """
     ndim = x.ndim
     ax = canonical_axis(axis, ndim)
     x2, lead = to_batched_last(x, ax)
     batch, n = x2.shape
     assert 1 <= k <= n, (k, n)
+    raw_x2 = x2  # original floats: value restore gathers from these
+    (x2,), decode = _encode_lists([x2], nan_policy)
     sharded = False
     if par is not None and ax == ndim - 1 and ndim == 2:
         from repro.parallel.sharding import vocab_topk_axis
 
         sharded = vocab_topk_axis(par, n) is not None
     spec = SortSpec(
-        op="topk", lengths=(n,), batch=batch, dtype=jnp.dtype(x.dtype).name,
+        op="topk", lengths=(n,), batch=batch, dtype=jnp.dtype(x2.dtype).name,
         k=k, axis=axis, descending=descending, stable=stable,
         has_payload=payload is not None, backend=backend, device=_device(),
-        sharded=sharded,
+        sharded=sharded, nan_policy=nan_policy,
     )
     if not descending:
         # bottom-k ascending: ascending sort prefix (executor path only)
@@ -253,7 +387,8 @@ def topk(
         idx2 = idx2.astype(jnp.int32)
     if stable:
         vals2, idx2 = stabilize_ties(vals2, idx2, descending=descending)
-    vals = from_batched_last(vals2, lead, ax, ndim)
+    vals = from_batched_last(_restore_values(vals2, idx2, raw_x2, decode),
+                             lead, ax, ndim)
     idx = from_batched_last(idx2, lead, ax, ndim)
     if payload is not None:
         ptree = take_payload_tree(payload, idx, ax, ndim)
@@ -275,6 +410,7 @@ def median_of_lists(
     backend: str = "auto",
     network: str = "loms",
     par=None,
+    nan_policy: str = "last",
 ):
     """Median of k equal odd-length sorted lists (paper §V-A early exit)."""
     lists = list(lists)
@@ -287,13 +423,20 @@ def median_of_lists(
         assert lead is None or ld == lead
         lead = ld
         flats.append(f)
+    if len({f.dtype for f in flats}) > 1:
+        ct = jnp.result_type(*flats)
+        flats = [f.astype(ct) for f in flats]
+    flats_raw = flats  # originals: the median VJP recovers the argmedian
+    flats, decode = _encode_lists(flats, nan_policy)
     spec = SortSpec(
         op="median", lengths=lens, batch=flats[0].shape[0],
         dtype=jnp.dtype(flats[0].dtype).name, axis=axis, network=network,
-        backend=backend, device=_device(),
+        backend=backend, device=_device(), nan_policy=nan_policy,
     )
     dec = plan(spec, par)
     be = get_backend(dec.backend)
     out2 = be.run["median"](flats, spec=spec)
     # scalar per batch row: restore the lead shape
+    if decode is not None:
+        out2 = _decode_median(jnp.concatenate(flats_raw, axis=-1), out2)
     return out2.reshape(lead)

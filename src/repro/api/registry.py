@@ -16,12 +16,17 @@ Inputs are canonical 2-D ``(batch, length)`` problems, sort axis last,
 ascending (the ops layer handles axis moves, descending flips, stability,
 and payload gathers). ``pos`` is the int32 position payload to thread
 through the permutation when the caller needs it; a backend that cannot
-carry it must say so in ``supports``.
+carry it must say so in ``supports``. When the caller offers a
+:class:`~repro.parallel.sharding.Parallelism`, the ops layer forwards it
+as a ``par=`` keyword to merge/merge_k/sort adapters too — the built-ins
+all accept it (and ignore it except ``sharded``); third-party backends
+only need the keyword if they are used together with ``par``.
 
 Built-in backends: ``schedule`` (pure-JAX executor — runs everything),
 ``pallas`` (TPU kernels), ``streaming`` (chunked pipelines), ``sharded``
-(device-tree top-k over a mesh axis), ``lax`` (XLA reference, explicit
-opt-in only — never chosen by auto).
+(distributed sample-sort / merge plus device-tree top-k over a mesh
+axis), ``lax`` (XLA reference, explicit opt-in only — never chosen by
+auto).
 """
 from __future__ import annotations
 
@@ -70,7 +75,7 @@ def backend_names():
 # ---------------------------------------------------------------------------
 
 
-def _sched_merge(a, b, *, spec, pos=None):
+def _sched_merge(a, b, *, spec, pos=None, par=None):
     from . import schedules
 
     if pos is None:
@@ -78,7 +83,7 @@ def _sched_merge(a, b, *, spec, pos=None):
     return schedules.merge(a, b, kind=spec.network, payload=pos)
 
 
-def _sched_merge_k(lists, *, spec, pos=None):
+def _sched_merge_k(lists, *, spec, pos=None, par=None):
     from . import schedules
 
     if pos is None:
@@ -86,7 +91,7 @@ def _sched_merge_k(lists, *, spec, pos=None):
     return schedules.merge_k(lists, kind=spec.network, payload=pos)
 
 
-def _sched_sort(x, *, spec, pos=None):
+def _sched_sort(x, *, spec, pos=None, par=None):
     from . import schedules
 
     kind = spec.network if spec.network != "batcher-bitonic" else "bitonic"
@@ -123,7 +128,7 @@ register_backend(Backend(
 # ---------------------------------------------------------------------------
 
 
-def _pallas_merge(a, b, *, spec, pos=None):
+def _pallas_merge(a, b, *, spec, pos=None, par=None):
     assert pos is None
     from repro.kernels.loms_merge import loms_merge2_pallas
     from repro.streaming.planner import plan_merge2
@@ -139,7 +144,7 @@ def _pallas_merge(a, b, *, spec, pos=None):
     ), None
 
 
-def _pallas_merge_k(lists, *, spec, pos=None):
+def _pallas_merge_k(lists, *, spec, pos=None, par=None):
     assert pos is None
     from repro.kernels.ops import merge_k as kernel_merge_k
 
@@ -185,14 +190,14 @@ register_backend(Backend(
 # ---------------------------------------------------------------------------
 
 
-def _streaming_merge(a, b, *, spec, pos=None):
+def _streaming_merge(a, b, *, spec, pos=None, par=None):
     assert pos is None
     from repro.streaming import chunked_merge
 
     return chunked_merge(a, b), None
 
 
-def _streaming_merge_k(lists, *, spec, pos=None):
+def _streaming_merge_k(lists, *, spec, pos=None, par=None):
     assert pos is None
     from repro.streaming import chunked_merge_k
 
@@ -209,7 +214,7 @@ register_backend(Backend(
 
 
 # ---------------------------------------------------------------------------
-# sharded — device-tree top-k over a TP mesh axis
+# sharded — distributed sample-sort + device-tree top-k over a TP mesh axis
 # ---------------------------------------------------------------------------
 
 
@@ -220,12 +225,49 @@ def _sharded_topk(x, k, *, spec, par=None, block=None):
     return tree_topk_for(par, x, k)
 
 
+def _sharded_sort(x, *, spec, pos=None, par=None):
+    from repro.parallel.dist_sort import sample_sort
+    from repro.parallel.sharding import dist_sort_axis
+
+    assert par is not None, "sharded backend needs a Parallelism"
+    axis = dist_sort_axis(par, (x.shape[-1],))
+    assert axis is not None, (x.shape, par.tp_size)
+    return sample_sort(x, mesh=par.mesh, axis_name=axis, pos=pos)
+
+
+def _sharded_merge_k(lists, *, spec, pos=None, par=None):
+    from repro.parallel.dist_sort import sample_merge_k
+    from repro.parallel.sharding import dist_sort_axis
+
+    assert par is not None, "sharded backend needs a Parallelism"
+    axis = dist_sort_axis(par, tuple(l.shape[-1] for l in lists))
+    assert axis is not None, ([l.shape for l in lists], par.tp_size)
+    return sample_merge_k(lists, mesh=par.mesh, axis_name=axis, pos=pos)
+
+
+def _sharded_merge(a, b, *, spec, pos=None, par=None):
+    return _sharded_merge_k(
+        [a, b], spec=spec, pos=None if pos is None else list(pos), par=par)
+
+
+def _sharded_supports(spec: SortSpec) -> bool:
+    if spec.op == "topk":
+        return spec.sharded
+    # sample-sort realizes the LOMS family only; spec.sharded already
+    # encodes that every list length divides the offered TP axis
+    return (spec.op in ("merge", "merge_k", "sort") and spec.sharded
+            and spec.network == "loms")
+
+
 register_backend(Backend(
     name="sharded",
-    run={"topk": _sharded_topk},
-    supports=lambda spec: spec.op == "topk" and spec.sharded,
-    description="log-depth LOMS reduction over the TP axis (butterfly / "
-                "gather-tree); vocab never gathers to one device",
+    run={"topk": _sharded_topk, "sort": _sharded_sort,
+         "merge": _sharded_merge, "merge_k": _sharded_merge_k},
+    supports=_sharded_supports,
+    description="distributed sample-sort / k-way merge (shard_map PSRS: "
+                "local LOMS sort, regular-sampling splitters, all_to_all, "
+                "per-device merge) and log-depth tree top-k over the TP "
+                "axis; data never gathers to one device",
 ))
 
 
@@ -234,17 +276,17 @@ register_backend(Backend(
 # ---------------------------------------------------------------------------
 
 
-def _lax_merge(a, b, *, spec, pos=None):
+def _lax_merge(a, b, *, spec, pos=None, par=None):
     return _lax_sort(jnp.concatenate([a, b], axis=-1), spec=spec, pos=(
         None if pos is None else jnp.concatenate([pos[0], pos[1]], axis=-1)))
 
 
-def _lax_merge_k(lists, *, spec, pos=None):
+def _lax_merge_k(lists, *, spec, pos=None, par=None):
     return _lax_sort(jnp.concatenate(list(lists), axis=-1), spec=spec, pos=(
         None if pos is None else jnp.concatenate(list(pos), axis=-1)))
 
 
-def _lax_sort(x, *, spec, pos=None):
+def _lax_sort(x, *, spec, pos=None, par=None):
     if pos is None:
         return jnp.sort(x, axis=-1), None
     order = jnp.argsort(x, axis=-1, stable=True)

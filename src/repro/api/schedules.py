@@ -124,6 +124,17 @@ def _dtype_max(dtype):
     return jnp.iinfo(d).max
 
 
+def _dtype_min(dtype):
+    """Smallest value of ``dtype`` — NOT ``-_dtype_max``: negating the max
+    is off by one for signed ints (min+1) and wraps for unsigned ints (a
+    ``uint32`` pad of ``-max`` becomes 1, which sorts *above* genuine
+    zeros and silently drops them from a top-k)."""
+    d = jnp.dtype(dtype)
+    if jnp.issubdtype(d, jnp.floating):
+        return -jnp.inf
+    return jnp.iinfo(d).min
+
+
 def sort(x: jnp.ndarray, kind: str = "loms", payload: Optional[jnp.ndarray] = None):
     """Full ascending sort along the last axis of unsorted values.
 
@@ -133,43 +144,58 @@ def sort(x: jnp.ndarray, kind: str = "loms", payload: Optional[jnp.ndarray] = No
     padded with +max sentinels and sliced back.
     kind='bitonic'|'oems': Batcher full sorts. kind='rank': single-stage
     rank sort (the N-sorter; O(n^2) comparators, depth 1).
+
+    Non-power-of-two payload sorts ride a canonical position index through
+    the network instead of the raw payload: a +max pad can tie a genuine
+    dtype-max value, and only an out-of-range index identifies the pad —
+    the valid prefix is recovered by mask (``stable_compact``), never by
+    value, and the payload is gathered afterwards.
     """
     n = x.shape[-1]
     if n == 1:
         return x if payload is None else (x, payload)
     if kind == "rank":
         return rank_sort(x, payload)
-    if kind in ("bitonic", "oems"):
-        npad = 1 << (n - 1).bit_length()
-        sched = _batcher.bitonic_sort(npad) if kind == "bitonic" else _batcher.oems_sort(npad)
-        xp = _pad_to(x, npad)
-        if payload is None:
-            return apply_schedule(sched, xp)[..., :n]
-        pp = _pad_to(payload, npad)
-        v, p = apply_schedule_with_payload(sched, xp, pp)
-        return v[..., :n], p[..., :n]
-    if kind != "loms":
+    if kind not in ("loms", "bitonic", "oems"):
         raise ValueError(f"unknown sort kind {kind!r}")
     npad = 1 << (n - 1).bit_length()
+    indexed = payload is not None and npad != n
     xp = _pad_to(x, npad)
-    pp = _pad_to(payload, npad) if payload is not None else None
-    run = 1
-    while run < npad:
-        # view as rows of two sorted runs and LOMS-merge each pair of runs
-        shape = xp.shape[:-1] + (npad // (2 * run), 2 * run)
-        xv = xp.reshape(shape)
-        if pp is not None:
-            pv = pp.reshape(shape)
-            xv, pv = merge(
-                xv[..., :run], xv[..., run:], payload=(pv[..., :run], pv[..., run:])
-            )
-            pp = pv.reshape(pp.shape)
+    if indexed:
+        pp = jnp.broadcast_to(jnp.arange(npad, dtype=jnp.int32), xp.shape)
+    elif payload is not None:
+        pp = payload
+    else:
+        pp = None
+    if kind in ("bitonic", "oems"):
+        sched = _batcher.bitonic_sort(npad) if kind == "bitonic" else _batcher.oems_sort(npad)
+        if pp is None:
+            xp = apply_schedule(sched, xp)
         else:
-            xv = merge(xv[..., :run], xv[..., run:])
-        xp = xv.reshape(xp.shape)
-        run *= 2
+            xp, pp = apply_schedule_with_payload(sched, xp, pp)
+    else:
+        run = 1
+        while run < npad:
+            # view as rows of two sorted runs and LOMS-merge each pair
+            shape = xp.shape[:-1] + (npad // (2 * run), 2 * run)
+            xv = xp.reshape(shape)
+            if pp is not None:
+                pv = pp.reshape(shape)
+                xv, pv = merge(
+                    xv[..., :run], xv[..., run:], payload=(pv[..., :run], pv[..., run:])
+                )
+                pp = pv.reshape(pp.shape)
+            else:
+                xv = merge(xv[..., :run], xv[..., run:])
+            xp = xv.reshape(xp.shape)
+            run *= 2
     if payload is None:
         return xp[..., :n]
+    if indexed:
+        from repro.kernels.common import stable_compact
+
+        xp, pp = stable_compact(pp < n, xp, pp)
+        return xp[..., :n], jnp.take_along_axis(payload, pp[..., :n], axis=-1)
     return xp[..., :n], pp[..., :n]
 
 
@@ -177,7 +203,9 @@ def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
     pad = n - x.shape[-1]
     if pad == 0:
         return x
-    fill = _dtype_max(x.dtype)
+    from repro.kernels.common import np_fill
+
+    fill = np_fill(_dtype_max(x.dtype), x.dtype)
     pad_widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
     return jnp.pad(x, pad_widths, constant_values=fill)
 
@@ -200,9 +228,12 @@ def topk(
     LOMS UP-k/DN-k merges (keep the top half). Depth = 1 + 2*ceil(log2(#blocks))
     stages, comparator count O(n*block + k^2 * n/block).
 
-    Sentinel slots (the -inf padding out to a block multiple) carry index
-    -1: a padded slot can tie with a real -max element, and any in-range
-    index would silently alias that element's position.
+    Sentinel slots (the dtype-min padding out to a block multiple) carry
+    index -1: a padded slot can tie with a real dtype-min element, and any
+    in-range index would silently alias that element's position. The pad
+    value is ``_dtype_min`` — negating ``_dtype_max`` is min+1 for signed
+    ints and wraps to 1 for unsigned, either of which sorts *above* a
+    genuine extreme and drops it from the result entirely.
     """
     n = x.shape[-1]
     assert 1 <= k <= n
@@ -211,7 +242,7 @@ def topk(
     block = min(block, n)
     nblk = -(-n // block)
     npad = nblk * block
-    neg_inf = -_dtype_max(x.dtype)
+    neg_inf = _dtype_min(x.dtype)
     pad_widths = [(0, 0)] * (x.ndim - 1) + [(0, npad - n)]
     xp = jnp.pad(x, pad_widths, constant_values=neg_inf)
     idx = jnp.broadcast_to(jnp.arange(npad, dtype=jnp.int32), xp.shape)

@@ -34,10 +34,19 @@ class SortSpec:
     backend: str = BACKEND_AUTO  # caller hint: auto|schedule|pallas|...
     device: str = "cpu"  # jax.default_backend() at call time
     sharded: bool = False  # a Parallelism with a usable TP axis was passed
+    #: NaN ordering for float inputs. ``"last"`` (default): NaNs sort
+    #: last, like ``jnp.sort`` — implemented by the total-order key
+    #: pre-pass (repro.api.keys), which also makes genuine ±inf safe on
+    #: the MXU one-hot permute path. ``"unsafe"``: skip the pre-pass and
+    #: feed raw floats to the comparison networks — fastest, but the
+    #: output is undefined (not even a permutation) if any input is NaN,
+    #: and ±inf corrupts MXU-permuted kernels. Integer dtypes ignore it.
+    nan_policy: str = "last"
 
     def __post_init__(self):
         assert self.op in OPS, f"unknown op {self.op!r}"
         assert self.lengths, "at least one input list required"
+        assert self.nan_policy in ("last", "unsafe"), self.nan_policy
 
     @property
     def total(self) -> int:

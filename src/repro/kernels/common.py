@@ -48,6 +48,21 @@ def sentinel_min(dtype):
     return int(jnp.iinfo(d).min)
 
 
+def np_fill(value, dtype):
+    """Pad value as a numpy scalar of ``dtype``: a bare python uint32-max
+    passed to jnp.pad/jnp.full overflows JAX's weak-int32 promotion."""
+    return np.asarray(value, jnp.dtype(dtype))
+
+
+def use_mxu_for(dtype) -> bool:
+    """Whether values of ``dtype`` may ride the f32 one-hot MXU permute.
+
+    Integer values — including the total-order float keys of
+    ``repro.api.keys`` — overflow the f32 matmul mantissa past 2^24, so
+    they must take the exact scatter permute instead."""
+    return bool(jnp.issubdtype(jnp.dtype(dtype), jnp.floating))
+
+
 def pad_batch(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
     """Pad the leading (batch) axis up to a multiple of ``multiple``.
 
@@ -61,13 +76,46 @@ def pad_batch(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
 
 def pad_tail_sorted(x: jnp.ndarray, length: int, descending: bool = False) -> jnp.ndarray:
     """Pad the last (sorted) axis out to ``length`` while keeping each row
-    sorted: +sentinel tail for ascending rows, -sentinel for descending."""
+    sorted: +sentinel tail for ascending rows, -sentinel for descending.
+
+    Sentinels are dtype extremes, so a genuine extreme value *ties* the
+    padding (it can never be displaced past it — the padded row stays a
+    sorted permutation of ``values + pads``). Value-only consumers are
+    therefore exact under aliasing; anything that carries indices or
+    payloads must track validity explicitly (an index ``-1`` per pad slot,
+    or a length mask resolved with :func:`stable_compact`)."""
     pad = length - x.shape[-1]
     assert pad >= 0, (x.shape, length)
     if pad == 0:
         return x
-    fill = sentinel_min(x.dtype) if descending else sentinel_max(x.dtype)
+    fill = np_fill(sentinel_min(x.dtype) if descending else sentinel_max(x.dtype),
+                   x.dtype)
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+
+
+def stable_compact(valid: jnp.ndarray, *arrays: jnp.ndarray):
+    """Stable valid-first compaction along the last axis.
+
+    Permutes each array (same shapes as ``valid``) so the slots where
+    ``valid`` is True come first, preserving relative order on both sides.
+    This is the mask-based answer to sentinel aliasing: when a genuine
+    extreme value ties a padding sentinel, the *mask* — not the value —
+    decides what the live prefix contains, so a pad can never displace a
+    real element's index or payload. On already value-sorted input whose
+    invalid slots all hold the +sentinel, compaction keeps the valid
+    prefix sorted (everything it moves past is a tied maximum)."""
+    v = valid.astype(jnp.int32)
+    n_valid = v.sum(axis=-1, keepdims=True)
+    dest = jnp.where(
+        valid,
+        jnp.cumsum(v, axis=-1) - 1,
+        n_valid + jnp.cumsum(1 - v, axis=-1) - 1,
+    )
+    outs = tuple(
+        jnp.put_along_axis(jnp.zeros_like(a), dest, a, axis=-1, inplace=False)
+        for a in arrays
+    )
+    return outs if len(outs) > 1 else outs[0]
 
 
 def onehot_permute(vals: jnp.ndarray, rank: jnp.ndarray, payload=None):

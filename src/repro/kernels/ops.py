@@ -32,6 +32,12 @@ def _pick_block_batch(bsz: int, target: int = 8) -> int:
     return 1
 
 
+def _use_mxu(dtype) -> bool:
+    from .common import use_mxu_for
+
+    return use_mxu_for(dtype)
+
+
 def merge2(
     a: jnp.ndarray, b: jnp.ndarray, *, n_cols: int = 2, kind: str = "loms"
 ) -> jnp.ndarray:
@@ -45,7 +51,8 @@ def merge2(
     assert kind == "loms"
     if m % n_cols == 0 and n % n_cols == 0:
         return loms_merge2_pallas(
-            a, b, n_cols=n_cols, block_batch=_pick_block_batch(a.shape[0])
+            a, b, n_cols=n_cols, block_batch=_pick_block_batch(a.shape[0]),
+            use_mxu=_use_mxu(a.dtype),
         )
     # ragged fallback: the pure-JAX executor (function-level import so the
     # module graph keeps the api -> streaming -> kernels -> core arrow)
@@ -59,7 +66,8 @@ def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched = core_loms.loms_kway(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    return kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]))
+    return kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]),
+                             use_mxu=_use_mxu(x.dtype))
 
 
 def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -67,7 +75,8 @@ def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched, pos = core_loms.loms_median(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    out = kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]))
+    out = kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]),
+                            use_mxu=_use_mxu(x.dtype))
     return out[..., pos]
 
 
@@ -85,5 +94,7 @@ def topk(
         blk = block or max(16, min(64, e))
         while e % blk:
             blk -= 1
-        return router_topk_pallas(x, k=k, block=blk, block_batch=bb)
-    return vocab_topk_pallas(x, k=k, block=block or 128, block_batch=bb)
+        return router_topk_pallas(x, k=k, block=blk, block_batch=bb,
+                                  use_mxu=_use_mxu(x.dtype))
+    return vocab_topk_pallas(x, k=k, block=block or 128, block_batch=bb,
+                             use_mxu=_use_mxu(x.dtype))

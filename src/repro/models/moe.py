@@ -81,17 +81,23 @@ def _positions_cumsum(flat_e: jnp.ndarray, n_experts: int):
     return (pos * oh).sum(-1)
 
 
-def _positions_sorted(flat_e: jnp.ndarray, n_experts: int):
+def _positions_sorted(flat_e: jnp.ndarray, n_experts: int, par=None):
     """Oblivious position-in-expert via a List Offset sort network.
 
     Sort composite keys (expert_id * n + arrival_index) — unique, so the
     (unstable) LOMS network yields a STABLE expert grouping, bit-identical
     to the cumsum path; position-in-expert = rank - start_of_expert.
-    Data-oblivious end to end (the paper's security/safety use case)."""
+    Data-oblivious end to end (the paper's security/safety use case).
+
+    With a TP-sharded ``par`` (the non-EP path, where this runs outside
+    any shard_map) the planner may route the key sort to the distributed
+    sample-sort — large token counts then sort device-parallel instead of
+    serially on one chip."""
     n = flat_e.shape[0]
     keys = flat_e.astype(jnp.int32) * n + jnp.arange(n, dtype=jnp.int32)
     sorted_keys, perm = unified_sort(
-        keys, payload=jnp.arange(n, dtype=jnp.int32), backend="schedule")
+        keys, payload=jnp.arange(n, dtype=jnp.int32),
+        backend="schedule" if par is None else "auto", par=par)
     sorted_e = sorted_keys // n
     counts = (flat_e[:, None] == jnp.arange(n_experts)[None, :]).sum(0)
     starts = jnp.cumsum(counts) - counts
@@ -117,6 +123,7 @@ def moe_ffn_local(
     axis_name: Optional[str] = None,
     ep_size: int = 1,
     ep_psum: bool = False,
+    par=None,
 ):
     """Routed expert FFN on local tokens. Two expert-parallel modes:
     all_to_all (tokens sequence-sharded; training/prefill) and ep_psum
@@ -141,8 +148,21 @@ def moe_ffn_local(
     tok_of = jnp.arange(t * k, dtype=jnp.int32) // k
     cap = int(np.ceil(t * k / e * mo.capacity_factor))
     cap = max(4, cap + (-cap) % 4)
-    if mo.dispatch == "sorted" and t * k <= 4096:
-        pos = _positions_sorted(flat_e, e)
+    # the oblivious sorted dispatch is affordable up to 4096 keys on one
+    # device; with a TP axis the distributed sample-sort extends the range
+    # (keys stay exact int32 composites: e * t * k < 2^31 holds there).
+    # The raise only applies from DIST_MIN_TOTAL up — below it the planner
+    # would still pick the expensive single-device merge-tree sort.
+    sorted_cap = 4096
+    if par is not None and t * k >= sorted_cap and e * t * k < 2 ** 31:
+        from repro.parallel.dist_sort import DIST_MIN_TOTAL
+        from repro.parallel.sharding import dist_sort_axis
+
+        if (t * k >= DIST_MIN_TOTAL
+                and dist_sort_axis(par, (t * k,)) is not None):
+            sorted_cap = 1 << 16
+    if mo.dispatch == "sorted" and t * k <= sorted_cap:
+        pos = _positions_sorted(flat_e, e, par=par)
     else:
         pos = _positions_cumsum(flat_e, e)
     keep = pos < cap
@@ -181,7 +201,10 @@ def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, par=None):
     shard_map (tokens sequence-sharded over the TP axis for this block)."""
     b, s, d = x.shape
     if par is None or not par.ep_enabled:
-        y = moe_ffn_local(p, x.reshape(b * s, d), cfg)
+        # par (when given) rides along so the oblivious sorted dispatch can
+        # engage the distributed sample-sort; inside the shard_map EP path
+        # below it must stay None (no nested meshes)
+        y = moe_ffn_local(p, x.reshape(b * s, d), cfg, par=par)
         return y.reshape(b, s, d)
 
     from jax.sharding import PartitionSpec as P

@@ -72,6 +72,18 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
                       check_rep=check)
 
 
+def dist_sort_axis(par: Optional[Parallelism], lengths) -> Optional[str]:
+    """Mesh axis for the distributed sample-sort (parallel.dist_sort), or
+    None when the lists cannot shard evenly over the TP axis — every input
+    list must split into equal per-device slices for the static-shape
+    ``shard_map`` pipeline."""
+    if par is None or getattr(par, "tp_size", 1) <= 1:
+        return None
+    if any(ln < par.tp_size or ln % par.tp_size for ln in lengths):
+        return None
+    return par.tp_axis
+
+
 def vocab_topk_axis(par: Parallelism, vocab_size: int) -> Optional[str]:
     """Mesh axis for the serving device-tree top-k (streaming.tree), or None
     when the vocab can't shard over TP and sampling stays single-device."""

@@ -16,9 +16,12 @@ TPU and the schedule executor elsewhere.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.api import sort as unified_sort
 from repro.api import topk as unified_topk
 
 
@@ -48,7 +51,7 @@ def sample_topp(
     logits: jnp.ndarray,  # (B, V)
     *,
     p: float = 0.9,
-    k_max: int = 256,
+    k_max: Optional[int] = 256,
     temperature: float = 1.0,
     par=None,
 ) -> jnp.ndarray:
@@ -57,8 +60,20 @@ def sample_topp(
     The merge kernels hand back the candidates already sorted descending,
     so the nucleus is one cumulative sum over the k_max prefix — no extra
     sort. Candidates beyond k_max carry negligible mass for any practical
-    p (< 1e-4 at p <= 0.99 for trained LMs)."""
-    vals, idx = unified_topk(logits, k_max, par=par)  # descending
+    p (< 1e-4 at p <= 0.99 for trained LMs).
+
+    ``k_max=None`` makes the nucleus *exact*: the whole vocab row is
+    ranked through ``repro.sort`` (descending, indices riding the
+    permutation). With a TP-sharded :class:`Parallelism` whose axis
+    divides the vocab, the planner routes that ranking to the distributed
+    sample-sort backend — the full logits row is never gathered onto one
+    device, same as the tree top-k path."""
+    if k_max is None:
+        v = logits.shape[-1]
+        iota = jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32), logits.shape)
+        vals, idx = unified_sort(logits, descending=True, payload=iota, par=par)
+    else:
+        vals, idx = unified_topk(logits, k_max, par=par)  # descending
     probs = jax.nn.softmax(vals.astype(jnp.float32) / temperature, axis=-1)
     cum = jnp.cumsum(probs, axis=-1)
     # keep the smallest prefix with mass >= p (always keep the top-1)

@@ -17,6 +17,7 @@ from .planner import (  # noqa: F401
     MergePlan,
     autotune_merge2,
     fits_vmem,
+    kway_fits_vmem,
     plan_chunked,
     plan_chunked_k,
     plan_merge2,

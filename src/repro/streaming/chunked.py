@@ -23,6 +23,18 @@ inputs (DESIGN.md §8):
 
 Both produce exactly ``sort(concat(inputs))`` — bit-identical values — for
 NaN-free inputs of any length, batched or unbatched.
+
+Sentinel aliasing: drain tiles and ragged tail segments are padded with
+the finite ``sentinel_max`` of the dtype, so a genuine extreme value
+(``INT32_MAX``, ``uint`` max) *ties* its padding. That is safe here —
+these pipelines are value-only, the output is ascending, and a sentinel
+emitted inside the live prefix is value-identical to the tied genuine
+element it stands in for (regression-tested in
+tests/test_sentinels.py). The k-way tail segments additionally carry an
+explicit valid-length mask (``lane < seg_len``) rather than trusting the
+pad value. Anything index- or payload-carrying must not reuse this
+scheme — see ``kernels.common.stable_compact`` and the ``-1`` position
+convention in ``parallel/dist_sort.py``.
 """
 from __future__ import annotations
 
@@ -33,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import loms as core_loms
-from repro.kernels.common import pad_tail_sorted, sentinel_max
+from repro.kernels.common import np_fill, pad_tail_sorted, sentinel_max
 from repro.kernels.kway import kway_merge_pallas
 from repro.kernels.loms_merge import loms_merge2_pallas
 
@@ -209,7 +221,7 @@ def chunked_merge_k(
         for pj in pos
     ]
     padded = [pad_tail_sorted(f, lens[j] + t) for j, f in enumerate(flat)]
-    fill = sentinel_max(flat[0].dtype)
+    fill = np_fill(sentinel_max(flat[0].dtype), flat[0].dtype)
     lane = jnp.arange(t, dtype=jnp.int32)
     load = jax.vmap(lambda row, p: jax.lax.dynamic_slice(row, (p,), (t,)))
 

@@ -98,6 +98,14 @@ def fits_vmem(
     return _vmem_bytes_merge2(m, n, n_cols, block_batch, dtype) <= _VMEM_BUDGET
 
 
+def kway_fits_vmem(total: int) -> bool:
+    """Whether a schedule-driven k-way merge of ``total`` elements stays
+    inside the budget: it materializes a total^2 f32 comparison cloud per
+    batch row. Shared by the dispatch ladder and the distributed
+    sample-sort's per-device merge choice."""
+    return total * total * 4 <= _VMEM_BUDGET
+
+
 def plan_merge2(
     m: int,
     n: int,

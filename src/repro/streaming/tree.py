@@ -26,7 +26,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.common import merge2_sorted, sentinel_min, sort_nsorter
+from repro.kernels.common import (
+    merge2_sorted,
+    sentinel_min,
+    sort_nsorter,
+    use_mxu_for,
+)
+
+
+def _resolve_mxu(use_mxu: Optional[bool], dtype) -> bool:
+    """``use_mxu=None`` -> by dtype (kernels.common.use_mxu_for): int
+    values would overflow the f32 one-hot matmul mantissa."""
+    if use_mxu is None:
+        return use_mxu_for(dtype)
+    return bool(use_mxu)
 
 
 def _merge_desc(av, ai, bv, bi, keep: int, use_mxu: bool):
@@ -56,13 +69,14 @@ def local_topk_desc(
     *,
     block: int = 128,
     offset=0,
-    use_mxu: bool = True,
+    use_mxu: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blockwise descending top-k of (B, E) with global indices ``+offset``.
 
     The in-kernel algorithm of ``router_topk_pallas`` as plain jnp: N-sorter
     per block, then a log-depth tree of truncated LOMS merges. Safe inside
     shard_map/vmap (no pallas_call)."""
+    use_mxu = _resolve_mxu(use_mxu, x.dtype)
     bsz, e = x.shape
     neg = sentinel_min(x.dtype)
     nblk = -(-e // block)
@@ -105,7 +119,7 @@ def tree_topk(
     mesh: Optional[Mesh] = None,
     axis: Optional[str] = None,
     block: int = 128,
-    use_mxu: bool = True,
+    use_mxu: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Descending top-k (values, int32 indices) over the last axis of (B, E).
 
@@ -113,6 +127,7 @@ def tree_topk(
     sharded over that axis and reduced by the device-tree; otherwise this is
     the single-device log-tree (same merge network, local edges)."""
     assert x.ndim == 2, x.shape
+    use_mxu = _resolve_mxu(use_mxu, x.dtype)
     bsz, e = x.shape
     if mesh is None or axis is None or mesh.shape[axis] == 1:
         vs, is_ = local_topk_desc(x, k, block=block, use_mxu=use_mxu)

@@ -16,7 +16,8 @@ from hypothesis import given, settings, strategies as st
 import repro
 
 RNG = np.random.default_rng(23)
-DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32, jnp.uint32]
+FLOAT_DTYPES = [jnp.float32, jnp.bfloat16]
 
 
 def _rand(shape, dtype, lo=0, hi=100):
@@ -90,6 +91,60 @@ def test_topk_property_matches_lax_topk(data):
     taken = np.take_along_axis(np.asarray(x.astype(jnp.float32)),
                                np.asarray(i), -1)
     np.testing.assert_array_equal(taken, np.asarray(rv))
+
+
+def _with_specials(shape):
+    """Float data sprinkled with NaN/+inf/-inf (nan_policy='last' cases)."""
+    base = RNG.standard_normal(shape)
+    m = RNG.random(shape)
+    base = np.where(m < 0.2, np.nan, base)
+    base = np.where((m >= 0.2) & (m < 0.35), np.inf, base)
+    base = np.where((m >= 0.35) & (m < 0.5), -np.inf, base)
+    return base
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_sort_nan_inf_property_matches_jnp(data):
+    dtype = data.draw(st.sampled_from(FLOAT_DTYPES))
+    n = data.draw(st.integers(2, 24))
+    descending = data.draw(st.booleans())
+    x = jnp.asarray(_with_specials((2, n))).astype(dtype)
+    out = repro.sort(x, descending=descending)
+    ref = np.sort(np.asarray(x.astype(jnp.float32)), axis=-1)  # NaNs last
+    if descending:
+        ref = ref[..., ::-1]
+    np.testing.assert_array_equal(np.asarray(out.astype(jnp.float32)), ref)
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_merge_nan_inf_property_matches_sorted_concat(data):
+    dtype = data.draw(st.sampled_from(FLOAT_DTYPES))
+    m = data.draw(st.integers(1, 16))
+    n = data.draw(st.integers(1, 16))
+    a = jnp.sort(jnp.asarray(_with_specials((2, m))).astype(dtype), -1)
+    b = jnp.sort(jnp.asarray(_with_specials((2, n))).astype(dtype), -1)
+    out = repro.merge(a, b)
+    ref = np.sort(np.concatenate(
+        [np.asarray(a.astype(jnp.float32)), np.asarray(b.astype(jnp.float32))],
+        -1), -1)
+    np.testing.assert_array_equal(np.asarray(out.astype(jnp.float32)), ref)
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_topk_nan_inf_property(data):
+    """Descending top-k under nan_policy='last': NaNs rank above +inf
+    (the flipped ascending order), masked -inf logits stay candidates."""
+    n = data.draw(st.integers(4, 64))
+    k = data.draw(st.integers(1, min(n, 8)))
+    x = jnp.asarray(_with_specials((3, n)), jnp.float32)
+    v, i = repro.topk(x, k)
+    ref = np.sort(np.asarray(x), axis=-1)[..., ::-1][..., :k]
+    np.testing.assert_array_equal(np.asarray(v), ref)
+    taken = np.take_along_axis(np.asarray(x), np.asarray(i), -1)
+    np.testing.assert_array_equal(taken, np.asarray(v))
 
 
 @given(data=st.data())

@@ -1,0 +1,229 @@
+"""Sentinel-aliasing and NaN-policy regression tests.
+
+Padding sentinels are finite dtype extremes, so genuine extreme values
+(``INT32_MAX``, ``uint32`` zeros, float ±inf) can tie them. These tests
+pin the contract: values are never dropped or reordered by a pad, indices
+and payloads are decided by validity masks (never by comparing against
+the sentinel value), and float specials follow the documented
+``nan_policy="last"`` ordering (NaNs last, like ``jnp.sort``).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.api import schedules
+from repro.api.keys import decode_keys, encode_keys, has_key_transform
+
+I32 = np.iinfo(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# integer sentinel aliasing
+# ---------------------------------------------------------------------------
+
+
+def test_topk_keeps_genuine_int32_min():
+    """The block pad used to be -_dtype_max = min+1, which outranked a
+    genuine iinfo.min and replaced it (wrong value, index -1)."""
+    x = jnp.asarray([[I32.min, 5, I32.max, 0, I32.min, 7]], jnp.int32)
+    v, i = repro.topk(x, 6)
+    assert np.asarray(v)[0].tolist() == [I32.max, 7, 5, 0, I32.min, I32.min]
+    assert sorted(np.asarray(i)[0].tolist()) == [0, 1, 2, 3, 4, 5]
+    taken = np.take_along_axis(np.asarray(x), np.asarray(i), -1)
+    np.testing.assert_array_equal(taken, np.asarray(v))
+
+
+def test_topk_keeps_genuine_uint32_zeros():
+    """uint32 pads used to wrap (-max -> 1) and sort above genuine 0s."""
+    x = jnp.asarray([[0, 3, 2**32 - 1, 0, 1]], jnp.uint32)
+    v, i = repro.topk(x, 5)
+    assert np.asarray(v)[0].tolist() == [2**32 - 1, 3, 1, 0, 0]
+    assert sorted(np.asarray(i)[0].tolist()) == [0, 1, 2, 3, 4]
+
+
+def test_schedules_topk_direct_int_extremes():
+    x = jnp.asarray([[I32.min, I32.min + 1, I32.min]], jnp.int32)
+    v, i = schedules.topk(x, 3, block=2)  # forces a padded block
+    assert np.asarray(v)[0].tolist() == [I32.min + 1, I32.min, I32.min]
+    assert sorted(np.asarray(i)[0].tolist()) == [0, 1, 2]
+
+
+def test_sort_payload_not_aliased_by_pow2_padding():
+    """Non-power-of-two payload sorts pad with +max; a genuine INT32_MAX
+    used to be able to swap payloads with a pad slot."""
+    x = jnp.asarray([[I32.max, 1, I32.max, 0, 2]], jnp.int32)  # pads to 8
+    pay = jnp.asarray([[10, 11, 12, 13, 14]], jnp.int32)
+    out, tree = repro.sort(x, payload={"p": pay})
+    assert np.asarray(out)[0].tolist() == [0, 1, 2, I32.max, I32.max]
+    assert sorted(np.asarray(tree["p"])[0].tolist()) == [10, 11, 12, 13, 14]
+    assert set(np.asarray(tree["p"])[0, 3:].tolist()) == {10, 12}
+
+
+def test_sort_uint32_with_zeros_and_max():
+    x = jnp.asarray([[2**32 - 1, 0, 7, 0, 2**32 - 1, 1, 0]], jnp.uint32)
+    out = repro.sort(x)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.sort(np.asarray(x), -1))
+
+
+@pytest.mark.parametrize("dtype,hi", [(jnp.int32, I32.max), (jnp.uint32, 2**32 - 1)])
+def test_chunked_merges_value_exact_at_extremes(dtype, hi):
+    """Streaming drain tiles pad with the dtype max: a genuine extreme in
+    the data must still come out (a tied sentinel stands in value-
+    identically)."""
+    from repro.streaming import chunked_merge, chunked_merge_k
+
+    rng = np.random.default_rng(3)
+    a = np.sort(rng.integers(0, 50, (2, 40)).astype(np.int64), -1)
+    b = np.sort(rng.integers(0, 50, (2, 24)).astype(np.int64), -1)
+    a[:, -3:] = hi  # saturated tails alias the drain sentinels
+    b[0, :2] = 0
+    ja, jb = jnp.asarray(a, dtype), jnp.asarray(b, dtype)
+    out = chunked_merge(ja, jb, tile=8)
+    ref = np.sort(np.concatenate([a, b], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64), ref)
+    lists = [ja, jb, jnp.asarray(np.full((2, 16), hi), dtype)]
+    out = chunked_merge_k(lists, tile=8)
+    ref = np.sort(np.concatenate([a, b, np.full((2, 16), hi)], -1), -1)
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64), ref)
+
+
+def test_stable_compact_moves_invalid_last_stably():
+    from repro.kernels.common import stable_compact
+
+    vals = jnp.asarray([[1, 9, 2, 9, 3]], jnp.int32)
+    pos = jnp.asarray([[0, -1, 1, -1, 2]], jnp.int32)
+    v, p = stable_compact(pos >= 0, vals, pos)
+    assert np.asarray(v)[0].tolist() == [1, 2, 3, 9, 9]
+    assert np.asarray(p)[0].tolist() == [0, 1, 2, -1, -1]
+
+
+def test_kernel_topk_int32_exact_past_mantissa():
+    """kernels.ops.topk must not route int32 through the f32 one-hot
+    matmul: values past 2^24 would come back corrupted."""
+    from repro.kernels.ops import topk as kernel_topk
+
+    base = 1 << 28
+    x = jnp.asarray([[base + 3, base + 1, base + 7, base + 5]], jnp.int32)
+    x = jnp.broadcast_to(x, (4, 4))
+    v, i = kernel_topk(x, 2)
+    assert np.asarray(v)[0].tolist() == [base + 7, base + 5]
+    assert np.asarray(i)[0].tolist() == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# NaN policy / total-order keys
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_key_transform_roundtrip_and_order(dtype):
+    xs = jnp.asarray([np.nan, -np.inf, -3.5, -0.0, 0.0, 1.0, np.inf], dtype)
+    assert has_key_transform(dtype)
+    k = encode_keys(xs)
+    assert k.dtype == jnp.int32
+    # strictly increasing keys for the strictly increasing specials, NaN last
+    kk = np.asarray(k)
+    order = np.argsort(kk, kind="stable")
+    back = np.asarray(decode_keys(k, dtype).astype(jnp.float32))[order]
+    np.testing.assert_array_equal(
+        back, np.sort(np.asarray(xs.astype(jnp.float32))))
+    # bijective: exact bit roundtrip (NaN canonicalized)
+    np.testing.assert_array_equal(
+        np.asarray(decode_keys(k, dtype).astype(jnp.float32)),
+        np.asarray(xs.astype(jnp.float32)))
+
+
+def test_sort_nans_last_like_jnp():
+    x = jnp.asarray([[np.nan, 1.0, -np.inf, np.inf, 0.0, np.nan, -1.0]],
+                    jnp.float32)
+    np.testing.assert_array_equal(np.asarray(repro.sort(x)),
+                                  np.sort(np.asarray(x), -1))
+    np.testing.assert_array_equal(np.asarray(repro.sort(x, descending=True)),
+                                  np.sort(np.asarray(x), -1)[:, ::-1])
+
+
+def test_merge_with_inf_inputs_exact():
+    a = jnp.asarray([[-np.inf, 0.0, np.inf]], jnp.float32)
+    b = jnp.asarray([[-1.0, np.inf]], jnp.float32)
+    out = repro.merge(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1))
+
+
+def test_topk_with_masked_neg_inf_logits():
+    """Masked -inf logits used to sort below the finite -max pad; with the
+    key transform they stay genuine candidates with real indices."""
+    x = jnp.asarray([[1.0, -np.inf, 2.0, -np.inf]], jnp.float32)
+    v, i = repro.topk(x, 4)
+    assert np.asarray(v)[0].tolist() == [2.0, 1.0, -np.inf, -np.inf]
+    assert sorted(np.asarray(i)[0].tolist()) == [0, 1, 2, 3]
+
+
+def test_nan_policy_unsafe_skips_transform():
+    """The opt-out keeps the raw-float path (exact on finite inputs)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 9)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(repro.sort(x, nan_policy="unsafe")),
+        np.sort(np.asarray(x), -1))
+    with pytest.raises(AssertionError):
+        repro.sort(x, nan_policy="sometimes")
+
+
+def test_values_only_sort_and_merge_stay_differentiable():
+    """The key pre-pass must not sever gradients: the custom-VJP decode
+    recovers the sort permutation in the backward pass."""
+    import jax
+
+    g = jax.grad(lambda v: repro.sort(v).sum())(jnp.asarray([3.0, 1.0, 2.0]))
+    assert np.asarray(g).tolist() == [1.0, 1.0, 1.0]
+    w = jnp.asarray([1.0, 2.0, 3.0])
+    g = jax.grad(lambda v: (repro.sort(v, descending=True) * w).sum())(
+        jnp.asarray([3.0, 1.0, 2.0]))
+    assert np.asarray(g).tolist() == [1.0, 3.0, 2.0]
+    a, b = jnp.asarray([[1.0, 4.0]]), jnp.asarray([[2.0, 3.0]])
+    wm = jnp.asarray([1.0, 10.0, 100.0, 1000.0])
+    ga = jax.grad(lambda x, y: (repro.merge(x, y) * wm).sum())(a, b)
+    assert np.asarray(ga).tolist() == [[1.0, 1000.0]]
+
+
+def test_median_stays_differentiable():
+    import jax
+
+    a0 = jnp.asarray([[2.0, 4.0, 6.0]])
+    b = jnp.asarray([[1.0, 3.0, 9.0]])
+    c = jnp.asarray([[0.0, 5.0, 7.0]])
+    assert float(repro.median_of_lists([a0, b, c])[0]) == 4.0
+    g = jax.grad(lambda a: repro.median_of_lists([a, b, c]).sum())(a0)
+    assert np.asarray(g).tolist() == [[0.0, 1.0, 0.0]]
+
+
+def test_sort_float64_nans_last_under_x64():
+    import jax
+
+    if not jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 disabled: no float64 arrays exist")
+    x = jnp.asarray([[3.0, np.nan, 1.0, 2.0]], jnp.float64)
+    np.testing.assert_array_equal(np.asarray(repro.sort(x)),
+                                  np.sort(np.asarray(x), -1))
+
+
+def test_merge_mixed_float_dtypes_promotes():
+    """Mixed-width float lists must promote before key encoding: int16 and
+    int32 keys are not comparable."""
+    out = repro.merge(jnp.asarray([[0.5, 1.5, 2.5]], jnp.float32),
+                      jnp.asarray([[1.0, 2.0, 3.0]], jnp.bfloat16))
+    assert out.dtype == jnp.float32
+    assert np.asarray(out).tolist() == [[0.5, 1.0, 1.5, 2.0, 2.5, 3.0]]
+
+
+def test_median_with_inf():
+    ls = [jnp.asarray([[-np.inf, 0.0, np.inf]], jnp.float32),
+          jnp.asarray([[-1.0, 1.0, np.inf]], jnp.float32),
+          jnp.asarray([[-np.inf, 2.0, 3.0]], jnp.float32)]
+    m = repro.median_of_lists(ls)
+    ref = np.sort(np.concatenate([np.asarray(l) for l in ls], -1), -1)[:, 4]
+    np.testing.assert_array_equal(np.asarray(m), ref)
