@@ -3,11 +3,40 @@
   PYTHONPATH=src python -m benchmarks.run            # all sorter benches
   PYTHONPATH=src python -m benchmarks.run --roofline # + roofline table
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+Also writes the repo-root ``BENCH_sort.json`` trajectory — one entry per
+(op, shape, dtype, backend) with wall time and the XLA-level op-count
+proxy from :mod:`benchmarks.fused_pipeline` — so fused-path perf
+regressions stay visible across PRs (CI gates on bit-equality and the
+op-count proxy, never on wall time, which is noisy on shared runners).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sort.json")
+
+
+def write_bench_json(rows) -> str:
+    path = os.path.abspath(BENCH_JSON)
+    import jax
+
+    payload = {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "platform": jax.default_backend(),
+        "note": ("wall_us is informational (interpret mode off-TPU); "
+                 "xla_ops is the deterministic regression proxy"),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -19,7 +48,7 @@ def main() -> None:
 
     from . import api_dispatch, dist_sort, fig11_12_speed_2way
     from . import fig13_resources_2way, fig14_17_lut_modes, fig18_20_3way
-    from . import moe_routing, streaming_merge
+    from . import fused_pipeline, moe_routing, streaming_merge
 
     modules = {
         "fig11_12": fig11_12_speed_2way,
@@ -30,13 +59,20 @@ def main() -> None:
         "streaming": streaming_merge,
         "api_dispatch": api_dispatch,
         "dist_sort": dist_sort,
+        "fused": fused_pipeline,
     }
     print("name,us_per_call,derived")
+    bench_rows = None
     for name, mod in modules.items():
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        mod.run()
+        out = mod.run()
+        if name == "fused":
+            bench_rows = out[0]
+    if bench_rows is not None:
+        path = write_bench_json(bench_rows)
+        print(f"# wrote {path}", file=sys.stderr)
     if args.roofline:
         from . import roofline
 

@@ -8,6 +8,7 @@ chunked streaming pipeline, or the device-tree sharded reduction). The
 same functions are re-exported at the top level: ``repro.topk(...)``.
 """
 from .dispatch import Decision, ROUTER_TOPK_MAX, decision_table, plan  # noqa: F401
+from .fused import fused_enabled, set_fused_enabled  # noqa: F401
 from .ops import (  # noqa: F401
     median_of_lists,
     merge,

@@ -17,9 +17,11 @@ The decision table (DESIGN.md §9):
   topk     TPU, axis <= 512                           pallas     router_topk
   topk     otherwise (CPU/GPU hosts)                  schedule   blockwise
   sort     TP-sharded + total >= DIST_MIN_TOTAL       sharded    sample_sort
-  sort     otherwise (no Pallas full-sort kernel)     schedule   merge_tree
+  sort     TPU + fits VMEM, not stable                pallas     sort_fused
+  sort     otherwise (stable / over-VMEM / non-TPU)   schedule   merge_tree
   merge    TP-sharded + total >= DIST_MIN_TOTAL       sharded    sample_merge
-  merge    payload / stable (perm needed)             schedule   payload
+  merge    payload, TPU + fits VMEM, not stable       pallas     fused_payload
+  merge    payload / stable otherwise (perm needed)   schedule   payload
   merge    ragged lengths (no common column count)    schedule   ragged
   merge    working set past the VMEM budget           streaming  chunked
   merge    TPU, fits VMEM                             pallas     loms_merge2
@@ -27,6 +29,14 @@ The decision table (DESIGN.md §9):
   merge_k  same ladder as merge                       ...        kway/chunked
   median   TPU + equal odd lists, no perm             pallas     kway_median
   median   otherwise                                  schedule   loms_median
+
+The pallas rows run *fused*: NaN-policy key encode/decode, the payload
+permute, and descending reversal all execute inside the kernel launch
+(repro.api.fused), so a float32 ``repro.sort`` with ``nan_policy="last"``
+and a payload is one ``pallas_call`` with no XLA-level encode/decode/
+gather around it. Tile knobs (block_batch / n_cols / topk block) come
+from the VMEM-aware autotuner (streaming.planner.plan_op: cache-hit
+autotuned tiles, VMEM-fit heuristics otherwise).
 
 The sharded rows engage when the caller offered a Parallelism whose TP
 axis divides every list length (spec.sharded); below DIST_MIN_TOTAL the
@@ -78,6 +88,16 @@ def _dist_min_total() -> int:
     return DIST_MIN_TOTAL
 
 
+def _fused_on() -> bool:
+    """The fused-pipeline escape hatch (repro.api.fused): when switched
+    off, the auto ladder stops offering the fused pallas rows, so sort
+    and payload merges revert to the pre-fusion executor routing.
+    Explicit ``backend="pallas"`` asks are still honored."""
+    from .fused import fused_enabled
+
+    return fused_enabled()
+
+
 def _dist_eligible(spec: SortSpec) -> bool:
     """Sharded sample-sort rows: a usable TP axis was offered (the ops
     layer sets spec.sharded only when every list length divides it) and
@@ -127,10 +147,17 @@ def plan(spec: SortSpec, par=None) -> Decision:
                 f"TP-sharded, total {spec.total} >= {_dist_min_total()}: "
                 "PSRS sample-sort over the mesh axis",
             )
+        if (spec.device == "tpu" and _fused_on()
+                and get_backend("pallas").supports(spec)):
+            return Decision(
+                "pallas", "loms_sort_fused",
+                "TPU, fits VMEM: single-launch fused merge-tree sort "
+                "(in-kernel key transform + payload lanes)",
+            )
         return Decision(
             "schedule", "loms_merge_tree",
-            "full sort = 2-sorter pairs + LOMS merge tree (no Pallas "
-            "full-sort kernel yet)",
+            "full sort = 2-sorter pairs + LOMS merge tree (stable / "
+            "over-VMEM / non-TPU hosts)",
         )
 
     if spec.op == "median":
@@ -148,6 +175,13 @@ def plan(spec: SortSpec, par=None) -> Decision:
             "local k-way LOMS merge of list slices + PSRS exchange",
         )
     if spec.needs_perm:
+        if (spec.device == "tpu" and _fused_on()
+                and get_backend("pallas").supports(spec)):
+            return Decision(
+                "pallas", "fused_payload",
+                "TPU, fits VMEM: payload rides the kernel permutes in "
+                "VMEM (single fused launch)",
+            )
         return Decision(
             "schedule", "payload",
             "payload/stable needs the permutation-carrying executor",

@@ -1,0 +1,360 @@
+"""Fused single-launch execution paths for the pallas backend.
+
+The generic ops pipeline (``ops.py``) surrounds every backend call with
+XLA-level passes: the NaN-policy key encode/decode (``keys.py``), the
+position-payload build + pytree gather (``payload.py``), and the
+descending reverse. Each is an extra HBM round-trip over the full data —
+the traffic the paper's single-device merges exist to avoid. This module
+short-circuits all of it when the planner picks the pallas backend: the
+kernels (``kernels/sort.py``, ``kernels/loms_merge.py``,
+``kernels/kway.py``, ``kernels/topk.py``) encode on load, thread an int32
+position lane through their permutes, gather payload lanes in VMEM, and
+decode on store — one ``pallas_call`` for a float ``repro.sort`` with
+``nan_policy="last"`` and a payload.
+
+Differentiability: the in-kernel decode removes the XLA decode step the
+custom-VJP machinery in ``ops.py`` wrapped, so each fused entry here is
+itself a ``jax.custom_vjp``. Backward recovers the sorting permutation
+with one stable argsort of the encoded input (the same subgradient
+convention as ``jnp.sort``'s VJP / ``_decode_sorted_bwd``) and scatters
+the cotangents — values keep training through fused sorts/merges, and the
+fused top-k matches the gather-from-raw VJP the MoE router relies on.
+
+``set_fused_enabled(False)`` (or ``REPRO_DISABLE_FUSED=1``) reverts
+*auto* dispatch to the pre-fusion routing (sort and payload merges go
+back to the executor; the planner stops offering the fused pallas rows)
+and makes the fused entry points here decline, so ops.py falls back to
+the executor for permutation-carrying specs. An explicit
+``backend="pallas"`` ask is still honored for values-only specs — the
+caller named the kernel backend — but runs it unfused (XLA-level
+encode/decode around the kernel). This is the benchmark baseline and the
+escape hatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import encode_key_values, key_transformable
+
+from .spec import SortSpec
+
+_ENABLED = True
+
+
+def fused_enabled() -> bool:
+    return _ENABLED and os.environ.get("REPRO_DISABLE_FUSED") != "1"
+
+
+def set_fused_enabled(enabled: bool) -> bool:
+    """Toggle the fused fast paths (returns the previous value)."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(enabled)
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# eligibility
+# ---------------------------------------------------------------------------
+
+
+def fused_eligible(spec: SortSpec) -> bool:
+    """Whether the pallas kernels can run ``spec`` as one fused launch.
+
+    ``stable=True`` stays on the executor (the tie-stabilization pass is
+    an XLA post-pass by design); ragged 2-way merges defeat the hole-free
+    kernel layout; everything else gates on the VMEM fit."""
+    from repro.streaming.planner import fits_vmem, kway_fits_vmem, sort_fits_vmem
+
+    if spec.network != "loms" or spec.stable:
+        return False
+    if spec.op == "sort":
+        return sort_fits_vmem(spec.total, dtype=jnp.dtype(spec.dtype))
+    if spec.op == "merge":
+        return not spec.ragged2 and fits_vmem(
+            spec.lengths[0], spec.lengths[1], dtype=jnp.dtype(spec.dtype))
+    if spec.op == "merge_k":
+        return kway_fits_vmem(spec.total)
+    if spec.op == "topk":
+        return True
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedCfg:
+    """Static knobs of one fused kernel call (hashable: jit/custom_vjp
+    treat it as a nondiff static argument)."""
+
+    op: str
+    lens: Tuple[int, ...]
+    key_dtype: Optional[str]  # original float dtype name, None = no encode
+    descending: bool = False
+    block_batch: int = 8
+    n_cols: int = 2
+    use_mxu: bool = True
+    block: int = 0
+    k: Optional[int] = None
+
+
+def fused_cfg_for(spec: SortSpec, batch: int, dtype) -> Optional[FusedCfg]:
+    """Build the static config for one eligible spec (None if ineligible).
+
+    ``dtype`` is the *raw* input dtype — the key transform fuses into the
+    kernel whenever ``nan_policy="last"`` covers it, and the permute path
+    drops to the exact scatter for int working values."""
+    if not fused_enabled() or not fused_eligible(spec):
+        return None
+    from repro.streaming.planner import plan_op
+
+    key_dtype = (jnp.dtype(dtype).name
+                 if spec.nan_policy == "last" and key_transformable(dtype)
+                 else None)
+    # encoded keys are ints: they must take the exact scatter permute
+    float_vals = key_dtype is None and jnp.issubdtype(jnp.dtype(dtype),
+                                                      jnp.floating)
+    if spec.op == "sort":
+        plan = plan_op("sort", spec.lengths, batch=batch, dtype=dtype)
+    elif spec.op == "merge":
+        plan = plan_op("merge2", spec.lengths, batch=batch, dtype=dtype)
+    elif spec.op == "merge_k":
+        plan = plan_op("kway", spec.lengths, batch=batch, dtype=dtype)
+    else:
+        plan = plan_op("topk", spec.lengths, batch=batch, dtype=dtype,
+                       k=spec.k)
+    return FusedCfg(
+        op=spec.op, lens=tuple(spec.lengths), key_dtype=key_dtype,
+        descending=spec.descending, block_batch=plan.block_batch,
+        n_cols=plan.n_cols if plan.kind == "loms" else 2,
+        use_mxu=plan.use_mxu and float_vals, block=plan.block, k=spec.k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# backward-pass helpers (shared by every fused vjp)
+# ---------------------------------------------------------------------------
+
+
+def _keys_of(cfg: FusedCfg, x: jnp.ndarray) -> jnp.ndarray:
+    return encode_key_values(x) if cfg.key_dtype is not None else x
+
+
+def _scatter_axis1(ct, order, primal):
+    """Cotangent scatter for ``out = primal[:, order]`` (same-shape,
+    permutation along axis 1; trailing feature dims broadcast)."""
+    idx = order
+    if ct.ndim > idx.ndim:
+        idx = idx.reshape(idx.shape + (1,) * (ct.ndim - idx.ndim))
+        idx = jnp.broadcast_to(idx, ct.shape)
+    out = jnp.zeros(primal.shape, dtype=ct.dtype)
+    return jnp.put_along_axis(out, idx, ct, axis=1, inplace=False).astype(
+        primal.dtype)
+
+
+def _scatter_ct(ct, order, primal):
+    if ct.dtype == jax.dtypes.float0:  # int/bool leaves carry no gradient
+        return ct
+    return _scatter_axis1(ct, order, primal)
+
+
+# ---------------------------------------------------------------------------
+# fused sort
+# ---------------------------------------------------------------------------
+
+
+def _sort_order(cfg: FusedCfg, x: jnp.ndarray) -> jnp.ndarray:
+    order = jnp.argsort(_keys_of(cfg, x), axis=-1, stable=True)
+    return order[..., ::-1] if cfg.descending else order
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_sort(cfg: FusedCfg, x: jnp.ndarray, leaves: Tuple[jnp.ndarray, ...]):
+    """One-launch sort of (B, n) rows: values + permuted payload leaves."""
+    out, _, pouts = _fused_sort_run(cfg, x, leaves, want_perm=False)
+    return out, pouts
+
+
+def _fused_sort_run(cfg, x, leaves, want_perm: bool):
+    from repro.kernels.sort import loms_sort_pallas
+
+    res = loms_sort_pallas(
+        x, tuple(leaves), block_batch=cfg.block_batch, use_mxu=cfg.use_mxu,
+        key_dtype=cfg.key_dtype, descending=cfg.descending,
+        want_perm=want_perm,
+    )
+    if not leaves and not want_perm:
+        return res, None, ()
+    out, perm, pouts = res
+    return out, perm, tuple(pouts)
+
+
+def _fused_sort_fwd(cfg, x, leaves):
+    # with payload lanes the kernel's *actual* permutation must be the VJP
+    # residual: the payload gather is a concrete linear map, and the column
+    # devices' tie order need not match a stable argsort's (values-only
+    # cotangents may use any tie selection — the jnp.sort subgradient
+    # convention — so they recompute and skip the extra output)
+    want_perm = bool(leaves)
+    out, perm, pouts = _fused_sort_run(cfg, x, leaves, want_perm=want_perm)
+    return (out, pouts), (x, leaves, perm)
+
+
+def _fused_sort_bwd(cfg, residual, cts):
+    x, leaves, perm = residual
+    ct_out, ct_pouts = cts
+    order = perm if perm is not None else _sort_order(cfg, x)
+    ct_x = _scatter_ct(ct_out, order, x)
+    ct_leaves = tuple(
+        _scatter_ct(ct_p, order, leaf)
+        for ct_p, leaf in zip(ct_pouts, leaves)
+    )
+    return ct_x, ct_leaves
+
+
+fused_sort.defvjp(_fused_sort_fwd, _fused_sort_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused merge / merge_k
+# ---------------------------------------------------------------------------
+
+
+def _merge_perm(cfg: FusedCfg, lists) -> jnp.ndarray:
+    """Recompute the merge permutation (original concat positions) with
+    one stable argsort — backward-pass only."""
+    ks = [_keys_of(cfg, l) for l in lists]
+    if not cfg.descending:
+        return jnp.argsort(jnp.concatenate(ks, axis=-1), axis=-1, stable=True)
+    # ascending problem = per-list reversal; positions index the original
+    # (descending) concat, mirroring the kernels' position lane
+    offs, pos, asc = 0, [], []
+    for k_ in ks:
+        ln = k_.shape[-1]
+        asc.append(k_[..., ::-1])
+        p = jnp.arange(ln - 1, -1, -1, dtype=jnp.int32) + offs
+        pos.append(jnp.broadcast_to(p, k_.shape))
+        offs += ln
+    order = jnp.argsort(jnp.concatenate(asc, axis=-1), axis=-1, stable=True)
+    perm = jnp.take_along_axis(jnp.concatenate(pos, axis=-1), order, axis=-1)
+    return perm[..., ::-1]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_merge_k(cfg: FusedCfg, lists: Tuple[jnp.ndarray, ...],
+                  leaves: Tuple[jnp.ndarray, ...]):
+    """One-launch k-way merge: values + payload leaves (leaves are already
+    concatenated along the list axis, (B, total[, F]))."""
+    out, _, pouts = _fused_merge_k_run(cfg, lists, leaves, want_perm=False)
+    return out, pouts
+
+
+def _fused_merge_k_run(cfg, lists, leaves, want_perm: bool):
+    if len(lists) == 2 and cfg.op == "merge":
+        from repro.kernels.loms_merge import loms_merge2_pallas
+
+        res = loms_merge2_pallas(
+            lists[0], lists[1], tuple(leaves), n_cols=cfg.n_cols,
+            block_batch=cfg.block_batch, use_mxu=cfg.use_mxu,
+            key_dtype=cfg.key_dtype, descending=cfg.descending,
+            want_perm=want_perm,
+        )
+    else:
+        from repro.core import loms as core_loms
+        from repro.kernels.kway import kway_merge_pallas
+
+        sched = core_loms.loms_kway(cfg.lens)
+        x = jnp.concatenate(list(lists), axis=-1)
+        res = kway_merge_pallas(
+            x, sched, tuple(leaves), block_batch=cfg.block_batch,
+            use_mxu=cfg.use_mxu, lens=cfg.lens, key_dtype=cfg.key_dtype,
+            descending=cfg.descending, want_perm=want_perm,
+        )
+    if not leaves and not want_perm:
+        return res, None, ()
+    out, perm, pouts = res
+    return out, perm, tuple(pouts)
+
+
+def _fused_merge_k_fwd(cfg, lists, leaves):
+    # payload lanes: save the kernel's actual permutation (see the sort
+    # fwd for why a stable-argsort reconstruction is not enough)
+    want_perm = bool(leaves)
+    out, perm, pouts = _fused_merge_k_run(cfg, lists, leaves,
+                                          want_perm=want_perm)
+    return (out, pouts), (lists, leaves, perm)
+
+
+def _fused_merge_k_bwd(cfg, residual, cts):
+    lists, leaves, perm = residual
+    ct_out, ct_pouts = cts
+    if perm is None:
+        perm = _merge_perm(cfg, lists)
+    if ct_out.dtype == jax.dtypes.float0:  # int values carry no gradient
+        ct_lists = [np.zeros(l.shape, jax.dtypes.float0) for l in lists]
+    else:
+        cat = jnp.concatenate(list(lists), axis=-1)
+        ct_cat = _scatter_axis1(ct_out, perm, cat)
+        offs = 0
+        ct_lists = []
+        for l in lists:
+            ct_lists.append(ct_cat[..., offs:offs + l.shape[-1]])
+            offs += l.shape[-1]
+    ct_leaves = tuple(
+        _scatter_ct(ct_p, perm, leaf)
+        for ct_p, leaf in zip(ct_pouts, leaves)
+    )
+    return tuple(ct_lists), ct_leaves
+
+
+fused_merge_k.defvjp(_fused_merge_k_fwd, _fused_merge_k_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused top-k
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_topk(cfg: FusedCfg, x: jnp.ndarray):
+    """One-launch (one-per-phase for large axes) descending top-k with the
+    key transform fused into the kernels; returns (values, int32 idx)."""
+    return _fused_topk_impl(cfg, x)
+
+
+def _fused_topk_impl(cfg, x):
+    from repro.kernels.ops import topk_tiles
+    from repro.kernels.topk import ROUTER_TOPK_MAX, router_topk_pallas, vocab_topk_pallas
+
+    bsz, e = x.shape
+    blk, bb = topk_tiles(bsz, e, block=cfg.block, block_batch=cfg.block_batch)
+    kernel = (router_topk_pallas if e <= ROUTER_TOPK_MAX
+              else vocab_topk_pallas)
+    v, i = kernel(x, k=cfg.k, block=blk, block_batch=bb,
+                  use_mxu=cfg.use_mxu, key_dtype=cfg.key_dtype)
+    return v, i.astype(jnp.int32)
+
+
+def _fused_topk_fwd(cfg, x):
+    v, i = _fused_topk_impl(cfg, x)
+    return (v, i), (x, i)
+
+
+def _fused_topk_bwd(cfg, residual, cts):
+    x, idx = residual
+    ct_v, _ = cts  # idx is int: no cotangent
+    if ct_v.dtype == jax.dtypes.float0:  # int values carry no gradient
+        return (np.zeros(x.shape, jax.dtypes.float0),)
+    safe = jnp.where(idx < 0, 0, idx)
+    contrib = jnp.where(idx < 0, jnp.zeros_like(ct_v), ct_v)
+    rows = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None]
+    ct_x = jnp.zeros_like(x).at[rows, safe].add(contrib.astype(x.dtype))
+    return (ct_x,)
+
+
+fused_topk.defvjp(_fused_topk_fwd, _fused_topk_bwd)

@@ -25,21 +25,28 @@ Because the map is bijective, decoding the sorted keys restores the exact
 input bit patterns — except that every NaN comes back as the canonical
 quiet NaN, which numpy/jnp comparisons treat as the same NaN. The total
 order ranks ``-0.0`` strictly below ``+0.0`` (like ``jax.lax.sort``).
+
+The transform math itself lives in :mod:`repro.kernels.common`
+(``encode_key_values`` / ``decode_key_values``) so the Pallas kernel
+bodies can fuse it — encode on load, decode on store — without an
+``api -> kernels -> api`` import cycle; this module is the stable public
+face the rest of the api layer imports.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-#: float itemsize -> same-width signed integer type carrying the bit trick
-#: (int64 keys require jax_enable_x64, but so does having f64 inputs)
-_ITYPE = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}
+from repro.kernels.common import (  # noqa: F401  (re-exported names)
+    KEY_ITYPE as _ITYPE,
+    decode_key_values,
+    encode_key_values,
+    key_transformable,
+)
 
 
 def has_key_transform(dtype) -> bool:
     """Whether ``dtype`` is a float type the key transform covers."""
-    d = jnp.dtype(dtype)
-    return jnp.issubdtype(d, jnp.floating) and d.itemsize in _ITYPE
+    return key_transformable(dtype)
 
 
 def encode_keys(x: jnp.ndarray) -> jnp.ndarray:
@@ -47,20 +54,9 @@ def encode_keys(x: jnp.ndarray) -> jnp.ndarray:
 
     f32/bf16/f16 keys widen to int32 (the networks' native lane width);
     f64 keys stay int64."""
-    d = jnp.dtype(x.dtype)
-    itype = _ITYPE[d.itemsize]
-    mask = itype(jnp.iinfo(itype).max)  # 0x7fff.. : flip all but the sign
-    x = jnp.where(jnp.isnan(x), jnp.asarray(jnp.nan, d), x)  # canonical qNaN
-    y = jax.lax.bitcast_convert_type(x, itype)
-    k = jnp.where(y < 0, y ^ mask, y)
-    return k if d.itemsize == 8 else k.astype(jnp.int32)
+    return encode_key_values(x)
 
 
 def decode_keys(k: jnp.ndarray, dtype) -> jnp.ndarray:
     """Exact inverse of :func:`encode_keys` (``dtype`` = original float)."""
-    d = jnp.dtype(dtype)
-    itype = _ITYPE[d.itemsize]
-    mask = itype(jnp.iinfo(itype).max)
-    y = k.astype(itype)  # downcast first: the xor must run at key width
-    y = jnp.where(y < 0, y ^ mask, y)
-    return jax.lax.bitcast_convert_type(y, d)
+    return decode_key_values(k, dtype)

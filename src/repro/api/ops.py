@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from .dispatch import plan
+from .fused import fused_cfg_for, fused_merge_k, fused_sort, fused_topk
 from .keys import decode_keys, encode_keys, has_key_transform
 from .payload import (
     canonical_axis,
@@ -145,6 +146,44 @@ def _dist_sharded(par, lens) -> bool:
     return dist_sort_axis(par, lens) is not None
 
 
+def _fused_leaves(payload, ax: int, ndim: int):
+    """Flatten a payload pytree to canonical (B, L[, F]) kernel lanes.
+
+    Returns (lanes, rebuild): each leaf moves its sort axis to position
+    ``ndim-1`` and folds any trailing feature dims into one lane axis —
+    pure layout ops, no gathers. ``rebuild(pouts, out_len)`` inverts the
+    layout on the kernel outputs and restores the pytree."""
+    leaves, treedef = jax.tree.flatten(payload)
+    lanes, shapes = [], []
+    for leaf in leaves:
+        assert leaf.ndim >= ndim, (leaf.shape, ndim)
+        lm = jnp.moveaxis(leaf, ax, ndim - 1)
+        lead, trail = lm.shape[:ndim], lm.shape[ndim:]
+        feat = 1
+        for t in trail:
+            feat *= t
+        l2 = lm.reshape((-1, lead[-1]) + ((feat,) if trail else ()))
+        lanes.append(l2)
+        shapes.append((lead, trail))
+
+    def rebuild(pouts, out_len: int):
+        outs = []
+        for p2, (lead, trail) in zip(pouts, shapes):
+            pm = p2.reshape(lead[:-1] + (out_len,) + trail)
+            outs.append(jnp.moveaxis(pm, ndim - 1, ax))
+        return jax.tree.unflatten(treedef, outs)
+
+    return tuple(lanes), rebuild
+
+
+def _unfusable_fallback(dec, spec):
+    """Planner picked pallas but the fused paths are switched off: specs
+    the value-only generic adapters cannot carry drop to the executor."""
+    if dec.backend == "pallas" and spec.needs_perm:
+        return get_backend("schedule")
+    return get_backend(dec.backend)
+
+
 # ---------------------------------------------------------------------------
 # merge / merge_k
 # ---------------------------------------------------------------------------
@@ -215,7 +254,6 @@ def merge_k(
         ct = jnp.result_type(*flats)
         flats = [f.astype(ct) for f in flats]
     raw_flats = flats  # original floats: value restore gathers from these
-    flats, decode = _encode_lists(flats, nan_policy)
     spec = SortSpec(
         op="merge" if len(lists) == 2 else "merge_k",
         lengths=lens, batch=batch, dtype=jnp.dtype(flats[0].dtype).name,
@@ -225,7 +263,22 @@ def merge_k(
         nan_policy=nan_policy,
     )
     dec = plan(spec, par)
-    be = get_backend(dec.backend)
+    if dec.backend == "pallas":
+        # fused single-launch path: key transform, descending handling and
+        # payload permutes all run inside the kernel (repro.api.fused)
+        cfg = fused_cfg_for(spec, batch, flats[0].dtype)
+        if cfg is not None:
+            total = sum(lens)
+            if payload is None:
+                out2, _ = fused_merge_k(cfg, tuple(flats), ())
+                return from_batched_last(out2, lead, ax, ndim)
+            ptree = concat_payload_trees(list(payload), ax, ndim)
+            lanes, rebuild = _fused_leaves(ptree, ax, ndim)
+            out2, pouts = fused_merge_k(cfg, tuple(flats), lanes)
+            return (from_batched_last(out2, lead, ax, ndim),
+                    rebuild(pouts, total))
+    be = _unfusable_fallback(dec, spec)
+    flats, decode = _encode_lists(flats, nan_policy)
     run_kw = {} if par is None else {"par": par}
 
     if descending:  # descending-sorted inputs: reverse -> ascending problem
@@ -290,7 +343,6 @@ def sort(
     x2, lead = to_batched_last(x, ax)
     batch, n = x2.shape
     raw_x2 = x2  # original floats: value restore gathers from these
-    (x2,), decode = _encode_lists([x2], nan_policy)
     spec = SortSpec(
         op="sort", lengths=(n,), batch=batch, dtype=jnp.dtype(x2.dtype).name,
         axis=axis, descending=descending, stable=stable,
@@ -299,7 +351,21 @@ def sort(
         nan_policy=nan_policy,
     )
     dec = plan(spec, par)
-    be = get_backend(dec.backend)
+    if dec.backend == "pallas":
+        # fused single-launch path: the kernel encodes the total-order
+        # keys on load, permutes payload lanes in VMEM, reverses for
+        # descending and decodes on store — no XLA encode/decode/gather
+        cfg = fused_cfg_for(spec, batch, x2.dtype)
+        if cfg is not None:
+            if payload is None:
+                out2, _ = fused_sort(cfg, x2, ())
+                return from_batched_last(out2, lead, ax, ndim)
+            lanes, rebuild = _fused_leaves(payload, ax, ndim)
+            out2, pouts = fused_sort(cfg, x2, lanes)
+            return (from_batched_last(out2, lead, ax, ndim),
+                    rebuild(pouts, n))
+    be = _unfusable_fallback(dec, spec)
+    (x2,), decode = _encode_lists([x2], nan_policy)
     run_kw = {} if par is None else {"par": par}
     pos = _iota_rows(n, batch, False) if spec.needs_perm else None
     out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos, **run_kw)
@@ -360,7 +426,6 @@ def topk(
     batch, n = x2.shape
     assert 1 <= k <= n, (k, n)
     raw_x2 = x2  # original floats: value restore gathers from these
-    (x2,), decode = _encode_lists([x2], nan_policy)
     sharded = False
     if par is not None and ax == ndim - 1 and ndim == 2:
         from repro.parallel.sharding import vocab_topk_axis
@@ -372,19 +437,30 @@ def topk(
         has_payload=payload is not None, backend=backend, device=_device(),
         sharded=sharded, nan_policy=nan_policy,
     )
+    decode = None
     if not descending:
         # bottom-k ascending: ascending sort prefix (executor path only)
         if backend not in ("auto", "schedule", "lax"):
             raise ValueError("descending=False supports backend auto|schedule|lax")
         be = get_backend("schedule" if backend == "auto" else backend)
+        (x2,), decode = _encode_lists([x2], nan_policy)
         pos = _iota_rows(n, batch, False)
         out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos)
         vals2, idx2 = out2[:, :k], perm2[:, :k]
     else:
         dec = plan(spec, par)
-        be = get_backend(dec.backend)
-        vals2, idx2 = be.run["topk"](x2, k, spec=spec, par=par, block=block)
-        idx2 = idx2.astype(jnp.int32)
+        cfg = (fused_cfg_for(spec, batch, x2.dtype)
+               if dec.backend == "pallas" and not stable else None)
+        if cfg is not None:
+            # fused: key transform inside the kernels, values come back
+            # decoded — skip the XLA encode and the gather-restore
+            vals2, idx2 = fused_topk(cfg, x2)
+        else:
+            be = get_backend(dec.backend)
+            (x2,), decode = _encode_lists([x2], nan_policy)
+            vals2, idx2 = be.run["topk"](x2, k, spec=spec, par=par,
+                                         block=block)
+            idx2 = idx2.astype(jnp.int32)
     if stable:
         vals2, idx2 = stabilize_ties(vals2, idx2, descending=descending)
     vals = from_batched_last(_restore_values(vals2, idx2, raw_x2, decode),

@@ -45,6 +45,11 @@ class Backend:
     run: Mapping[str, Callable]  # op name -> adapter
     supports: Callable[[SortSpec], bool]
     description: str = ""
+    #: whether the backend can run ``spec`` as a fused single launch —
+    #: key transform, payload lanes and ordering all inside the kernel
+    #: (the ops layer then skips its XLA-level pre/post passes and calls
+    #: the fused entry points in :mod:`repro.api.fused`)
+    supports_fused: Callable[[SortSpec], bool] = lambda spec: False
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -151,6 +156,13 @@ def _pallas_merge_k(lists, *, spec, pos=None, par=None):
     return kernel_merge_k(lists), None
 
 
+def _pallas_sort(x, *, spec, pos=None, par=None):
+    assert pos is None
+    from repro.kernels.ops import sort as kernel_sort
+
+    return kernel_sort(x), None
+
+
 def _pallas_topk(x, k, *, spec, par=None, block=None):
     from repro.kernels.ops import topk as kernel_topk
 
@@ -163,13 +175,21 @@ def _pallas_median(lists, *, spec):
     return median_k(lists)
 
 
+def _pallas_fused(spec: SortSpec) -> bool:
+    from .fused import fused_eligible
+
+    return fused_eligible(spec)
+
+
 def _pallas_supports(spec: SortSpec) -> bool:
-    if spec.op == "sort" or spec.network not in ("loms",):
+    if spec.network not in ("loms",):
         return False
     if spec.op == "topk":
         return True  # indices are native; payload/stable ride them
-    if spec.needs_perm:
-        return False  # value-only kernels cannot hand back the permutation
+    if spec.op == "sort" or spec.needs_perm:
+        # the fused single-launch kernels carry keys + payload lanes in
+        # VMEM; stable / ragged / over-VMEM specs stay on the executor
+        return _pallas_fused(spec)
     if spec.op == "median":  # loms_median wants equal odd-length lists
         return len(set(spec.lengths)) == 1 and spec.lengths[0] % 2 == 1
     return True
@@ -178,10 +198,13 @@ def _pallas_supports(spec: SortSpec) -> bool:
 register_backend(Backend(
     name="pallas",
     run={"merge": _pallas_merge, "merge_k": _pallas_merge_k,
-         "topk": _pallas_topk, "median": _pallas_median},
+         "sort": _pallas_sort, "topk": _pallas_topk,
+         "median": _pallas_median},
     supports=_pallas_supports,
-    description="Pallas TPU kernels (interpret mode off-TPU); value-only "
-                "merges, index-carrying top-k",
+    supports_fused=_pallas_fused,
+    description="Pallas TPU kernels (interpret mode off-TPU); fused "
+                "single-launch sort/merge with in-kernel key transform and "
+                "VMEM payload lanes, index-carrying top-k",
 ))
 
 

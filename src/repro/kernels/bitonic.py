@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import resolve_interpret
+from .common import pad_batch, resolve_interpret
 
 
 def _bitonic_merge_kernel(a_ref, b_ref, o_ref):
@@ -39,19 +39,22 @@ def bitonic_merge2_pallas(
     interpret: Optional[bool] = None
 ) -> jnp.ndarray:
     """Merge sorted (B, m) and (B, n); m == n == power of two (Batcher's
-    constraint, paper §VI). ``interpret=None`` auto-resolves."""
+    constraint, paper §VI). Ragged batch sizes pad up to a ``block_batch``
+    multiple and slice back. ``interpret=None`` auto-resolves."""
     interpret = resolve_interpret(interpret)
     (bsz, m), (_, n) = a.shape, b.shape
     assert m == n and (m & (m - 1)) == 0, "Batcher merge needs equal power-of-2 lists"
-    assert bsz % block_batch == 0
-    return pl.pallas_call(
+    a, b = pad_batch(a, block_batch), pad_batch(b, block_batch)
+    padded = a.shape[0]
+    out = pl.pallas_call(
         _bitonic_merge_kernel,
-        grid=(bsz // block_batch,),
+        grid=(padded // block_batch,),
         in_specs=[
             pl.BlockSpec((block_batch, m), lambda i: (i, 0)),
             pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, m + n), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded, m + n), a.dtype),
         interpret=interpret,
     )(a, b)
+    return out[:bsz] if padded != bsz else out

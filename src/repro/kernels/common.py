@@ -14,12 +14,60 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import pallas as pl
 
 
 def _iota(shape, dim, dtype=jnp.int32):
     """broadcasted_iota — the Pallas/Mosaic-safe way to make index ramps
     (captured numpy constants are not allowed inside kernel bodies)."""
     return jax.lax.broadcasted_iota(dtype, shape, dim)
+
+
+# ---------------------------------------------------------------------------
+# total-order float<->int keys (the nan_policy="last" transform)
+# ---------------------------------------------------------------------------
+# The math lives here — not in repro.api.keys, which re-exports it — so the
+# kernel bodies can encode on load and decode on store without an
+# api -> kernels -> api import cycle. Everything below is plain jnp and
+# traces identically inside a Pallas kernel and at the XLA level.
+
+#: float itemsize -> same-width signed integer type carrying the bit trick
+#: (int64 keys require jax_enable_x64, but so does having f64 inputs)
+KEY_ITYPE = {2: jnp.int16, 4: jnp.int32, 8: jnp.int64}
+
+
+def key_transformable(dtype) -> bool:
+    """Whether ``dtype`` is a float type the total-order key map covers."""
+    d = jnp.dtype(dtype)
+    return jnp.issubdtype(d, jnp.floating) and d.itemsize in KEY_ITYPE
+
+
+def encode_key_values(x: jnp.ndarray) -> jnp.ndarray:
+    """Float array -> integer keys with the same sort order, NaNs last.
+
+    Bijective and strictly monotonic over every float (finite, ±0, ±inf);
+    NaNs canonicalize to the positive quiet NaN, which maps above
+    ``key(+inf)``. f32/bf16/f16 keys widen to int32 (the networks' native
+    lane width); f64 keys stay int64. Kernel-safe: pure jnp, no captured
+    numpy constants."""
+    d = jnp.dtype(x.dtype)
+    itype = KEY_ITYPE[d.itemsize]
+    mask = itype(jnp.iinfo(itype).max)  # 0x7fff.. : flip all but the sign
+    x = jnp.where(jnp.isnan(x), jnp.asarray(jnp.nan, d), x)  # canonical qNaN
+    y = jax.lax.bitcast_convert_type(x, itype)
+    k = jnp.where(y < 0, y ^ mask, y)
+    return k if d.itemsize == 8 else k.astype(jnp.int32)
+
+
+def decode_key_values(k: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Exact inverse of :func:`encode_key_values` (``dtype`` = the original
+    float type); every NaN comes back as the canonical quiet NaN."""
+    d = jnp.dtype(dtype)
+    itype = KEY_ITYPE[d.itemsize]
+    mask = itype(jnp.iinfo(itype).max)
+    y = k.astype(itype)  # downcast first: the xor must run at key width
+    y = jnp.where(y < 0, y ^ mask, y)
+    return jax.lax.bitcast_convert_type(y, d)
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
@@ -190,3 +238,100 @@ def sort_nsorter(x: jnp.ndarray, payload=None, use_mxu: bool = True):
     rank = ranks_sort(x)
     permute = onehot_permute if use_mxu else scatter_permute
     return permute(x, rank, payload) if payload is not None else permute(x, rank)
+
+
+def pick_merge_cols(m: int, n: int) -> int:
+    """Feasible LOMS column count nearest the comparator-cost optimum
+    ``C* = sqrt(m*n/(m+n))`` (1 when no count divides both runs)."""
+    cols = [c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0]
+    if not cols:
+        return 1
+    c_star = (m * n / max(m + n, 1)) ** 0.5
+    return min(cols, key=lambda c: abs(c - c_star))
+
+
+def merge2_cols(
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    *,
+    n_cols: int = 2,
+    use_mxu: bool = True,
+    payload: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+):
+    """2-stage LOMS column merge of two ascending runs (last axis).
+
+    The paper's UP-m/DN-n device as strided views: column ``c`` holds the
+    ascending stride-C slices ``lo[c::C]`` and ``hi[(C-1-c)%C::C]``, each
+    column is one S2MS merge (``m*n/C^2`` comparators instead of the plain
+    S2MS ``m*n``), stage 2 rank-sorts each row of C values. Falls back to
+    the single-stage S2MS when ``n_cols`` doesn't divide both runs.
+
+    Tie caution: unlike :func:`merge2_sorted` (stable, lo wins), the
+    column device makes no cross-run tie-order promise — callers whose
+    sentinels can tie genuine values must resolve validity by mask
+    (:func:`stable_compact`), not by position."""
+    m, n = lo.shape[-1], hi.shape[-1]
+    c_ = n_cols
+    if c_ <= 1 or m % c_ or n % c_:
+        return merge2_sorted(lo, hi, payload=payload, use_mxu=use_mxu)
+    plo, phi = payload if payload is not None else (None, None)
+    cols, pcols = [], []
+    for c in range(c_):
+        av = lo[..., c::c_]
+        bv = hi[..., (c_ - 1 - c) % c_ :: c_]
+        if payload is not None:
+            col, pcol = merge2_sorted(
+                bv, av,
+                payload=(phi[..., (c_ - 1 - c) % c_ :: c_], plo[..., c::c_]),
+                use_mxu=use_mxu,
+            )
+            pcols.append(pcol)
+        else:
+            col = merge2_sorted(bv, av, use_mxu=use_mxu)
+        cols.append(col)
+    arr = jnp.stack(cols, axis=-1)  # (..., R, C)
+    shape = lo.shape[:-1] + (m + n,)
+    if payload is not None:
+        arr, parr = sort_nsorter(arr, jnp.stack(pcols, axis=-1),
+                                 use_mxu=use_mxu)
+        return arr.reshape(shape), parr.reshape(shape)
+    return sort_nsorter(arr, use_mxu=use_mxu).reshape(shape)
+
+
+def payload_block_spec(p: jnp.ndarray, block_batch: int) -> pl.BlockSpec:
+    """BlockSpec for a (B, L[, F]) payload lane: grid dim 0 tiles the
+    batch, the lane (and feature) axes ride whole. The index map swallows
+    trailing args so it works under scalar-prefetch grid specs too."""
+    if p.ndim == 2:
+        return pl.BlockSpec((block_batch, p.shape[1]), lambda i, *_: (i, 0))
+    assert p.ndim == 3, p.shape
+    return pl.BlockSpec((block_batch, p.shape[1], p.shape[2]),
+                        lambda i, *_: (i, 0, 0))
+
+
+def unpack_fused_results(results, bsz: int, padded: int, n_payload: int,
+                         want_perm: bool):
+    """Shared epilogue of the fused kernel wrappers: slice off batch
+    padding and split (out, perm?, payload outs). Returns the bare ``out``
+    for the classic values-only call, else ``(out, perm|None, pouts)``."""
+    if not isinstance(results, (list, tuple)):
+        results = [results]
+    results = [r[:bsz] if padded != bsz else r for r in results]
+    out = results[0]
+    if n_payload == 0 and not want_perm:
+        return out
+    perm = results[1] if want_perm else None
+    return out, perm, tuple(results[1 + (1 if want_perm else 0):])
+
+
+def gather_lanes(perm: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel payload gather: ``leaf[..., perm, :]`` along the lane axis.
+
+    ``perm`` is (bt, L) int32 input positions; ``leaf`` is (bt, L) or
+    (bt, L, F) with trailing feature lanes that broadcast. Runs inside the
+    kernel body so payload permutes never leave VMEM. Negative positions
+    (top-k pad sentinels) clamp to 0 — their slots are sentinels anyway."""
+    idx = jnp.where(perm < 0, 0, perm)
+    if leaf.ndim > idx.ndim:
+        idx = idx.reshape(idx.shape + (1,) * (leaf.ndim - idx.ndim))
+    return jnp.take_along_axis(leaf, idx.astype(jnp.int32), axis=1)

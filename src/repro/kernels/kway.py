@@ -9,27 +9,51 @@ constants — and every stage unrolls at trace time into:
 This is the general path (3c_7r, mixed list sizes, medians); the 2-way
 fast path (pure strided reshapes, no index operands) lives in
 loms_merge.py.
+
+Wiring residency: the wiring operands are grid-constant, so when their
+total size fits the scalar-memory budget they ride a
+``PrefetchScalarGridSpec`` — fetched once into SMEM before the first grid
+step instead of being re-blocked by the pipeline on every step. Past the
+budget (huge schedules) the legacy per-step ``BlockSpec`` path is kept.
+
+Fused pipeline extensions (DESIGN.md §11): ``key_dtype`` applies the
+total-order float->int key transform on load/store inside the kernel,
+``payloads`` threads an int32 position lane through every stage permute
+and gathers payload lanes in VMEM, ``descending`` reverses each list
+segment on load and the output on store — so a NaN-policy payload k-way
+merge is still one launch.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.networks import Schedule, _stage_classes
 
 from .common import (
     _iota,
+    decode_key_values,
+    encode_key_values,
+    gather_lanes,
     onehot_permute,
     pad_batch,
+    payload_block_spec,
     ranks_sort,
     resolve_interpret,
     scatter_permute,
+    unpack_fused_results,
 )
+
+#: largest total wiring size (int32 elements) routed through scalar
+#: prefetch; SMEM is tens of KiB per core, so bigger schedules keep the
+#: legacy VMEM-operand path.
+KWAY_PREFETCH_MAX_INTS = 4096
 
 
 def _schedule_wiring(sched: Schedule, n_stages=None) -> List[np.ndarray]:
@@ -43,11 +67,55 @@ def _schedule_wiring(sched: Schedule, n_stages=None) -> List[np.ndarray]:
     return wiring
 
 
-def _kway_kernel(x_ref, *refs, sched: Schedule, n_stages, use_mxu):
-    o_ref = refs[-1]
-    wiring = [r[...] for r in refs[:-1]]
+def _kway_kernel(
+    *refs,
+    sched: Schedule,
+    n_stages,
+    use_mxu: bool,
+    n_wiring: int,
+    prefetch: bool,
+    lens: Optional[Tuple[int, ...]],
+    key_dtype: Optional[str],
+    descending: bool,
+    n_payload: int,
+    want_perm: bool,
+):
+    # argument order: prefetch mode puts the scalar wiring refs first,
+    # the legacy mode keeps them between x and the payload lanes
+    if prefetch:
+        wiring = [r[...] for r in refs[:n_wiring]]
+        x_ref = refs[n_wiring]
+        rest = refs[n_wiring + 1:]
+    else:
+        x_ref = refs[0]
+        wiring = [r[...] for r in refs[1 : 1 + n_wiring]]
+        rest = refs[1 + n_wiring:]
+    p_refs = rest[:n_payload]
+    o_ref = rest[n_payload]
+    perm_ref = rest[n_payload + 1] if want_perm else None
+    po_refs = rest[n_payload + 1 + (1 if want_perm else 0):]
+
     x = x_ref[...]
     bt = x.shape[0]
+    n_in = x.shape[-1]
+    need_pos = n_payload > 0 or want_perm
+    pos = _iota((bt, n_in), 1) if need_pos else None
+    if descending:
+        # reverse each list segment in-register -> ascending problem whose
+        # position lane still indexes the original (descending) concat
+        assert lens is not None
+        offs = np.cumsum((0,) + tuple(lens))
+        x = jnp.concatenate(
+            [x[:, offs[j] : offs[j + 1]][:, ::-1] for j in range(len(lens))],
+            axis=-1,
+        )
+        if need_pos:
+            pos = jnp.concatenate(
+                [pos[:, offs[j] : offs[j + 1]][:, ::-1] for j in range(len(lens))],
+                axis=-1,
+            )
+    if key_dtype is not None:  # fused nan_policy="last" encode on load
+        x = encode_key_values(x)
     stages = sched.stages if n_stages is None else sched.stages[:n_stages]
     permute = onehot_permute if use_mxu else scatter_permute
 
@@ -55,6 +123,10 @@ def _kway_kernel(x_ref, *refs, sched: Schedule, n_stages, use_mxu):
     setup = next(wi)
     w = jnp.zeros((bt, sched.size), dtype=x.dtype)
     w = w.at[:, setup].set(x)
+    wp = None
+    if need_pos:
+        wp = jnp.zeros((bt, sched.size), dtype=jnp.int32)
+        wp = wp.at[:, setup].set(pos)
     for st in stages:
         for n, runs, idx in _stage_classes(st):
             flat = next(wi)
@@ -78,40 +150,109 @@ def _kway_kernel(x_ref, *refs, sched: Schedule, n_stages, use_mxu):
                         r = r + cnt.astype(jnp.int32)
                     rr.append(r)
                 rank = jnp.concatenate(rr, axis=-1)
-            vals = permute(vals, rank)
+            if need_pos:
+                pvals = jnp.take(wp, flat, axis=-1).reshape(bt, *idx.shape)
+                vals, pvals = permute(vals, rank, pvals)
+                wp = wp.at[:, flat].set(pvals.reshape(bt, len(idx.reshape(-1))))
+            else:
+                vals = permute(vals, rank)
             w = w.at[:, flat].set(vals.reshape(bt, len(idx.reshape(-1))))
     gather = next(wi)
-    o_ref[...] = jnp.take(w, gather, axis=-1)
+    out = jnp.take(w, gather, axis=-1)
+    perm = jnp.take(wp, gather, axis=-1).astype(jnp.int32) if need_pos else None
+    if key_dtype is not None:  # fused decode on store
+        out = decode_key_values(out, key_dtype)
+    if descending:
+        out = out[:, ::-1]
+        perm = None if perm is None else perm[:, ::-1]
+    o_ref[...] = out
+    if want_perm:
+        perm_ref[...] = perm
+    for p_ref, po_ref in zip(p_refs, po_refs):
+        po_ref[...] = gather_lanes(perm, p_ref[...])
 
 
 def kway_merge_pallas(
     x: jnp.ndarray,
     sched: Schedule,
+    payloads: Sequence[jnp.ndarray] = (),
     *,
     n_stages: Optional[int] = None,
     block_batch: int = 8,
     use_mxu: bool = True,
     interpret: Optional[bool] = None,
-) -> jnp.ndarray:
+    lens: Optional[Tuple[int, ...]] = None,
+    key_dtype: Optional[str] = None,
+    descending: bool = False,
+    want_perm: bool = False,
+):
     """Apply an oblivious schedule to (B, n_inputs) batched lists.
 
     Ragged batch sizes are padded up to a ``block_batch`` multiple and
     sliced back. ``interpret=None`` auto-resolves: compile on TPU,
-    interpret elsewhere."""
+    interpret elsewhere.
+
+    Fused-pipeline extras (DESIGN.md §11): ``key_dtype`` (original float
+    dtype name) fuses the total-order key encode/decode into the kernel —
+    pass ``use_mxu=False`` with it; ``payloads`` is a sequence of
+    (B, n_inputs[, F]) lanes riding the permutation in VMEM;
+    ``descending`` (requires ``lens``, the per-list lengths) handles
+    descending-sorted lists in-register; ``want_perm`` also returns the
+    int32 permutation. Returns ``out`` alone in the classic call, else
+    ``(out, perm | None, tuple(payload_outs))``.
+    """
     interpret = resolve_interpret(interpret)
     bsz, n_in = x.shape
     assert n_in == sched.n_inputs
+    payloads = tuple(payloads)
+    for p in payloads:
+        assert p.ndim in (2, 3) and p.shape[:2] == (bsz, n_in), (
+            p.shape, (bsz, n_in))
+    if descending:
+        assert lens is not None and sum(lens) == n_in, (lens, n_in)
     x = pad_batch(x, block_batch)
+    payloads_p = tuple(pad_batch(p, block_batch) for p in payloads)
     padded = x.shape[0]
     wiring = _schedule_wiring(sched, n_stages)
-    in_specs = [pl.BlockSpec((block_batch, n_in), lambda i: (i, 0))]
-    in_specs += [pl.BlockSpec(w.shape, lambda i: (0,)) for w in wiring]
-    out = pl.pallas_call(
-        functools.partial(_kway_kernel, sched=sched, n_stages=n_stages, use_mxu=use_mxu),
-        grid=(padded // block_batch,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_batch, sched.n_outputs), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((padded, sched.n_outputs), x.dtype),
-        interpret=interpret,
-    )(x, *[jnp.asarray(w) for w in wiring])
-    return out[:bsz] if padded != bsz else out
+    prefetch = sum(w.size for w in wiring) <= KWAY_PREFETCH_MAX_INTS
+    kernel = functools.partial(
+        _kway_kernel, sched=sched, n_stages=n_stages, use_mxu=use_mxu,
+        n_wiring=len(wiring), prefetch=prefetch, lens=lens,
+        key_dtype=key_dtype, descending=descending, n_payload=len(payloads),
+        want_perm=want_perm,
+    )
+    out_specs = [pl.BlockSpec((block_batch, sched.n_outputs),
+                              lambda i, *_: (i, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((padded, sched.n_outputs), x.dtype)]
+    if want_perm:
+        out_specs.append(pl.BlockSpec((block_batch, sched.n_outputs),
+                                      lambda i, *_: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((padded, sched.n_outputs),
+                                               jnp.int32))
+    out_specs += [payload_block_spec(p, block_batch) for p in payloads_p]
+    out_shapes += [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in payloads_p]
+    x_spec = pl.BlockSpec((block_batch, n_in), lambda i, *_: (i, 0))
+    p_specs = [payload_block_spec(p, block_batch) for p in payloads_p]
+    grid = (padded // block_batch,)
+    if prefetch:
+        # grid-constant wiring rides scalar prefetch: fetched once, not
+        # re-blocked every grid step
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(wiring),
+            grid=grid,
+            in_specs=[x_spec, *p_specs],
+            out_specs=out_specs,
+        )
+        results = pl.pallas_call(
+            kernel, grid_spec=grid_spec, out_shape=out_shapes,
+            interpret=interpret,
+        )(*[jnp.asarray(w) for w in wiring], x, *payloads_p)
+    else:
+        in_specs = [x_spec]
+        in_specs += [pl.BlockSpec(w.shape, lambda i: (0,)) for w in wiring]
+        in_specs += p_specs
+        results = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shapes, interpret=interpret,
+        )(x, *[jnp.asarray(w) for w in wiring], *payloads_p)
+    return unpack_fused_results(results, bsz, padded, len(payloads), want_perm)

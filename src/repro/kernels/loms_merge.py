@@ -10,76 +10,168 @@ with the S2MS comparison cloud (VPU) + one-hot permute (MXU); stage 2
 rank-sorts each row of C values. Output is the row-major flatten, again a
 plain reshape.
 
+Fused pipeline extensions (DESIGN.md §11): the kernel optionally
+* encodes the total-order float->int key transform on load and decodes it
+  on store (``key_dtype=``) so ``nan_policy="last"`` costs zero extra HBM
+  passes,
+* threads an int32 position lane through the same permutes and gathers
+  payload lanes in VMEM (``payloads=``), so payload merges stop
+  materializing an index array and gathering at the XLA level,
+* handles ``descending=`` inputs by reversing on load/store in-register.
+
 Per-block VMEM: (m+n) values + the widest column comparison matrix
 (m/C * n/C bools) + the row-sort matrix (R * C^2) — tile the batch so this
-fits the ~16 MiB VMEM budget (``ops.loms_merge2`` picks the tile).
+fits the ~16 MiB VMEM budget (``streaming.planner`` picks the tile).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, pad_batch, resolve_interpret, sort_nsorter
+from .common import (
+    _iota,
+    decode_key_values,
+    encode_key_values,
+    gather_lanes,
+    merge2_cols,
+    pad_batch,
+    payload_block_spec,
+    resolve_interpret,
+    unpack_fused_results,
+)
 
 
-def _loms2_kernel(a_ref, b_ref, o_ref, *, n_cols: int, use_mxu: bool):
-    a = a_ref[...]  # (bt, m) ascending
-    b = b_ref[...]  # (bt, n) ascending
+def _loms2_kernel(
+    a_ref,
+    b_ref,
+    *refs,
+    n_cols: int,
+    use_mxu: bool,
+    key_dtype: Optional[str],
+    descending: bool,
+    n_payload: int,
+    want_perm: bool,
+):
+    p_refs = refs[:n_payload]
+    o_ref = refs[n_payload]
+    perm_ref = refs[n_payload + 1] if want_perm else None
+    po_refs = refs[n_payload + 1 + (1 if want_perm else 0):]
+
+    a = a_ref[...]  # (bt, m) ascending (descending reversed below)
+    b = b_ref[...]  # (bt, n)
     bt, m = a.shape
     n = b.shape[-1]
-    c_ = n_cols
-    # --- setup array as strided views; stage 1: per-column S2MS merges ----
-    cols = []
-    for c in range(c_):
-        av = a[:, c::c_]  # A_j with j % C == c, ascending
-        bv = b[:, (c_ - 1 - c) % c_ :: c_]  # B_j with (n-1-j)%C == c
-        # column bottom->top = [B run, A run]
-        col = merge2_sorted(bv, av, use_mxu=use_mxu)  # (bt, R)
-        cols.append(col)
-    # --- stage 2: row sorts across columns ---------------------------------
-    # ascending within a row is col0, col1, ..., col_{C-1} (right->left)
-    arr = jnp.stack(cols, axis=-1)  # (bt, R, C)
-    arr = sort_nsorter(arr, use_mxu=use_mxu)
-    o_ref[...] = arr.reshape(bt, m + n)
+    if descending:  # reverse in-register: the merge itself is ascending
+        a, b = a[:, ::-1], b[:, ::-1]
+    if key_dtype is not None:  # fused nan_policy="last" encode
+        a = encode_key_values(a)
+        b = encode_key_values(b)
+    need_pos = n_payload > 0 or want_perm
+    pa = pb = None
+    if need_pos:
+        # positions index the *original* orientation of concat(a, b), the
+        # same convention the unfused executor's position payload uses
+        pa = _iota((bt, m), 1)
+        pb = _iota((bt, n), 1) + m
+        if descending:
+            pa = (m - 1) - _iota((bt, m), 1)
+            pb = ((n - 1) - _iota((bt, n), 1)) + m
+    # setup array as strided views; stage 1 per-column S2MS merges + stage 2
+    # row sorts — the shared in-kernel LOMS device (common.merge2_cols)
+    if need_pos:
+        out, perm = merge2_cols(a, b, n_cols=n_cols, use_mxu=use_mxu,
+                                payload=(pa, pb))
+        perm = perm.astype(jnp.int32)
+    else:
+        out = merge2_cols(a, b, n_cols=n_cols, use_mxu=use_mxu)
+        perm = None
+    if key_dtype is not None:  # fused decode on store
+        out = decode_key_values(out, key_dtype)
+    if descending:
+        out = out[:, ::-1]
+        perm = None if perm is None else perm[:, ::-1]
+    o_ref[...] = out
+    if want_perm:
+        perm_ref[...] = perm
+    for p_ref, po_ref in zip(p_refs, po_refs):
+        po_ref[...] = gather_lanes(perm, p_ref[...])
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_cols", "block_batch", "use_mxu", "interpret")
+    jax.jit,
+    static_argnames=(
+        "n_cols", "block_batch", "use_mxu", "interpret", "key_dtype",
+        "descending", "want_perm",
+    ),
 )
 def loms_merge2_pallas(
     a: jnp.ndarray,
     b: jnp.ndarray,
+    payloads: Sequence[jnp.ndarray] = (),
     *,
     n_cols: int = 2,
     block_batch: int = 8,
     use_mxu: bool = True,
     interpret: Optional[bool] = None,
-) -> jnp.ndarray:
+    key_dtype: Optional[str] = None,
+    descending: bool = False,
+    want_perm: bool = False,
+):
     """Merge sorted ``a`` (B, m) and ``b`` (B, n) -> (B, m+n).
 
     Requires n_cols | m and n_cols | n (the hole-free fast path; ragged
     sizes fall back to the schedule executor in ops.py). Ragged batch
     sizes are padded up to a ``block_batch`` multiple and sliced back.
-    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere.
+
+    Fused-pipeline extras (all handled inside the one kernel launch):
+    ``key_dtype`` — name of the original float dtype; the kernel applies
+    the total-order int-key encode on load and the inverse on store
+    (callers pass int-unsafe ``use_mxu=False``). ``descending`` — inputs
+    are descending-sorted; so is the output. ``payloads`` — sequence of
+    (B, m+n[, F]) lanes, the per-list payloads already concatenated along
+    the list axis; each rides the merge permutation in VMEM and is
+    returned permuted. ``want_perm`` — also return the int32 permutation.
+
+    Returns ``out`` alone in the classic call, else
+    ``(out, perm | None, tuple(payload_outs))``.
+    """
     interpret = resolve_interpret(interpret)
     (bsz, m), (_, n) = a.shape, b.shape
     assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
+    payloads = tuple(payloads)
+    for p in payloads:
+        assert p.ndim in (2, 3) and p.shape[:2] == (bsz, m + n), (
+            p.shape, (bsz, m + n))
     a, b = pad_batch(a, block_batch), pad_batch(b, block_batch)
+    payloads = tuple(pad_batch(p, block_batch) for p in payloads)
     padded = a.shape[0]
     grid = (padded // block_batch,)
-    out = pl.pallas_call(
-        functools.partial(_loms2_kernel, n_cols=n_cols, use_mxu=use_mxu),
+    p_specs = [payload_block_spec(p, block_batch) for p in payloads]
+    out_specs = [pl.BlockSpec((block_batch, m + n), lambda i: (i, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((padded, m + n), a.dtype)]
+    if want_perm:
+        out_specs.append(pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((padded, m + n), jnp.int32))
+    out_specs += [payload_block_spec(p, block_batch) for p in payloads]
+    out_shapes += [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in payloads]
+    results = pl.pallas_call(
+        functools.partial(
+            _loms2_kernel, n_cols=n_cols, use_mxu=use_mxu, key_dtype=key_dtype,
+            descending=descending, n_payload=len(payloads), want_perm=want_perm,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_batch, m), lambda i: (i, 0)),
             pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
+            *p_specs,
         ],
-        out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((padded, m + n), a.dtype),
+        out_specs=out_specs,
+        out_shape=out_shapes,
         interpret=interpret,
-    )(a, b)
-    return out[:bsz] if padded != bsz else out
+    )(a, b, *payloads)
+    return unpack_fused_results(results, bsz, padded, len(payloads), want_perm)

@@ -7,9 +7,16 @@ kernels' ``interpret=None`` default auto-resolves per platform. Ragged
 shapes that the fast kernels don't cover fall back to the pure-JAX
 schedule executor — same oblivious semantics, no shape restrictions.
 
+Tile selection goes through the VMEM-aware planner
+(:func:`repro.streaming.planner.plan_op`): cache-hit autotuned tiles when
+a prior sweep ran on this host, closed-form VMEM-fit heuristics
+otherwise. Batch tiles are chosen by fit, not divisibility — a prime
+batch size pads (``pad_batch``) instead of degenerating to a
+``block_batch=1`` grid of B steps.
+
 These wrappers are the "pallas" backend of the unified dispatch layer
-(:mod:`repro.api`); prefer ``repro.merge / merge_k / topk`` unless you
-need this exact realization.
+(:mod:`repro.api`); prefer ``repro.merge / merge_k / sort / topk`` unless
+you need this exact realization.
 """
 from __future__ import annotations
 
@@ -22,14 +29,27 @@ from repro.core import loms as core_loms
 from .bitonic import bitonic_merge2_pallas
 from .kway import kway_merge_pallas
 from .loms_merge import loms_merge2_pallas
+from .sort import loms_sort_pallas
 from .topk import ROUTER_TOPK_MAX, router_topk_pallas, vocab_topk_pallas
 
 
-def _pick_block_batch(bsz: int, target: int = 8) -> int:
-    for bb in (target, 4, 2, 1):
-        if bsz % bb == 0:
-            return bb
-    return 1
+def _plan(op, lengths, batch, dtype, k=None):
+    # function-level import keeps the module graph's
+    # api -> streaming -> kernels -> core arrow intact
+    from repro.streaming.planner import plan_op
+
+    return plan_op(op, lengths, batch=batch, dtype=dtype, k=k)
+
+
+def _pick_block_batch(bsz: int, *, op: str = "merge2",
+                      lengths: Sequence[int] = (), dtype=jnp.float32,
+                      k: Optional[int] = None) -> int:
+    """VMEM-fit batch tile for one kernel call (cache-aware).
+
+    The old divisor-only rule made a prime batch (B=1007) run with
+    ``block_batch=1`` and a 1007-step grid; ``pad_batch`` already absorbs
+    ragged batches, so the tile is now picked purely by working-set fit."""
+    return _plan(op, tuple(lengths) or (1,), bsz, dtype, k).block_batch
 
 
 def _use_mxu(dtype) -> bool:
@@ -46,13 +66,16 @@ def merge2(
     m, n = a.shape[-1], b.shape[-1]
     if kind == "bitonic":
         return bitonic_merge2_pallas(
-            a, b, block_batch=_pick_block_batch(a.shape[0])
+            a, b,
+            block_batch=_pick_block_batch(a.shape[0], lengths=(m, n),
+                                          dtype=a.dtype),
         )
     assert kind == "loms"
     if m % n_cols == 0 and n % n_cols == 0:
+        plan = _plan("merge2", (m, n), a.shape[0], a.dtype)
         return loms_merge2_pallas(
-            a, b, n_cols=n_cols, block_batch=_pick_block_batch(a.shape[0]),
-            use_mxu=_use_mxu(a.dtype),
+            a, b, n_cols=n_cols, block_batch=plan.block_batch,
+            use_mxu=plan.use_mxu and _use_mxu(a.dtype),
         )
     # ragged fallback: the pure-JAX executor (function-level import so the
     # module graph keeps the api -> streaming -> kernels -> core arrow)
@@ -66,8 +89,9 @@ def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched = core_loms.loms_kway(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    return kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]),
-                             use_mxu=_use_mxu(x.dtype))
+    plan = _plan("kway", lens, x.shape[0], x.dtype)
+    return kway_merge_pallas(x, sched, block_batch=plan.block_batch,
+                             use_mxu=plan.use_mxu and _use_mxu(x.dtype))
 
 
 def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
@@ -75,9 +99,41 @@ def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched, pos = core_loms.loms_median(lens)
     x = jnp.concatenate(list(lists), axis=-1)
-    out = kway_merge_pallas(x, sched, block_batch=_pick_block_batch(x.shape[0]),
-                            use_mxu=_use_mxu(x.dtype))
+    plan = _plan("kway", lens, x.shape[0], x.dtype)
+    out = kway_merge_pallas(x, sched, block_batch=plan.block_batch,
+                            use_mxu=plan.use_mxu and _use_mxu(x.dtype))
     return out[..., pos]
+
+
+def sort(x: jnp.ndarray) -> jnp.ndarray:
+    """Batched full sort over the last axis of (B, n): the fused
+    single-launch merge-tree kernel (values only; the api layer's fused
+    adapters carry keys/payloads through the same kernel)."""
+    assert x.ndim == 2
+    plan = _plan("sort", (x.shape[-1],), x.shape[0], x.dtype)
+    return loms_sort_pallas(x, block_batch=plan.block_batch,
+                            use_mxu=plan.use_mxu and _use_mxu(x.dtype))
+
+
+def topk_tiles(bsz: int, e: int, *, block: int = 0,
+               block_batch: int = 8) -> Tuple[int, int]:
+    """Resolve the (block, block_batch) tile pair for the top-k kernels.
+
+    The single home for the top-k divisor fallback: the kernels don't
+    batch-pad yet, so block_batch halves until it divides the batch, and
+    the router block shrinks until it divides the axis. Shared by this
+    wrapper and the fused adapter (repro.api.fused)."""
+    bb = max(block_batch, 1)
+    while bsz % bb:
+        bb //= 2
+    bb = max(bb, 1)
+    if e <= ROUTER_TOPK_MAX:
+        blk = block or max(16, min(64, e))
+        while e % blk:
+            blk -= 1
+    else:
+        blk = block or 128
+    return blk, bb
 
 
 def topk(
@@ -89,12 +145,12 @@ def topk(
     two-phase vocab path for large E."""
     assert x.ndim == 2
     bsz, e = x.shape
-    bb = _pick_block_batch(bsz)
+    plan = _plan("topk", (e,), bsz, x.dtype, k)
+    blk, bb = topk_tiles(bsz, e, block=block or plan.block,
+                         block_batch=plan.block_batch)
+    use_mxu = plan.use_mxu and _use_mxu(x.dtype)
     if e <= ROUTER_TOPK_MAX:
-        blk = block or max(16, min(64, e))
-        while e % blk:
-            blk -= 1
         return router_topk_pallas(x, k=k, block=blk, block_batch=bb,
-                                  use_mxu=_use_mxu(x.dtype))
-    return vocab_topk_pallas(x, k=k, block=block or 128, block_batch=bb,
-                             use_mxu=_use_mxu(x.dtype))
+                                  use_mxu=use_mxu)
+    return vocab_topk_pallas(x, k=k, block=blk, block_batch=bb,
+                             use_mxu=use_mxu)

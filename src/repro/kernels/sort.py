@@ -1,0 +1,176 @@
+"""Pallas TPU kernel: fused single-launch full sort (DESIGN.md §11).
+
+The schedule executor realizes ``repro.sort`` as a 2-sorter stage plus a
+LOMS 2-way merge tree — each level a separate XLA op over HBM-resident
+data, with the NaN-policy key encode/decode and the payload gather as
+further passes. This kernel runs the *whole* pipeline per batch tile in
+one ``pallas_call``:
+
+  load -> (encode total-order int keys) -> pad to a power of two with
+  +sentinels -> trace-time-unrolled LOMS merge tree carrying an int32
+  position lane -> slice the live prefix -> (decode) -> (reverse for
+  descending) -> store values + gather payload lanes in VMEM.
+
+Stability makes the sentinel handling safe without a compaction pass:
+``merge2_sorted`` is lo-wins-ties stable and the tree merges preserve
+input order among equals, so tail pads (which tie genuine dtype-max
+values) can never migrate before a genuine element — the first ``n``
+output slots are exactly the sorted input.
+
+VMEM: the widest tree level materializes a (bt, npad/2, run, run)
+comparison cloud ~ bt * npad^2 / 4 f32 entries; ``streaming.planner``
+(``plan_sort`` / ``sort_fits_vmem``) sizes ``block_batch`` and gates
+routing so this stays inside the budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    _iota,
+    decode_key_values,
+    encode_key_values,
+    gather_lanes,
+    merge2_cols,
+    np_fill,
+    pad_batch,
+    payload_block_spec,
+    pick_merge_cols,
+    resolve_interpret,
+    sentinel_max,
+    stable_compact,
+    unpack_fused_results,
+)
+
+
+def _sort_kernel(
+    x_ref,
+    *refs,
+    n: int,
+    use_mxu: bool,
+    key_dtype: Optional[str],
+    descending: bool,
+    n_payload: int,
+    want_perm: bool,
+):
+    p_refs = refs[:n_payload]
+    o_ref = refs[n_payload]
+    perm_ref = refs[n_payload + 1] if want_perm else None
+    po_refs = refs[n_payload + 1 + (1 if want_perm else 0):]
+
+    x = x_ref[...]  # (bt, n) unsorted
+    bt = x.shape[0]
+    if key_dtype is not None:  # fused nan_policy="last" encode on load
+        x = encode_key_values(x)
+    npad = 1 << (n - 1).bit_length() if n > 1 else 1
+    if npad != n:
+        # np_fill: a bare python uint32-max overflows weak-int32 promotion
+        fill = np_fill(sentinel_max(x.dtype), x.dtype)
+        x = jnp.pad(x, [(0, 0), (0, npad - n)], constant_values=fill)
+    need_pos = n_payload > 0 or want_perm
+    pos = _iota((bt, npad), 1) if need_pos else None
+    run = 1
+    while run < npad:  # trace-time-unrolled LOMS merge tree
+        g = npad // (2 * run)
+        # column devices only once the S2MS cloud is wide enough to matter;
+        # for short runs the extra stage-2 stack/permute costs more than
+        # the comparator saving
+        cols = pick_merge_cols(run, run) if run >= 64 else 1
+        xv = x.reshape(bt, g, 2 * run)
+        if need_pos:
+            pv = pos.reshape(bt, g, 2 * run)
+            xv, pv = merge2_cols(
+                xv[..., :run], xv[..., run:], n_cols=cols,
+                payload=(pv[..., :run], pv[..., run:]), use_mxu=use_mxu,
+            )
+            pos = pv.reshape(bt, npad)
+        else:
+            xv = merge2_cols(xv[..., :run], xv[..., run:], n_cols=cols,
+                             use_mxu=use_mxu)
+        x = xv.reshape(bt, npad)
+        run *= 2
+    if need_pos and npad != n:
+        # the column devices make no cross-run tie-order promise, so a tail
+        # pad that ties a genuine dtype-max value may land inside the live
+        # prefix; validity is decided by the position lane, never by value
+        x, pos = stable_compact(pos < n, x, pos)
+    out = x[:, :n]  # value-identical under pad/max aliasing (pads tie)
+    perm = pos[:, :n].astype(jnp.int32) if need_pos else None
+    if key_dtype is not None:  # fused decode on store
+        out = decode_key_values(out, key_dtype)
+    if descending:
+        out = out[:, ::-1]
+        perm = None if perm is None else perm[:, ::-1]
+    o_ref[...] = out
+    if want_perm:
+        perm_ref[...] = perm
+    for p_ref, po_ref in zip(p_refs, po_refs):
+        po_ref[...] = gather_lanes(perm, p_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_batch", "use_mxu", "interpret", "key_dtype", "descending",
+        "want_perm",
+    ),
+)
+def loms_sort_pallas(
+    x: jnp.ndarray,
+    payloads: Sequence[jnp.ndarray] = (),
+    *,
+    block_batch: int = 8,
+    use_mxu: bool = True,
+    interpret: Optional[bool] = None,
+    key_dtype: Optional[str] = None,
+    descending: bool = False,
+    want_perm: bool = False,
+):
+    """Full sort of unsorted (B, n) rows in one fused kernel launch.
+
+    ``key_dtype`` — original float dtype name: the kernel encodes the
+    total-order int keys on load and decodes on store (pass
+    ``use_mxu=False``; int keys must take the exact scatter permute).
+    ``payloads`` — (B, n[, F]) lanes permuted in VMEM and returned.
+    ``descending`` — descending output, handled in-register. ``want_perm``
+    — also return the int32 sort permutation (input positions).
+
+    Returns ``out`` alone in the plain call, else
+    ``(out, perm | None, tuple(payload_outs))``. Ragged batch sizes pad up
+    to a ``block_batch`` multiple and slice back.
+    """
+    interpret = resolve_interpret(interpret)
+    bsz, n = x.shape
+    payloads = tuple(payloads)
+    for p in payloads:
+        assert p.ndim in (2, 3) and p.shape[:2] == (bsz, n), (p.shape, (bsz, n))
+    x = pad_batch(x, block_batch)
+    payloads_p = tuple(pad_batch(p, block_batch) for p in payloads)
+    padded = x.shape[0]
+    out_specs = [pl.BlockSpec((block_batch, n), lambda i: (i, 0))]
+    out_shapes = [jax.ShapeDtypeStruct((padded, n), x.dtype)]
+    if want_perm:
+        out_specs.append(pl.BlockSpec((block_batch, n), lambda i: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((padded, n), jnp.int32))
+    out_specs += [payload_block_spec(p, block_batch) for p in payloads_p]
+    out_shapes += [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in payloads_p]
+    results = pl.pallas_call(
+        functools.partial(
+            _sort_kernel, n=n, use_mxu=use_mxu, key_dtype=key_dtype,
+            descending=descending, n_payload=len(payloads), want_perm=want_perm,
+        ),
+        grid=(padded // block_batch,),
+        in_specs=[
+            pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
+            *[payload_block_spec(p, block_batch) for p in payloads_p],
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, *payloads_p)
+    return unpack_fused_results(results, bsz, padded, len(payloads), want_perm)

@@ -27,7 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import merge2_sorted, resolve_interpret, sentinel_min, sort_nsorter
+from .common import (
+    decode_key_values,
+    encode_key_values,
+    merge2_sorted,
+    resolve_interpret,
+    sentinel_min,
+    sort_nsorter,
+)
 
 #: largest last-axis size the single-kernel router path handles; beyond it
 #: the two-phase vocab kernel grids over (batch, vocab-block). The dispatch
@@ -50,8 +57,10 @@ def _merge_desc(av, ai, bv, bi, keep, use_mxu):
     return mv[..., ::-1][..., :keep], mi[..., ::-1][..., :keep]
 
 
-def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu):
+def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu, key_dtype):
     x = x_ref[...]  # (bt, E)
+    if key_dtype is not None:  # fused nan_policy="last" encode on load
+        x = encode_key_values(x)
     bt, e = x.shape
     g = e // block
     idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
@@ -67,22 +76,30 @@ def _router_topk_kernel(x_ref, v_ref, i_ref, *, k, block, use_mxu):
         kk = min(k, 2 * kk)
         vs, is_ = _merge_desc(vs[..., 0::2, :], is_[..., 0::2, :],
                               vs[..., 1::2, :], is_[..., 1::2, :], kk, use_mxu)
-    v_ref[...] = vs[..., 0, :k]
+    vs = vs[..., 0, :k]
+    if key_dtype is not None:  # fused decode on store
+        vs = decode_key_values(vs, key_dtype)
+    v_ref[...] = vs
     i_ref[...] = is_[..., 0, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "k", "block", "block_batch", "use_mxu", "interpret", "key_dtype"))
 def router_topk_pallas(
     x: jnp.ndarray, *, k: int, block: int = 32, block_batch: int = 8,
     use_mxu: bool = True, interpret: Optional[bool] = None,
+    key_dtype: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k over the last axis of (T, E) router logits; E % block == 0.
-    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere.
+    ``key_dtype`` fuses the total-order float->int key transform into the
+    kernel (encode on load, decode on store; pass ``use_mxu=False``)."""
     interpret = resolve_interpret(interpret)
     t, e = x.shape
     assert e % block == 0 and t % block_batch == 0
     return pl.pallas_call(
-        functools.partial(_router_topk_kernel, k=k, block=block, use_mxu=use_mxu),
+        functools.partial(_router_topk_kernel, k=k, block=block,
+                          use_mxu=use_mxu, key_dtype=key_dtype),
         grid=(t // block_batch,),
         in_specs=[pl.BlockSpec((block_batch, e), lambda i: (i, 0))],
         out_specs=[
@@ -102,32 +119,50 @@ def router_topk_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _phase1_kernel(x_ref, v_ref, i_ref, *, k, v_real, use_mxu):
+def _phase1_kernel(x_ref, v_ref, i_ref, *, k, v_real, use_mxu, key_dtype,
+                   decode):
     j = pl.program_id(1)
     x = x_ref[...]  # (bt, bs)
     bt, bs = x.shape
     idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + (j * bs).astype(jnp.int32)
+    if key_dtype is not None:  # fused nan_policy="last" encode on load
+        x = encode_key_values(x)
+        # V-padding slots become the int-key -sentinel (below key(-inf)),
+        # bit-identical to the unfused pipeline's padded encoded array
+        x = jnp.where(idx < v_real, x, _neg_inf(x.dtype))
     idx = jnp.where(idx < v_real, idx, -1)  # V-padding slots must not alias
     vs, is_ = sort_nsorter(x, idx, use_mxu=use_mxu)
-    v_ref[...] = vs[..., ::-1][..., None, :k]
+    vs = vs[..., ::-1][..., :k]
+    if decode:  # single-block vocab: this launch is also the last phase
+        vs = decode_key_values(vs, key_dtype)
+    v_ref[...] = vs[..., None, :]
     i_ref[...] = is_[..., ::-1][..., None, :k]
 
 
-def _merge_level_kernel(v_ref, i_ref, vo_ref, io_ref, *, keep, use_mxu):
+def _merge_level_kernel(v_ref, i_ref, vo_ref, io_ref, *, keep, use_mxu,
+                        decode_dtype):
     v = v_ref[...]  # (bt, 2, k) two descending lists
     i = i_ref[...]
     vo, io = _merge_desc(v[:, 0], i[:, 0], v[:, 1], i[:, 1], keep, use_mxu)
+    if decode_dtype is not None:  # last level: fused decode on store
+        vo = decode_key_values(vo, decode_dtype)
     vo_ref[...] = vo[:, None, :]
     io_ref[...] = io[:, None, :]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block", "block_batch", "use_mxu", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "k", "block", "block_batch", "use_mxu", "interpret", "key_dtype"))
 def vocab_topk_pallas(
     x: jnp.ndarray, *, k: int, block: int = 128, block_batch: int = 8,
     use_mxu: bool = True, interpret: Optional[bool] = None,
+    key_dtype: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k over a large last axis (B, V). Pads V to a block multiple.
-    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere."""
+    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere.
+    ``key_dtype`` fuses the total-order key transform into the phase
+    kernels: phase 1 encodes on load, the final merge level decodes on
+    store — the intermediate k-lists stay int keys and never round-trip
+    through an XLA encode/decode (pass ``use_mxu=False``)."""
     interpret = resolve_interpret(interpret)
     bsz, v = x.shape
     assert bsz % block_batch == 0
@@ -138,8 +173,13 @@ def vocab_topk_pallas(
     if vp != v:
         x = jnp.pad(x, [(0, 0), (0, vp - v)], constant_values=_neg_inf(x.dtype))
     kk = min(k, block)
+    work_dtype = x.dtype
+    if key_dtype is not None:  # encode_key_values widens sub-64-bit to i32
+        work_dtype = jnp.int64 if jnp.dtype(key_dtype).itemsize == 8 else jnp.int32
     vs, is_ = pl.pallas_call(
-        functools.partial(_phase1_kernel, k=kk, v_real=v, use_mxu=use_mxu),
+        functools.partial(_phase1_kernel, k=kk, v_real=v, use_mxu=use_mxu,
+                          key_dtype=key_dtype,
+                          decode=(key_dtype is not None and nblk == 1)),
         grid=(bsz // block_batch, nblk),
         in_specs=[pl.BlockSpec((block_batch, block), lambda i, j: (i, j))],
         out_specs=[
@@ -147,7 +187,8 @@ def vocab_topk_pallas(
             pl.BlockSpec((block_batch, 1, kk), lambda i, j: (i, j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, nblk, kk), x.dtype),
+            jax.ShapeDtypeStruct(
+                (bsz, nblk, kk), x.dtype if nblk == 1 else work_dtype),
             jax.ShapeDtypeStruct((bsz, nblk, kk), jnp.int32),
         ],
         interpret=interpret,
@@ -155,11 +196,15 @@ def vocab_topk_pallas(
     while vs.shape[1] > 1:
         g = vs.shape[1] // 2
         keep = min(k, 2 * vs.shape[-1])
+        last = g == 1
         vpair = vs.reshape(bsz * g, 2, vs.shape[-1])
         ipair = is_.reshape(bsz * g, 2, vs.shape[-1])
         bb = block_batch if (bsz * g) % block_batch == 0 else 1
         vs, is_ = pl.pallas_call(
-            functools.partial(_merge_level_kernel, keep=keep, use_mxu=use_mxu),
+            functools.partial(
+                _merge_level_kernel, keep=keep, use_mxu=use_mxu,
+                decode_dtype=key_dtype if (key_dtype is not None and last)
+                else None),
             grid=((bsz * g) // bb,),
             in_specs=[
                 pl.BlockSpec((bb, 2, vpair.shape[-1]), lambda i: (i, 0, 0)),
@@ -170,7 +215,9 @@ def vocab_topk_pallas(
                 pl.BlockSpec((bb, 1, keep), lambda i: (i, 0, 0)),
             ],
             out_shape=[
-                jax.ShapeDtypeStruct((bsz * g, 1, keep), x.dtype),
+                jax.ShapeDtypeStruct(
+                    (bsz * g, 1, keep),
+                    x.dtype if (key_dtype is not None and last) else vs.dtype),
                 jax.ShapeDtypeStruct((bsz * g, 1, keep), jnp.int32),
             ],
             interpret=interpret,

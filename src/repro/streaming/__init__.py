@@ -11,16 +11,30 @@ unified dispatch layer (``repro.merge``/``repro.topk`` route here for
 past-VMEM inputs and TP-sharded vocabs; DESIGN.md §9) — prefer those
 entry points unless you need a specific realization.
 """
-from .cache import AutotuneCache, default_cache, default_cache_path, plan_key  # noqa: F401
+from .cache import (  # noqa: F401
+    SCHEMA_VERSION,
+    AutotuneCache,
+    default_cache,
+    default_cache_path,
+    plan_key,
+)
 from .chunked import chunked_merge, chunked_merge_k  # noqa: F401
+from .grid_merge import grid_chunked_merge2  # noqa: F401
 from .planner import (  # noqa: F401
     MergePlan,
     autotune_merge2,
+    autotune_op,
+    autotune_sort,
+    autotune_topk,
     fits_vmem,
     kway_fits_vmem,
+    pick_block_batch,
     plan_chunked,
     plan_chunked_k,
     plan_merge2,
+    plan_op,
+    plan_sort,
+    sort_fits_vmem,
     vmem_budget,
 )
 from .tree import local_topk_desc, tree_topk, tree_topk_for  # noqa: F401

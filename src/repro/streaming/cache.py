@@ -7,6 +7,11 @@ so concurrent benchmark runs can never leave a torn file; reads tolerate a
 missing or corrupt file by starting empty (an autotune cache is always
 reconstructible).
 
+Entries are stamped with :data:`SCHEMA_VERSION`. ``get`` ignores entries
+written under a different schema (or none): when the plan fields change
+meaning across releases, stale entries silently degrade to a heuristic
+re-plan instead of mis-parameterizing a kernel.
+
 The default location is ``$REPRO_AUTOTUNE_CACHE`` or
 ``~/.cache/repro_loms/autotune.json``.
 """
@@ -17,6 +22,11 @@ import os
 import tempfile
 import threading
 from typing import Any, Dict, Optional
+
+#: entry-format version; bump when MergePlan fields change meaning.
+#: v2 added the fused-pipeline knobs (``block``) and the VMEM-fit
+#: (non-divisor) block_batch semantics.
+SCHEMA_VERSION = 2
 
 
 def default_cache_path() -> str:
@@ -89,11 +99,14 @@ class AutotuneCache:
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
-            return self._entries.get(key)
+            entry = self._entries.get(key)
+        if entry is None or entry.get("_schema") != SCHEMA_VERSION:
+            return None  # stale-schema entries degrade to a heuristic plan
+        return entry
 
     def put(self, key: str, value: Dict[str, Any]) -> None:
         with self._lock:
-            self._entries[key] = dict(value)
+            self._entries[key] = dict(value, _schema=SCHEMA_VERSION)
         if self.autosave:
             self.save()
 

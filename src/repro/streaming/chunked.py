@@ -6,13 +6,15 @@ inputs (DESIGN.md §8):
 
 * :func:`chunked_merge` — 2-way streaming merge with a carry buffer. Each
   step loads one tile of ``T`` values from whichever stream's *last loaded*
-  element is smaller, merges it with the ``T``-value carry through
-  ``loms_merge2_pallas``, emits the lower half and keeps the upper half as
-  the next carry. Selecting on the last-loaded element (not the head) is
-  what makes a fixed emission rate safe: every carry element is bounded by
-  the larger of the two last-loaded values, so the emitted lower half can
-  never overtake an unloaded element. Working set is O(batch * tile)
-  regardless of input length.
+  element is smaller, merges it with the ``T``-value carry, emits the lower
+  half and keeps the upper half as the next carry. Selecting on the
+  last-loaded element (not the head) is what makes a fixed emission rate
+  safe: every carry element is bounded by the larger of the two last-loaded
+  values, so the emitted lower half can never overtake an unloaded element.
+  Working set is O(batch * tile) regardless of input length. By default the
+  whole loop runs as **one grid-resident kernel launch** whose carry buffer
+  lives in VMEM scratch (:mod:`~repro.streaming.grid_merge`); the legacy
+  one-``pallas_call``-per-tile XLA loop is kept as ``mode="loop"``.
 
 * :func:`chunked_merge_k` — k-way tiled merge via merge-path partitioning:
   the global rank of every element is computed with vectorized binary
@@ -85,12 +87,17 @@ def chunked_merge(
     tile: Optional[int] = None,
     plan: Optional[MergePlan] = None,
     interpret: Optional[bool] = None,
+    mode: str = "grid",
 ) -> jnp.ndarray:
     """Streaming 2-way merge of ascending ``a`` (..., Na) and ``b`` (..., Nb).
 
     Equivalent to ``sort(concat([a, b], -1))`` but built from fixed
-    ``tile``-sized LOMS kernel invocations with an O(batch*tile) carry —
-    inputs far larger than VMEM merge at fixed on-chip memory."""
+    ``tile``-sized LOMS merge steps with an O(batch*tile) carry — inputs
+    far larger than VMEM merge at fixed on-chip memory. ``mode="grid"``
+    (default) runs the whole stream as one grid-resident kernel launch
+    with the carry in VMEM scratch; ``mode="loop"`` is the legacy
+    one-launch-per-tile XLA loop."""
+    assert mode in ("grid", "loop"), mode
     a2, lead = _as_batched(a)
     b2, lead_b = _as_batched(b)
     assert lead == lead_b, (a.shape, b.shape)
@@ -102,7 +109,14 @@ def chunked_merge(
     t = max(2, t - (t % 2))
     if interpret is None:
         interpret = _interpret()
-    out = _chunked_merge2(a2, b2, tile=t, plan=plan, interpret=interpret)
+    if mode == "grid":
+        from .grid_merge import grid_chunked_merge2
+
+        use_mxu = plan.use_mxu and jnp.issubdtype(a2.dtype, jnp.floating)
+        out = grid_chunked_merge2(a2, b2, tile=t, use_mxu=use_mxu,
+                                  interpret=interpret)
+    else:
+        out = _chunked_merge2(a2, b2, tile=t, plan=plan, interpret=interpret)
     return out.reshape(lead + (na + nb,)) if lead else out[0]
 
 

@@ -1,0 +1,152 @@
+"""Grid-resident streaming 2-way merge: one launch, carry in VMEM scratch.
+
+The original chunked merge (``chunked.py``) drives the FLiMS carry-buffer
+loop from XLA: every tile step is its own ``pallas_call``, so the carry
+buffer and the stream pointers round-trip through HBM between steps —
+exactly the intermediate traffic the paper's devices exist to avoid.
+
+This kernel keeps the whole pipeline resident for the duration of one
+``pallas_call`` (DESIGN.md §11):
+
+* grid = (batch, out_tiles); the TPU grid iterates the last dimension
+  innermost, so each batch row runs its tile steps back to back;
+* the carry tile lives in **VMEM scratch** and persists across grid
+  steps (Pallas scratch is allocated once per launch, not per step);
+* the stream pointers and last-loaded values live in **SMEM scratch**;
+* the inputs stay in HBM/ANY and each refill is one async DMA of a single
+  tile, chosen by the FLiMS rule (refill whichever stream's *last loaded*
+  element is smaller — the bound that makes a fixed emission rate safe);
+* only the emitted lower halves are written back, through the blocked
+  output spec.
+
+HBM traffic is therefore one read of each input element, one write of
+each output element, and nothing else — the FLiMS property — instead of
+one carry round-trip per tile. Values-only (the streaming backend's
+contract); works for any dtype including the total-order int keys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import (
+    merge2_cols,
+    pad_tail_sorted,
+    pick_merge_cols,
+    resolve_interpret,
+)
+
+
+def _grid_merge2_kernel(
+    a_hbm, b_hbm, o_ref, carry_ref, buf_ref, ptr_ref, last_ref, sem,
+    *, t: int, la: int, lb: int, n_cols: int, use_mxu: bool,
+):
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _prologue():
+        # load the first tile of each stream, emit the lower half
+        cp = pltpu.make_async_copy(a_hbm.at[r, pl.ds(0, t)], buf_ref.at[0], sem)
+        cp.start()
+        cp.wait()
+        cp = pltpu.make_async_copy(b_hbm.at[r, pl.ds(0, t)], buf_ref.at[1], sem)
+        cp.start()
+        cp.wait()
+        ta = buf_ref[0][None, :]
+        tb = buf_ref[1][None, :]
+        merged = merge2_cols(ta, tb, n_cols=n_cols, use_mxu=use_mxu)
+        o_ref[...] = merged[:, :t]
+        carry_ref[...] = merged[:, t:]
+        ptr_ref[0] = t
+        ptr_ref[1] = t
+        last_ref[0] = buf_ref[0, t - 1]
+        last_ref[1] = buf_ref[1, t - 1]
+
+    @pl.when(i > 0)
+    def _step():
+        pa = ptr_ref[0]
+        pb = ptr_ref[1]
+        last_a = last_ref[0]
+        last_b = last_ref[1]
+        sel_a = last_a <= last_b  # FLiMS rule: refill the lagging stream
+
+        @pl.when(sel_a)
+        def _():
+            cp = pltpu.make_async_copy(
+                a_hbm.at[r, pl.ds(pa, t)], buf_ref.at[0], sem)
+            cp.start()
+            cp.wait()
+
+        @pl.when(jnp.logical_not(sel_a))
+        def _():
+            cp = pltpu.make_async_copy(
+                b_hbm.at[r, pl.ds(pb, t)], buf_ref.at[0], sem)
+            cp.start()
+            cp.wait()
+
+        cur = buf_ref[0][None, :]
+        tail = buf_ref[0, t - 1]
+        last_ref[0] = jnp.where(sel_a, tail, last_a)
+        last_ref[1] = jnp.where(sel_a, last_b, tail)
+        # pointers clamp at the all-sentinel drain tile, so an exhausted
+        # stream reads sentinels forever
+        ptr_ref[0] = jnp.where(sel_a, jnp.minimum(pa + t, la - t), pa)
+        ptr_ref[1] = jnp.where(sel_a, pb, jnp.minimum(pb + t, lb - t))
+        merged = merge2_cols(carry_ref[...], cur, n_cols=n_cols,
+                             use_mxu=use_mxu)
+        o_ref[...] = merged[:, :t]
+        carry_ref[...] = merged[:, t:]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "use_mxu", "interpret"))
+def grid_chunked_merge2(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    tile: int = 512,
+    use_mxu: bool = True,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Single-launch streaming merge of ascending (B, Na) and (B, Nb).
+
+    Equivalent to ``sort(concat([a, b], -1))`` with an O(tile) on-chip
+    working set per row; the carry buffer never leaves VMEM between tile
+    steps. The emitted prefix is exact for any input length (drain tiles
+    carry the finite dtype +sentinel; see chunked.py on aliasing)."""
+    interpret = resolve_interpret(interpret)
+    bsz, na = a.shape
+    nb = b.shape[-1]
+    t = int(tile)
+    total = na + nb
+    out_tiles = -(-total // t)
+    # each stream gets one all-sentinel drain tile past its (padded) tail
+    la = (-(-na // t) + 1) * t
+    lb = (-(-nb // t) + 1) * t
+    ap = pad_tail_sorted(a, la)
+    bp = pad_tail_sorted(b, lb)
+    out = pl.pallas_call(
+        functools.partial(_grid_merge2_kernel, t=t, la=la, lb=lb,
+                          n_cols=pick_merge_cols(t, t), use_mxu=use_mxu),
+        grid=(bsz, out_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, t), lambda r, i: (r, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, out_tiles * t), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, t), a.dtype),   # carry (resident across steps)
+            pltpu.VMEM((2, t), a.dtype),   # refill buffers
+            pltpu.SMEM((2,), jnp.int32),   # stream pointers
+            pltpu.SMEM((2,), a.dtype),     # last-loaded values
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:, :total]

@@ -1,14 +1,23 @@
 """Merge planner: pick the kernel schedule knobs for a given problem.
 
-Two layers:
+Three layers:
 
-* :func:`plan_merge2` / :func:`plan_chunked` — closed-form heuristics from
-  the paper's cost model (stage-1 comparison cloud is ``m*n/C`` comparators,
-  stage-2 row sorts are ``(m+n)*C``; optimal column count sits near
-  ``sqrt(m*n/(m+n))``) plus the ~16 MiB VMEM budget from DESIGN.md §2.
-* :func:`autotune_merge2` — measure a small candidate grid on the live
-  backend and persist the winner in the :mod:`~repro.streaming.cache`
-  autotune cache, so the second process on the same host skips the sweep.
+* :func:`plan_merge2` / :func:`plan_chunked` / :func:`plan_sort` /
+  :func:`plan_topk` — closed-form heuristics from the paper's cost model
+  (stage-1 comparison cloud is ``m*n/C`` comparators, stage-2 row sorts
+  are ``(m+n)*C``; optimal column count sits near ``sqrt(m*n/(m+n))``)
+  plus the ~16 MiB VMEM budget from DESIGN.md §2. Tiles are picked by
+  **VMEM fit, not batch divisibility** — every kernel pads ragged batches
+  (``kernels.common.pad_batch``), so a prime batch size no longer
+  degrades to ``block_batch=1``.
+* :func:`plan_op` — the cache-aware front door the kernel wrappers and
+  the dispatch layer call: one (op, shapes, dtype, k, platform) key into
+  the :mod:`~repro.streaming.cache` autotune cache, falling back to the
+  heuristic plan on a miss. Runtime stays deterministic — a miss never
+  triggers measurement.
+* :func:`autotune_op` (and the op-specific ``autotune_*``) — measure a
+  small candidate grid on the live backend and persist the winner, so the
+  second process on the same host skips the sweep.
 
 A plan never changes semantics — every candidate computes the same merge —
 so a stale cache entry costs speed, not correctness.
@@ -17,27 +26,44 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.common import pick_merge_cols
 
 from .cache import AutotuneCache, default_cache, plan_key
 
 # conservative per-core on-chip working-set budget (bytes); DESIGN.md §2
 _VMEM_BUDGET = 8 * 1024 * 1024
 
+#: block_batch candidates, largest first (power-of-two tiles pipeline best;
+#: pad_batch absorbs ragged batch sizes)
+_BB_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _target_bb(batch: int, target: int) -> int:
+    """Platform-aware batch-tile target. On TPU the default (8 sublanes)
+    balances VMEM pressure against pipelining; off-TPU the kernels run in
+    interpret mode where each grid step re-executes the kernel body, so
+    the best tile is the whole batch (fewest steps) within the budget."""
+    if jax.default_backend() == "tpu":
+        return target
+    return max(target, min(batch, _BB_CANDIDATES[0]))
+
 
 @dataclasses.dataclass(frozen=True)
 class MergePlan:
-    """Resolved knobs for one merge problem (all kernel-static)."""
+    """Resolved knobs for one sort/merge problem (all kernel-static)."""
 
     kind: str = "loms"  # 'loms' | 'bitonic' | 'schedule' (ragged fallback)
     n_cols: int = 2
     block_batch: int = 8
     use_mxu: bool = True
     tile: int = 512  # chunked/streaming tile size (per input)
+    block: int = 0  # topk block size (0 = op default)
     source: str = "heuristic"  # 'heuristic' | 'autotune' | 'cache'
 
     def to_entry(self, us: Optional[float] = None) -> dict:
@@ -47,6 +73,7 @@ class MergePlan:
             "block_batch": self.block_batch,
             "use_mxu": self.use_mxu,
             "tile": self.tile,
+            "block": self.block,
         }
         if us is not None:
             d["us"] = float(us)
@@ -60,6 +87,7 @@ class MergePlan:
             block_batch=int(entry["block_batch"]),
             use_mxu=bool(entry["use_mxu"]),
             tile=int(entry.get("tile", 512)),
+            block=int(entry.get("block", 0)),
             source=source,
         )
 
@@ -81,6 +109,17 @@ def _vmem_bytes_merge2(m: int, n: int, n_cols: int, block_batch: int, dtype) -> 
     return block_batch * (vals + cloud + rows)
 
 
+def _vmem_bytes_sort(n: int, block_batch: int, dtype) -> int:
+    """Rough working set of the fused merge-tree sort kernel: the widest
+    tree level materializes a (npad/2, npad/2) rank cloud per row pair
+    plus the value/position lanes."""
+    it = max(_itemsize(dtype), 4)
+    npad = 1 << (n - 1).bit_length() if n > 1 else 1
+    cloud = (npad // 2) * (npad // 2) * 4 * 2  # cmp counts + rank ints
+    lanes = npad * (it + 4) * 2  # values + int32 position lane, double-buffered
+    return block_batch * (cloud + lanes)
+
+
 def _feasible_cols(m: int, n: int) -> Tuple[int, ...]:
     return tuple(c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0)
 
@@ -88,6 +127,27 @@ def _feasible_cols(m: int, n: int) -> Tuple[int, ...]:
 def vmem_budget() -> int:
     """Per-core on-chip working-set budget (bytes) the plans target."""
     return _VMEM_BUDGET
+
+
+def pick_block_batch(
+    batch: int, row_bytes: Callable[[int], int], target: int = 8
+) -> int:
+    """Largest power-of-two batch tile whose working set fits the budget.
+
+    ``row_bytes(bb)`` returns the kernel working set for a ``bb``-row tile.
+    No divisibility requirement — ragged batches pad (``pad_batch``) and
+    slice back, so a prime batch (B=1007) still runs with a wide tile and
+    a short grid instead of degenerating to ``block_batch=1``."""
+    batch = max(batch, 1)
+    target = _target_bb(batch, max(target, 1))
+    for bb in _BB_CANDIDATES:
+        # allow one pad-up to the next power of two (a 5-row batch runs as
+        # one 8-row tile), never more — padded rows are wasted compute
+        if bb > target or bb >= 2 * batch:
+            continue
+        if row_bytes(bb) <= _VMEM_BUDGET:
+            return bb
+    return 1
 
 
 def fits_vmem(
@@ -106,6 +166,13 @@ def kway_fits_vmem(total: int) -> bool:
     return total * total * 4 <= _VMEM_BUDGET
 
 
+def sort_fits_vmem(n: int, *, block_batch: int = 1, dtype=jnp.float32) -> bool:
+    """Whether the fused single-launch sort kernel (kernels/sort.py) can
+    run ``n``-element rows inside the budget — the dispatch layer's
+    fused-pallas vs schedule-executor cutover for ``repro.sort``."""
+    return _vmem_bytes_sort(n, block_batch, dtype) <= _VMEM_BUDGET
+
+
 def plan_merge2(
     m: int,
     n: int,
@@ -115,24 +182,61 @@ def plan_merge2(
     target_block_batch: int = 8,
 ) -> MergePlan:
     """Heuristic plan for one UP-m/DN-n batched merge."""
-    cols = _feasible_cols(m, n)
-    if not cols:
+    # comparator cost model: stage1 m*n/C + stage2 (m+n)*C, minimized near
+    # C* = sqrt(m*n/(m+n)) — the one home for the rule is
+    # kernels.common.pick_merge_cols (the in-kernel sort tree shares it)
+    n_cols = pick_merge_cols(m, n)
+    if n_cols == 1:
         # hole-y setup array: the pure-JAX schedule executor handles it
         return MergePlan(kind="schedule", n_cols=2, block_batch=1,
                          use_mxu=_is_float(dtype), source="heuristic")
-    # comparator cost model: stage1 m*n/C + stage2 (m+n)*C, minimized near
-    # C* = sqrt(m*n/(m+n)); take the nearest feasible column count.
-    c_star = float(np.sqrt(m * n / max(m + n, 1)))
-    n_cols = min(cols, key=lambda c: abs(c - c_star))
-    bb = target_block_batch
-    while bb > 1 and _vmem_bytes_merge2(m, n, n_cols, bb, dtype) > _VMEM_BUDGET:
-        bb //= 2
-    bb = max(1, min(bb, batch))
+    bb = pick_block_batch(
+        batch, lambda b: _vmem_bytes_merge2(m, n, n_cols, b, dtype),
+        target=target_block_batch,
+    )
     # int32+ values overflow the f32 one-hot matmul mantissa; route ints
     # through the exact scatter permute.
     use_mxu = _is_float(dtype)
     return MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
                      use_mxu=use_mxu, source="heuristic")
+
+
+def plan_sort(n: int, *, batch: int = 8, dtype=jnp.float32,
+              target_block_batch: int = 8) -> MergePlan:
+    """Heuristic plan for the fused single-launch sort kernel."""
+    bb = pick_block_batch(
+        batch, lambda b: _vmem_bytes_sort(n, b, dtype),
+        target=target_block_batch,
+    )
+    return MergePlan(kind="loms", n_cols=2, block_batch=bb,
+                     use_mxu=_is_float(dtype), source="heuristic")
+
+
+def plan_kway(total: int, *, batch: int = 8, dtype=jnp.float32,
+              target_block_batch: int = 8) -> MergePlan:
+    """Heuristic plan for the schedule-driven k-way merge kernel (its
+    widest stage materializes a ~total^2 f32 cloud per row)."""
+    bb = pick_block_batch(
+        batch, lambda b: b * total * total * 4, target=target_block_batch,
+    )
+    return MergePlan(kind="loms", n_cols=2, block_batch=bb,
+                     use_mxu=_is_float(dtype), source="heuristic")
+
+
+def plan_topk(n: int, k: int, *, batch: int = 8, dtype=jnp.float32,
+              target_block_batch: int = 8) -> MergePlan:
+    """Heuristic plan for the blockwise top-k kernels: block ~ the point
+    where the local n*block sort cloud balances the k^2 * n/block merge
+    tree, clamped to the kernel-friendly range."""
+    block = int(min(max(16, 1 << max(k - 1, 1).bit_length()), 128, n))
+    while n % block and block > 16:
+        block //= 2
+    bb = pick_block_batch(
+        batch, lambda b: b * n * (max(_itemsize(dtype), 4) + block * 4),
+        target=target_block_batch,
+    )
+    return MergePlan(kind="loms", block=block, block_batch=bb,
+                     use_mxu=_is_float(dtype), source="heuristic")
 
 
 def plan_chunked(
@@ -175,6 +279,65 @@ def plan_chunked_k(
 
 
 # ---------------------------------------------------------------------------
+# cache-aware front door: one key per (op, shapes, dtype, k, platform)
+# ---------------------------------------------------------------------------
+
+_HEURISTICS: Dict[str, Callable[..., MergePlan]] = {}
+
+
+def _register_heuristic(op: str):
+    def deco(fn):
+        _HEURISTICS[op] = fn
+        return fn
+    return deco
+
+
+_register_heuristic("merge2")(
+    lambda lengths, batch, dtype, k: plan_merge2(
+        lengths[0], lengths[1], batch=batch, dtype=dtype))
+_register_heuristic("sort")(
+    lambda lengths, batch, dtype, k: plan_sort(
+        lengths[0], batch=batch, dtype=dtype))
+_register_heuristic("kway")(
+    lambda lengths, batch, dtype, k: plan_kway(
+        sum(lengths), batch=batch, dtype=dtype))
+_register_heuristic("topk")(
+    lambda lengths, batch, dtype, k: plan_topk(
+        lengths[0], k or 1, batch=batch, dtype=dtype))
+_register_heuristic("chunked2")(
+    lambda lengths, batch, dtype, k: plan_chunked(
+        lengths[0], lengths[1], batch=batch, dtype=dtype))
+_register_heuristic("chunked_k")(
+    lambda lengths, batch, dtype, k: plan_chunked_k(
+        lengths, batch=batch, dtype=dtype))
+
+
+def plan_op(
+    op: str,
+    lengths: Sequence[int],
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    k: Optional[int] = None,
+    cache: Optional[AutotuneCache] = None,
+) -> MergePlan:
+    """Cache-aware tile plan for one kernel problem.
+
+    Looks up the autotune cache under a key that encodes the op, every
+    list length, the batch, the dtype, ``k`` and the live platform; falls
+    back to the closed-form heuristic on a miss (no measurement at
+    runtime — only :func:`autotune_op` fills the cache)."""
+    assert op in _HEURISTICS, (op, sorted(_HEURISTICS))
+    cache = cache if cache is not None else default_cache()
+    key = plan_key(op, shapes=(batch,) + tuple(lengths),
+                   dtype=jnp.dtype(dtype).name, k=k)
+    hit = cache.get(key)
+    if hit is not None:
+        return MergePlan.from_entry(hit, source="cache")
+    return _HEURISTICS[op](tuple(lengths), batch, dtype, k)
+
+
+# ---------------------------------------------------------------------------
 # benchmark-backed autotune
 # ---------------------------------------------------------------------------
 
@@ -190,6 +353,11 @@ def _time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts)) * 1e6  # us
 
 
+def _sorted_rows(rng, batch, n, dtype):
+    return jnp.sort(
+        jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype), -1)
+
+
 def _merge2_candidates(m: int, n: int, batch: int, dtype) -> Iterable[MergePlan]:
     for n_cols in _feasible_cols(m, n) or ():
         for bb in (16, 8, 4, 1):
@@ -200,6 +368,49 @@ def _merge2_candidates(m: int, n: int, batch: int, dtype) -> Iterable[MergePlan]
             for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
                 yield MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
                                 use_mxu=use_mxu, source="autotune")
+
+
+def _sort_candidates(n: int, batch: int, dtype) -> Iterable[MergePlan]:
+    for bb in (16, 8, 4, 1):
+        if bb > batch:
+            continue
+        if _vmem_bytes_sort(n, bb, dtype) > 2 * _VMEM_BUDGET:
+            continue
+        for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
+            yield MergePlan(kind="loms", block_batch=bb, use_mxu=use_mxu,
+                            source="autotune")
+
+
+def _topk_candidates(n: int, k: int, batch: int, dtype) -> Iterable[MergePlan]:
+    for block in (16, 32, 64, 128):
+        if block > n or n % block:
+            continue
+        for bb in (16, 8, 4, 1):
+            if bb > batch:
+                continue
+            for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
+                yield MergePlan(kind="loms", block=block, block_batch=bb,
+                                use_mxu=use_mxu, source="autotune")
+
+
+def _autotune(
+    op: str,
+    key: str,
+    cands: Sequence[MergePlan],
+    runner: Callable[[MergePlan], Callable],
+    fallback: MergePlan,
+    cache: AutotuneCache,
+    iters: int,
+) -> MergePlan:
+    if not cands:
+        return fallback
+    best, best_us = None, float("inf")
+    for plan in cands:
+        us = _time_call(runner(plan), iters=iters)
+        if us < best_us:
+            best, best_us = plan, us
+    cache.put(key, best.to_entry(best_us))
+    return best
 
 
 def autotune_merge2(
@@ -228,23 +439,113 @@ def autotune_merge2(
     cands = list(candidates) if candidates is not None else list(
         _merge2_candidates(m, n, batch, dtype)
     )
-    if not cands:
-        return plan_merge2(m, n, batch=batch, dtype=dtype)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     rng = np.random.default_rng(0)
-    a = jnp.sort(jnp.asarray(rng.integers(0, 1 << 16, (batch, m))).astype(dtype), -1)
-    b = jnp.sort(jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype), -1)
-    best, best_us = None, float("inf")
-    for plan in cands:
-        us = _time_call(
-            lambda x, y, p=plan: loms_merge2_pallas(
-                x, y, n_cols=p.n_cols, block_batch=p.block_batch,
-                use_mxu=p.use_mxu, interpret=interpret,
-            ),
-            a, b, iters=iters,
+    a = _sorted_rows(rng, batch, m, dtype)
+    b = _sorted_rows(rng, batch, n, dtype)
+
+    def runner(p: MergePlan):
+        return lambda: loms_merge2_pallas(
+            a, b, n_cols=p.n_cols, block_batch=p.block_batch,
+            use_mxu=p.use_mxu, interpret=interpret,
         )
-        if us < best_us:
-            best, best_us = plan, us
-    cache.put(key, best.to_entry(best_us))
-    return best
+
+    return _autotune("merge2", key, cands, runner,
+                     plan_merge2(m, n, batch=batch, dtype=dtype), cache, iters)
+
+
+def autotune_sort(
+    n: int,
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    cache: Optional[AutotuneCache] = None,
+    interpret: Optional[bool] = None,
+    iters: int = 3,
+) -> MergePlan:
+    """Measure block_batch/use_mxu candidates for the fused sort kernel."""
+    from repro.kernels.sort import loms_sort_pallas
+
+    cache = cache if cache is not None else default_cache()
+    key = plan_key("sort", shapes=(batch, n), dtype=jnp.dtype(dtype).name)
+    hit = cache.get(key)
+    if hit is not None:
+        return MergePlan.from_entry(hit, source="cache")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype)
+
+    def runner(p: MergePlan):
+        return lambda: loms_sort_pallas(
+            x, block_batch=p.block_batch, use_mxu=p.use_mxu,
+            interpret=interpret,
+        )
+
+    return _autotune("sort", key, list(_sort_candidates(n, batch, dtype)),
+                     runner, plan_sort(n, batch=batch, dtype=dtype), cache,
+                     iters)
+
+
+def autotune_topk(
+    n: int,
+    k: int,
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    cache: Optional[AutotuneCache] = None,
+    interpret: Optional[bool] = None,
+    iters: int = 3,
+) -> MergePlan:
+    """Measure (block, block_batch, use_mxu) candidates for router top-k."""
+    from repro.kernels.topk import ROUTER_TOPK_MAX, router_topk_pallas
+
+    cache = cache if cache is not None else default_cache()
+    key = plan_key("topk", shapes=(batch, n), k=k, dtype=jnp.dtype(dtype).name)
+    hit = cache.get(key)
+    if hit is not None:
+        return MergePlan.from_entry(hit, source="cache")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fallback = plan_topk(n, k, batch=batch, dtype=dtype)
+    if n > ROUTER_TOPK_MAX:
+        return fallback
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype)
+
+    def runner(p: MergePlan):
+        return lambda: router_topk_pallas(
+            x, k=k, block=p.block or 32, block_batch=p.block_batch,
+            use_mxu=p.use_mxu, interpret=interpret,
+        )
+
+    return _autotune("topk", key, list(_topk_candidates(n, k, batch, dtype)),
+                     runner, fallback, cache, iters)
+
+
+def autotune_op(
+    op: str,
+    lengths: Sequence[int],
+    *,
+    batch: int = 8,
+    dtype=jnp.float32,
+    k: Optional[int] = None,
+    cache: Optional[AutotuneCache] = None,
+    interpret: Optional[bool] = None,
+    iters: int = 3,
+) -> MergePlan:
+    """Autotune front door mirroring :func:`plan_op` keys."""
+    if op == "merge2":
+        return autotune_merge2(lengths[0], lengths[1], batch=batch,
+                               dtype=dtype, cache=cache, interpret=interpret,
+                               iters=iters)
+    if op == "sort":
+        return autotune_sort(lengths[0], batch=batch, dtype=dtype,
+                             cache=cache, interpret=interpret, iters=iters)
+    if op == "topk":
+        return autotune_topk(lengths[0], k or 1, batch=batch, dtype=dtype,
+                             cache=cache, interpret=interpret, iters=iters)
+    # no measured tuner yet: fall back to the heuristic (still cached-keyed
+    # so a future tuner slots in without call-site changes)
+    return plan_op(op, lengths, batch=batch, dtype=dtype, k=k, cache=cache)

@@ -93,14 +93,20 @@ def test_plan_merge_routes_by_shape_and_budget():
                          device="cpu")).backend == "schedule"
     assert plan(SortSpec(op="merge", lengths=(100_000, 100_000),
                          device="tpu")).backend == "streaming"
-    # payload forces the permutation-carrying executor
+    # payload rides the fused kernel permutes on TPU (single launch)
     assert plan(SortSpec(op="merge", lengths=(512, 512), device="tpu",
+                         has_payload=True)).backend == "pallas"
+    # ... but stable's tie pass is an XLA post-pass: executor
+    assert plan(SortSpec(op="merge", lengths=(512, 512), device="tpu",
+                         has_payload=True, stable=True)).backend == "schedule"
+    # and off-TPU payload merges stay on the executor under auto
+    assert plan(SortSpec(op="merge", lengths=(512, 512), device="cpu",
                          has_payload=True)).backend == "schedule"
 
 
 def test_plan_explicit_backend_validated():
     with pytest.raises(ValueError, match="cannot run"):
-        plan(SortSpec(op="merge", lengths=(8, 8), has_payload=True,
+        plan(SortSpec(op="merge", lengths=(8, 8), stable=True,
                       backend="pallas"))
     with pytest.raises(ValueError, match="unknown backend"):
         plan(SortSpec(op="merge", lengths=(8, 8), backend="fpga"))

@@ -1,0 +1,170 @@
+"""Autotune cache + VMEM-aware tile planner tests (PR 4 satellites).
+
+Covers the cache contract the fused pipeline depends on: keys encode
+(op, shapes, dtype, k, platform); hits skip re-tuning entirely;
+stale-schema entries are ignored; and the block_batch fix — a prime batch
+no longer degenerates to a 1-wide tile, because tiles are picked by VMEM
+fit and padded, not by divisibility.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.streaming.cache import SCHEMA_VERSION, AutotuneCache, plan_key
+from repro.streaming.planner import (
+    MergePlan,
+    autotune_merge2,
+    autotune_sort,
+    plan_merge2,
+    plan_op,
+    plan_sort,
+    sort_fits_vmem,
+)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return AutotuneCache(path=str(tmp_path / "autotune.json"))
+
+
+# ---------------------------------------------------------------------------
+# keying
+# ---------------------------------------------------------------------------
+
+
+def test_plan_key_encodes_op_shape_dtype_platform():
+    k = plan_key("merge2", shapes=(8, 64, 32), dtype="float32")
+    assert k.startswith("merge2|8x64x32|k-|float32|")
+    assert k.endswith(jax.default_backend())
+    # every component is discriminating
+    assert k != plan_key("sort", shapes=(8, 64, 32), dtype="float32")
+    assert k != plan_key("merge2", shapes=(8, 64, 64), dtype="float32")
+    assert k != plan_key("merge2", shapes=(8, 64, 32), dtype="int32")
+    assert k != plan_key("merge2", shapes=(8, 64, 32), dtype="float32", k=4)
+    assert k != plan_key("merge2", shapes=(8, 64, 32), dtype="float32",
+                         backend="tpu")
+
+
+# ---------------------------------------------------------------------------
+# hits skip re-tuning
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_retuning(cache, monkeypatch):
+    plan = autotune_merge2(16, 16, batch=4, dtype=jnp.float32, cache=cache,
+                           iters=1)
+    assert plan.source == "autotune"
+    # poison the measurement path: a hit must never reach it
+    import repro.streaming.planner as planner
+
+    def boom(*a, **k):
+        raise AssertionError("cache hit must skip measurement")
+
+    monkeypatch.setattr(planner, "_time_call", boom)
+    hit = autotune_merge2(16, 16, batch=4, dtype=jnp.float32, cache=cache)
+    assert hit.source == "cache"
+    assert (hit.n_cols, hit.block_batch, hit.use_mxu) == (
+        plan.n_cols, plan.block_batch, plan.use_mxu)
+
+
+def test_autotune_sort_persists_and_plan_op_reads_it(cache):
+    plan = autotune_sort(32, batch=4, dtype=jnp.float32, cache=cache, iters=1)
+    assert plan.source == "autotune"
+    via_plan = plan_op("sort", (32,), batch=4, dtype=jnp.float32, cache=cache)
+    assert via_plan.source == "cache"
+    assert via_plan.block_batch == plan.block_batch
+    # a different shape misses and falls back to the heuristic
+    miss = plan_op("sort", (64,), batch=4, dtype=jnp.float32, cache=cache)
+    assert miss.source == "heuristic"
+
+
+# ---------------------------------------------------------------------------
+# stale schema entries are ignored
+# ---------------------------------------------------------------------------
+
+
+def test_stale_schema_entries_ignored(cache):
+    key = plan_key("merge2", shapes=(8, 16, 16), dtype="float32")
+    cache.put(key, MergePlan(block_batch=2).to_entry())
+    assert cache.get(key) is not None  # current schema round-trips
+
+    # rewrite the entry as an older/foreign schema on disk
+    with open(cache.path) as f:
+        data = json.load(f)
+    data[key]["_schema"] = SCHEMA_VERSION - 1
+    with open(cache.path, "w") as f:
+        json.dump(data, f)
+    stale = AutotuneCache(path=cache.path)
+    assert stale.get(key) is None
+    # and plan_op degrades to the heuristic instead of mis-parameterizing
+    plan = plan_op("merge2", (16, 16), batch=8, dtype=jnp.float32,
+                   cache=stale)
+    assert plan.source == "heuristic"
+
+
+def test_unversioned_entries_ignored(cache):
+    key = plan_key("merge2", shapes=(8, 16, 16), dtype="float32")
+    cache._entries[key] = {"n_cols": 2, "block_batch": 4, "use_mxu": True}
+    assert cache.get(key) is None  # pre-schema entry (no stamp)
+
+
+def test_corrupt_cache_file_starts_empty(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    c = AutotuneCache(path=str(p))
+    assert len(c) == 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM-fit block_batch (the _pick_block_batch satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prime_batch_gets_wide_tile():
+    # B=1007 is prime: the old divisor rule forced block_batch=1 and a
+    # 1007-step grid; the VMEM-fit rule tiles wide and pads
+    plan = plan_merge2(64, 64, batch=1007, dtype=jnp.float32)
+    assert plan.block_batch > 1
+    plan = plan_sort(128, batch=1007, dtype=jnp.float32)
+    assert plan.block_batch > 1
+
+
+def test_block_batch_never_overruns_budget():
+    from repro.streaming.planner import _vmem_bytes_sort, vmem_budget
+
+    # n=1024 fits per-row but not at the full target tile: the picker must
+    # shrink the tile until the working set fits
+    plan = plan_sort(1024, batch=64, dtype=jnp.float32)
+    assert plan.block_batch >= 1
+    assert _vmem_bytes_sort(1024, plan.block_batch, jnp.float32) \
+        <= vmem_budget()
+
+
+def test_small_batch_never_overpads():
+    # one pad-up to the next power of two is allowed, never more
+    for batch in (1, 2, 3, 5, 8, 13):
+        plan = plan_sort(64, batch=batch, dtype=jnp.float32)
+        assert plan.block_batch < 2 * batch, (batch, plan.block_batch)
+
+
+def test_sort_fits_vmem_gates():
+    assert sort_fits_vmem(1024)
+    assert not sort_fits_vmem(1 << 17)
+
+
+def test_prime_batch_kernel_runs_padded():
+    # end-to-end: a ragged batch through the pallas merge wrapper
+    from repro.kernels.ops import merge2
+
+    rng = np.random.default_rng(0)
+    a = jnp.sort(jnp.asarray(rng.normal(size=(13, 16)).astype(np.float32)), -1)
+    b = jnp.sort(jnp.asarray(rng.normal(size=(13, 16)).astype(np.float32)), -1)
+    out = merge2(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1))

@@ -1,0 +1,379 @@
+"""Fused single-launch pipeline tests (PR 4 tentpole).
+
+Bit-equality of the fused pallas paths against the unfused executor
+pipeline for the hard cases — NaN/±inf under ``nan_policy="last"``,
+pytree payloads (incl. trailing feature dims), descending inputs,
+non-power-of-two lengths, int dtypes — plus the acceptance check: a
+float32 ``repro.sort`` with a payload lowers to exactly one
+``pallas_call`` with no XLA-level encode/decode/gather around it, and the
+grid-resident chunked merge is a single launch that matches the legacy
+per-tile loop bit for bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+
+RNG = np.random.default_rng(20250731)
+
+
+def _vals_equal(a, b):
+    np.testing.assert_array_equal(
+        np.where(np.isnan(np.asarray(a)), np.float32(0), np.asarray(a))
+        if np.asarray(a).dtype.kind == "f" else np.asarray(a),
+        np.where(np.isnan(np.asarray(b)), np.float32(0), np.asarray(b))
+        if np.asarray(b).dtype.kind == "f" else np.asarray(b),
+    )
+    if np.asarray(a).dtype.kind == "f":
+        np.testing.assert_array_equal(np.isnan(np.asarray(a)),
+                                      np.isnan(np.asarray(b)))
+
+
+def _specials(shape):
+    """float32 rows salted with NaN / +inf / -inf / ±0 / extremes."""
+    x = RNG.normal(size=shape).astype(np.float32)
+    flat = x.reshape(-1)
+    picks = RNG.choice(flat.size, size=min(8, flat.size), replace=False)
+    specials = [np.nan, np.inf, -np.inf, 0.0, -0.0,
+                np.finfo(np.float32).max, np.finfo(np.float32).min, 1.0]
+    for i, p in enumerate(picks):
+        flat[p] = specials[i % len(specials)]
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# bit-equality: fused pallas vs unfused executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [32, 37, 128])
+@pytest.mark.parametrize("descending", [False, True])
+def test_fused_sort_specials_match_schedule(n, descending):
+    x = _specials((4, n))
+    f = repro.sort(x, descending=descending, backend="pallas")
+    s = repro.sort(x, descending=descending, backend="schedule")
+    _vals_equal(f, s)
+
+
+def test_fused_sort_pytree_payload_matches_schedule():
+    x = jnp.asarray(RNG.permutation(4 * 33).reshape(4, 33).astype(np.float32))
+    pay = {"idx": jnp.asarray(RNG.integers(0, 99, (4, 33)), jnp.int32),
+           "emb": jnp.asarray(RNG.normal(size=(4, 33, 5)).astype(np.float32))}
+    fv, fp = repro.sort(x, payload=pay, backend="pallas")
+    sv, sp = repro.sort(x, payload=pay, backend="schedule")
+    _vals_equal(fv, sv)
+    np.testing.assert_array_equal(np.asarray(fp["idx"]), np.asarray(sp["idx"]))
+    np.testing.assert_array_equal(np.asarray(fp["emb"]), np.asarray(sp["emb"]))
+
+
+def test_fused_sort_intmax_tie_payload_valid():
+    # a genuine INT32_MAX ties the in-kernel pad sentinel (non-pow2 pad):
+    # the position lane, not the value, must decide the live prefix
+    x = jnp.asarray([[2147483647, 5, 2147483647, 1, 7],
+                     [3, 1, 2, 2147483647, 2147483647]], jnp.int32)
+    pay = jnp.arange(10, dtype=jnp.int32).reshape(2, 5)
+    fv, fp = repro.sort(x, payload=pay, backend="pallas")
+    sv, sp = repro.sort(x, payload=pay, backend="schedule")
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(sv))
+    for r in range(2):  # tie order is unspecified; the index set is not
+        assert sorted(np.asarray(fp)[r]) == sorted(np.asarray(sp)[r])
+
+
+@pytest.mark.parametrize("descending", [False, True])
+def test_fused_merge_specials_match_schedule(descending):
+    a = jnp.sort(_specials((3, 16)), -1)
+    b = jnp.sort(_specials((3, 24)), -1)
+    if descending:
+        a, b = a[:, ::-1], b[:, ::-1]
+    f = repro.merge(a, b, descending=descending, backend="pallas")
+    s = repro.merge(a, b, descending=descending, backend="schedule")
+    _vals_equal(f, s)
+
+
+def test_fused_merge_k_payload_matches_schedule():
+    lens = (8, 12, 4)
+    # one global permutation split across lists: values stay unique, so
+    # the fused and executor permutations must agree exactly
+    pool = RNG.permutation(2 * sum(lens)).astype(np.float32).reshape(2, -1)
+    offs = np.cumsum((0,) + lens)
+    lists = [jnp.asarray(np.sort(pool[:, offs[i]:offs[i + 1]], -1))
+             for i in range(len(lens))]
+    pays = [jnp.asarray(RNG.integers(0, 99, l.shape), jnp.int32)
+            for l in lists]
+    fv, fp = repro.merge_k(lists, payload=pays, backend="pallas")
+    sv, sp = repro.merge_k(lists, payload=pays, backend="schedule")
+    _vals_equal(fv, sv)
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(sp))
+
+
+def test_fused_topk_specials_match_schedule():
+    x = _specials((4, 96))
+    fv, fi = repro.topk(x, 8, backend="pallas")
+    sv, si = repro.topk(x, 8, backend="schedule")
+    _vals_equal(fv, sv)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(si))
+
+
+def test_fused_sort_uint32_non_pow2():
+    # regression: the in-kernel pad fill must go through np_fill — a bare
+    # python uint32-max overflows JAX's weak-int32 promotion
+    x = jnp.asarray([[5, 4294967295, 1, 3, 2],
+                     [7, 0, 4294967295, 2, 9]], jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(repro.sort(x, backend="pallas")),
+        np.sort(np.asarray(x), -1))
+    pay = jnp.arange(10, dtype=jnp.int32).reshape(2, 5)
+    fv, fp = repro.sort(x, payload=pay, backend="pallas")
+    sv, sp = repro.sort(x, payload=pay, backend="schedule")
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(sv))
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(sp))
+
+
+def test_bitonic_merge_ragged_batch_pads():
+    # regression: the VMEM-fit (non-divisor) block_batch must pad through
+    # the bitonic wrapper too, not trip its grid assertion
+    from repro.kernels.ops import merge2
+
+    a = jnp.sort(jnp.asarray(RNG.normal(size=(13, 16)).astype(np.float32)), -1)
+    b = jnp.sort(jnp.asarray(RNG.normal(size=(13, 16)).astype(np.float32)), -1)
+    out = merge2(a, b, kind="bitonic")
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1))
+
+
+def test_fused_int_and_unsafe_paths():
+    xi = jnp.asarray(RNG.integers(-1000, 1000, (5, 19)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(repro.sort(xi, backend="pallas")),
+        np.sort(np.asarray(xi), -1))
+    xf = jnp.asarray(RNG.normal(size=(5, 24)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(repro.sort(xf, nan_policy="unsafe", backend="pallas")),
+        np.sort(np.asarray(xf), -1))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance check: one pallas_call, no XLA encode/decode/gather
+# ---------------------------------------------------------------------------
+
+
+def _collect_prims(jaxpr, names, into_kernels=False):
+    for eqn in jaxpr.eqns:
+        names.append(eqn.primitive.name)
+        if eqn.primitive.name == "pallas_call" and not into_kernels:
+            continue
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                _collect_prims(v.jaxpr, names, into_kernels)
+            elif isinstance(v, (list, tuple)):
+                for vi in v:
+                    if hasattr(vi, "jaxpr"):
+                        _collect_prims(vi.jaxpr, names, into_kernels)
+    return names
+
+
+def test_fused_sort_is_single_pallas_call_no_xla_passes():
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    pay = jnp.asarray(RNG.integers(0, 64, (4, 64)), jnp.int32)
+
+    jaxpr = jax.make_jaxpr(
+        lambda a, p: repro.sort(a, payload=p, nan_policy="last",
+                                backend="pallas"))(x, pay)
+    names = _collect_prims(jaxpr.jaxpr, [])
+    assert names.count("pallas_call") == 1, names
+    # the key transform, payload gather and value sort all live inside the
+    # kernel: none of their XLA realizations may appear around it
+    for banned in ("sort", "gather", "scatter",
+                   "bitcast_convert_type", "take_along_axis"):
+        assert names.count(banned) == 0, (banned, names)
+
+
+def test_unfused_pipeline_has_the_xla_passes():
+    # sanity for the test above: with fusion disabled the XLA-level passes
+    # reappear, so the assertion actually discriminates
+    from repro.api import fused as fused_mod
+
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    pay = jnp.asarray(RNG.integers(0, 64, (4, 64)), jnp.int32)
+    prev = fused_mod.set_fused_enabled(False)
+    try:
+        jaxpr = jax.make_jaxpr(
+            lambda a, p: repro.sort(a, payload=p, backend="pallas"))(x, pay)
+    finally:
+        fused_mod.set_fused_enabled(prev)
+    names = _collect_prims(jaxpr.jaxpr, [])
+    assert names.count("pallas_call") == 0  # executor fallback
+    assert "bitcast_convert_type" in names or "gather" in names
+
+
+def test_fused_merge_is_single_pallas_call():
+    a = jnp.sort(jnp.asarray(RNG.normal(size=(4, 32)).astype(np.float32)), -1)
+    b = jnp.sort(jnp.asarray(RNG.normal(size=(4, 32)).astype(np.float32)), -1)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: repro.merge(a, b, backend="pallas"))(a, b)
+    names = _collect_prims(jaxpr.jaxpr, [])
+    assert names.count("pallas_call") == 1, names
+
+
+def test_plan_routes_sort_to_fused_pallas_on_tpu():
+    from repro.api.dispatch import plan
+    from repro.api.spec import SortSpec
+
+    dec = plan(SortSpec(op="sort", lengths=(1024,), batch=8, device="tpu"))
+    assert (dec.backend, dec.detail) == ("pallas", "loms_sort_fused")
+    # payload rides the same fused launch
+    dec = plan(SortSpec(op="sort", lengths=(1024,), batch=8, device="tpu",
+                        has_payload=True))
+    assert dec.backend == "pallas"
+    # stable's tie pass is an XLA post-pass: executor
+    dec = plan(SortSpec(op="sort", lengths=(1024,), batch=8, device="tpu",
+                        stable=True))
+    assert dec.backend == "schedule"
+    # past the fused-sort VMEM gate: executor merge tree
+    dec = plan(SortSpec(op="sort", lengths=(1 << 17,), batch=1, device="tpu"))
+    assert dec.backend == "schedule"
+    # CPU hosts keep the executor under auto (interpret mode is opt-in)
+    dec = plan(SortSpec(op="sort", lengths=(1024,), batch=8, device="cpu"))
+    assert dec.backend == "schedule"
+
+
+# ---------------------------------------------------------------------------
+# gradients through the fused paths
+# ---------------------------------------------------------------------------
+
+
+def test_fused_sort_grad_matches_schedule():
+    x = jnp.asarray(RNG.normal(size=(3, 16)).astype(np.float32))
+    gf = jax.grad(lambda x: (repro.sort(x, backend="pallas") ** 2).sum())(x)
+    gs = jax.grad(lambda x: (repro.sort(x, backend="schedule") ** 2).sum())(x)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gs), rtol=1e-6)
+
+
+def test_fused_topk_grad_matches_schedule():
+    x = jnp.asarray(RNG.normal(size=(4, 96)).astype(np.float32))
+    gf = jax.grad(lambda x: repro.topk(x, 4, backend="pallas")[0].sum())(x)
+    gs = jax.grad(lambda x: repro.topk(x, 4, backend="schedule")[0].sum())(x)
+    np.testing.assert_array_equal(np.asarray(gf), np.asarray(gs))
+
+
+def test_fused_payload_grad_on_ties_matches_forward():
+    # regression: the payload gather is a concrete linear map, so its VJP
+    # must use the kernel's *actual* permutation — the column devices'
+    # tie order need not match a stable argsort's reconstruction
+    a = jnp.full((1, 8), 5.0, jnp.float32)
+    b = jnp.full((1, 8), 5.0, jnp.float32)
+    pa = jnp.arange(8, dtype=jnp.float32)[None]
+    pb = jnp.arange(8, 16, dtype=jnp.float32)[None]
+
+    def f(pa, pb):
+        _, (po_a,) = repro.merge(a, b, payload=((pa,), (pb,)),
+                                 backend="pallas")
+        return po_a
+
+    out, vjp = jax.vjp(f, pa, pb)
+    ct = jnp.zeros_like(out).at[0, 0].set(1.0)
+    g_pa, g_pb = vjp(ct)
+    src = int(out[0, 0])  # payload value == source slot in concat(pa, pb)
+    g_cat = np.concatenate([np.asarray(g_pa), np.asarray(g_pb)], -1)
+    assert g_cat[0, src] == 1.0 and np.abs(g_cat).sum() == 1.0
+
+    # same through the fused sort with every value tied (column devices
+    # engage at run >= 64)
+    x = jnp.full((1, 256), 1.0, jnp.float32)
+    p = jnp.arange(256, dtype=jnp.float32)[None]
+    out, vjp = jax.vjp(
+        lambda p: repro.sort(x, payload=p, backend="pallas")[1], p)
+    (g,) = vjp(jnp.zeros_like(out).at[0, 0].set(1.0))
+    src = int(out[0, 0])
+    assert float(g[0, src]) == 1.0 and float(np.abs(np.asarray(g)).sum()) == 1.0
+
+
+def test_disable_flag_reverts_auto_routing():
+    # regression: the escape hatch must stop auto routing to the fused
+    # pallas rows, not just the ops-layer short-circuit
+    from repro.api import fused as fused_mod
+    from repro.api.dispatch import plan
+    from repro.api.spec import SortSpec
+
+    prev = fused_mod.set_fused_enabled(False)
+    try:
+        assert plan(SortSpec(op="sort", lengths=(1024,), batch=8,
+                             device="tpu")).backend == "schedule"
+        assert plan(SortSpec(op="merge", lengths=(512, 512), device="tpu",
+                             has_payload=True)).backend == "schedule"
+    finally:
+        fused_mod.set_fused_enabled(prev)
+    assert plan(SortSpec(op="sort", lengths=(1024,), batch=8,
+                         device="tpu")).backend == "pallas"
+
+
+def test_fused_payload_leaf_grad_flows():
+    x = jnp.asarray(RNG.permutation(48).reshape(3, 16).astype(np.float32))
+    p = jnp.asarray(RNG.normal(size=(3, 16)).astype(np.float32))
+    g = jax.grad(
+        lambda p: repro.sort(x, payload=p, backend="pallas")[1].sum())(p)
+    np.testing.assert_array_equal(np.asarray(g), np.ones((3, 16), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# grid-resident chunked merge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("na,nb,tile", [(500, 300, 64), (130, 1000, 32)])
+def test_grid_merge_matches_loop_and_reference(na, nb, tile):
+    from repro.streaming.chunked import chunked_merge
+
+    a = jnp.sort(jnp.asarray(RNG.normal(size=(2, na)).astype(np.float32)), -1)
+    b = jnp.sort(jnp.asarray(RNG.normal(size=(2, nb)).astype(np.float32)), -1)
+    ref = jnp.sort(jnp.concatenate([a, b], -1), -1)
+    g = chunked_merge(a, b, tile=tile, mode="grid")
+    l = chunked_merge(a, b, tile=tile, mode="loop")
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(ref))
+
+
+def test_grid_merge_is_single_pallas_call():
+    from repro.streaming.chunked import chunked_merge
+
+    a = jnp.sort(jnp.asarray(RNG.normal(size=(1, 600)).astype(np.float32)), -1)
+    b = jnp.sort(jnp.asarray(RNG.normal(size=(1, 500)).astype(np.float32)), -1)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: chunked_merge(a, b, tile=128, mode="grid"))(a, b)
+    names = _collect_prims(jaxpr.jaxpr, [])
+    assert names.count("pallas_call") == 1, names
+
+
+def test_grid_merge_int_keys_dtype():
+    from repro.streaming.chunked import chunked_merge
+
+    a = jnp.sort(jnp.asarray(RNG.integers(-9, 9, (2, 77)), jnp.int32), -1)
+    b = jnp.sort(jnp.asarray(RNG.integers(-9, 9, (2, 99)), jnp.int32), -1)
+    np.testing.assert_array_equal(
+        np.asarray(chunked_merge(a, b, tile=16)),
+        np.sort(np.concatenate([np.asarray(a), np.asarray(b)], -1), -1))
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-unfused flag plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_disable_flag_restores_executor_results():
+    from repro.api import fused as fused_mod
+
+    x = _specials((3, 40))
+    pay = jnp.asarray(RNG.integers(0, 40, (3, 40)), jnp.int32)
+    fv, fp = repro.sort(x, payload=pay, backend="pallas")
+    prev = fused_mod.set_fused_enabled(False)
+    try:
+        uv, up = repro.sort(x, payload=pay, backend="pallas")
+    finally:
+        fused_mod.set_fused_enabled(prev)
+    _vals_equal(fv, uv)
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(up))
