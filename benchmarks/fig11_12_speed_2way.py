@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import depth, merge_schedule, apply_schedule
+from repro.api.schedules import merge_schedule
+from repro.core import depth, apply_schedule
 from .common import emit, sorted_batch, timeit
 
 SIZES = [2, 4, 8, 16, 32]  # per-list; output = 2x

@@ -5,7 +5,8 @@ comparators; S2MS the most (O(mn) cloud); LOMS sits between and is the one
 that still fits when S2MS does not (VMEM model)."""
 from __future__ import annotations
 
-from repro.core import comparator_count, merge_schedule
+from repro.api.schedules import merge_schedule
+from repro.core import comparator_count
 from repro.core.metrics import lut_proxy, vmem_bytes
 from .common import emit
 

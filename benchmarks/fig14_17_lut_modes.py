@@ -13,7 +13,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import depth, loms_2way, merge_schedule, apply_schedule
+from repro.api.schedules import merge_schedule
+from repro.core import depth, loms_2way, apply_schedule
 from repro.core.metrics import lut_proxy, vmem_bytes
 from repro.kernels.loms_merge import loms_merge2_pallas
 from .common import emit, sorted_batch, timeit

@@ -48,7 +48,7 @@ def main() -> None:
 
     from . import api_dispatch, dist_sort, fig11_12_speed_2way
     from . import fig13_resources_2way, fig14_17_lut_modes, fig18_20_3way
-    from . import fused_pipeline, moe_routing, streaming_merge
+    from . import fused_pipeline, moe_routing, segmented, streaming_merge
 
     modules = {
         "fig11_12": fig11_12_speed_2way,
@@ -60,17 +60,23 @@ def main() -> None:
         "api_dispatch": api_dispatch,
         "dist_sort": dist_sort,
         "fused": fused_pipeline,
+        "segmented": segmented,
     }
     print("name,us_per_call,derived")
-    bench_rows = None
+    # the BENCH_sort.json trajectory collects rows from every module that
+    # returns (rows, failures) — currently the fused pipeline and the
+    # segmented raggedness sweep
+    bench_rows = []
+    wrote_any = False
     for name, mod in modules.items():
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
         out = mod.run()
-        if name == "fused":
-            bench_rows = out[0]
-    if bench_rows is not None:
+        if name in ("fused", "segmented"):
+            bench_rows += out[0]
+            wrote_any = True
+    if wrote_any:
         path = write_bench_json(bench_rows)
         print(f"# wrote {path}", file=sys.stderr)
     if args.roofline:

@@ -25,6 +25,10 @@ from repro.api import (  # noqa: F401
     merge_k,
     plan,
     register_backend,
+    segment_argmax,
+    segment_merge,
+    segment_sort,
+    segment_topk,
     sort,
     topk,
 )
@@ -41,6 +45,10 @@ __all__ = [
     "merge_k",
     "plan",
     "register_backend",
+    "segment_argmax",
+    "segment_merge",
+    "segment_sort",
+    "segment_topk",
     "sort",
     "topk",
 ]

@@ -13,6 +13,10 @@ from .ops import (  # noqa: F401
     median_of_lists,
     merge,
     merge_k,
+    segment_argmax,
+    segment_merge,
+    segment_sort,
+    segment_topk,
     sort,
     topk,
 )

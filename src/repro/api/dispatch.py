@@ -106,8 +106,43 @@ def _dist_eligible(spec: SortSpec) -> bool:
             and spec.total >= _dist_min_total())
 
 
+def _segmented_on() -> bool:
+    """The segmented-subsystem escape hatch (repro.segmented): when off,
+    auto routing degrades to the per-segment XLA reference instead of the
+    bucketed kernel launches. Explicit ``backend="segmented"`` asks are
+    still honored (and still run the kernels)."""
+    from repro.segmented.core import segmented_enabled
+
+    return segmented_enabled()
+
+
+def _plan_segmented(spec: SortSpec) -> Decision:
+    """Routing for CSR ragged specs: the segmented backend owns them all
+    (no other backend understands per-segment semantics); the decision
+    detail picks the bucketed kernel path vs the XLA reference."""
+    if not _segmented_on():
+        return Decision(
+            "segmented", "reference",
+            "segmented kernels disabled (escape hatch): per-segment XLA "
+            "reference path",
+        )
+    if spec.device == "tpu":
+        return Decision(
+            "segmented", "bucketed_pallas",
+            f"{spec.n_segments} segments in pow2 size classes: one fused "
+            "launch per class, FLiMS grid-merge spill",
+        )
+    return Decision(
+        "segmented", "reference",
+        f"{spec.device or 'non-TPU'} host: per-segment XLA reference "
+        "(kernels available via backend='segmented')",
+    )
+
+
 def plan(spec: SortSpec, par=None) -> Decision:
     """Resolve the backend for one problem. Pure function of (spec, par)."""
+    if spec.segmented and spec.backend == BACKEND_AUTO:
+        return _plan_segmented(spec)
     if spec.backend != BACKEND_AUTO:
         be = get_backend(spec.backend)
         if not be.supports(spec):
@@ -246,6 +281,14 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
             SortSpec(op="sort", lengths=(1 << 20,), batch=8, device=dev,
                      sharded=True),
             SortSpec(op="median", lengths=(7, 7, 7), batch=8, device=dev),
+            # segmented (CSR ragged) rows: MoE variable-capacity dispatch
+            # and continuous-batching mixed-k vocab top-k
+            SortSpec(op="sort", lengths=(168,), batch=4, device=dev,
+                     segment_offsets=((0, 3, 40, 41, 168),)),
+            SortSpec(op="topk", lengths=(96,), k=8, batch=3, device=dev,
+                     segment_offsets=((0, 32, 64, 96),)),
+            SortSpec(op="merge", lengths=(12, 20), batch=2, device=dev,
+                     segment_offsets=((0, 5, 12), (0, 16, 20))),
         ]
     for spec in cases:
         dec = plan(spec)
@@ -254,6 +297,7 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
             "problem": spec.describe(),
             "sharded": spec.sharded,
             "payload": spec.has_payload,
+            "segments": spec.n_segments,
             "backend": dec.backend,
             "detail": dec.detail,
             "reason": dec.reason,

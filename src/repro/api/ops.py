@@ -39,7 +39,8 @@ from .payload import (
 from .registry import get_backend
 from .spec import SortSpec
 
-__all__ = ["merge", "merge_k", "sort", "topk", "median_of_lists"]
+__all__ = ["merge", "merge_k", "sort", "topk", "median_of_lists",
+           "segment_sort", "segment_merge", "segment_topk", "segment_argmax"]
 
 
 def _device() -> str:
@@ -472,6 +473,164 @@ def topk(
     if with_indices:
         return vals, idx
     return vals
+
+
+# ---------------------------------------------------------------------------
+# segmented (CSR ragged) ops
+# ---------------------------------------------------------------------------
+#
+# Flat ``(values, segment_offsets)`` problems with *static* CSR offsets:
+# segment ``s`` is ``values[offsets[s]:offsets[s+1]]`` and every op applies
+# per segment. The planner routes these to the segmented backend — trace-
+# time size-class bucketing, one fused Pallas launch per pow2 length class
+# (DESIGN.md §12) — or to the per-segment XLA reference off-TPU / under
+# the ``REPRO_DISABLE_SEGMENTED`` escape hatch.
+
+
+def _segmented_call(spec, par=None):
+    """plan() a segmented spec; returns the backend and the decision's
+    ``use_kernel`` flag (bucketed class launches vs XLA reference)."""
+    dec = plan(spec, par)
+    assert dec.backend == "segmented", dec
+    return get_backend(dec.backend), dec.detail != "reference"
+
+
+def segment_sort(
+    values: jnp.ndarray,
+    segment_offsets,
+    *,
+    descending: bool = False,
+    payload=None,
+    backend: str = "auto",
+    nan_policy: str = "last",
+):
+    """Sort each CSR segment of ``values`` (1-D, flat) independently.
+
+    ``segment_offsets`` are static ints (CSR row pointers, ``[0, ..., N]``)
+    — they size the per-class networks at trace time. ``payload`` is a
+    pytree whose leaves lead with the ``N`` axis and ride each segment's
+    sort permutation. Returns sorted values in the same CSR layout, or
+    ``(values, payload_tree)``. Empty and length-1 segments are exact
+    no-ops (they never reach a network)."""
+    from repro.segmented.bucketing import normalize_offsets
+
+    offs = normalize_offsets(segment_offsets)
+    values = jnp.asarray(values)
+    spec = SortSpec(
+        op="sort", lengths=(offs[-1],), batch=max(len(offs) - 1, 1),
+        dtype=jnp.dtype(values.dtype).name, descending=descending,
+        has_payload=payload is not None, backend=backend, device=_device(),
+        nan_policy=nan_policy, segment_offsets=(offs,),
+    )
+    be, use_kernel = _segmented_call(spec)
+    out, _, ptree = be.run["sort"](
+        values, spec=spec, descending=descending, payload=payload,
+        nan_policy=nan_policy, use_kernel=use_kernel)
+    return out if payload is None else (out, ptree)
+
+
+def segment_merge(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    offsets_a,
+    offsets_b,
+    *,
+    descending: bool = False,
+    payload=None,
+    backend: str = "auto",
+    nan_policy: str = "last",
+):
+    """Merge per-segment sorted runs: output segment ``s`` is the sorted
+    union of ``a``'s and ``b``'s segment ``s`` (both CSR, same segment
+    count, any mixture of lengths — the paper's mixed-list-size claim).
+
+    ``payload`` is a pair ``(tree_a, tree_b)`` riding the permutation.
+    Returns ``(values, out_offsets)`` or ``(values, payload_tree,
+    out_offsets)`` with ``out_offsets[s] = offsets_a[s] + offsets_b[s]``.
+    """
+    from repro.segmented.bucketing import normalize_offsets
+
+    offs_a = normalize_offsets(offsets_a)
+    offs_b = normalize_offsets(offsets_b)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    spec = SortSpec(
+        op="merge", lengths=(offs_a[-1], offs_b[-1]),
+        batch=max(len(offs_a) - 1, 1), dtype=jnp.dtype(a.dtype).name,
+        descending=descending, has_payload=payload is not None,
+        backend=backend, device=_device(), nan_policy=nan_policy,
+        segment_offsets=(offs_a, offs_b),
+    )
+    be, use_kernel = _segmented_call(spec)
+    out, _, ptree, out_offs = be.run["merge"](
+        a, b, spec=spec, descending=descending, payload=payload,
+        nan_policy=nan_policy, use_kernel=use_kernel)
+    if payload is None:
+        return out, out_offs
+    return out, ptree, out_offs
+
+
+def segment_topk(
+    values: jnp.ndarray,
+    segment_offsets,
+    k,
+    *,
+    descending: bool = True,
+    payload=None,
+    backend: str = "auto",
+    nan_policy: str = "last",
+):
+    """Per-segment top-k: the ``min(k_s, len_s)`` largest entries of each
+    segment, descending (``descending=False``: smallest, ascending).
+
+    ``k`` is one static int or one per segment — a continuous batch of
+    mixed-k requests stays one launch per size class, each segment keeping
+    its own prefix. Returns ``(values, idx, out_offsets)`` (or with a
+    ``payload_tree`` before the offsets): CSR layout, ``idx`` =
+    within-segment input positions, int32."""
+    from repro.segmented.bucketing import normalize_offsets
+    from repro.segmented.core import _normalize_ks
+
+    offs = normalize_offsets(segment_offsets)
+    values = jnp.asarray(values)
+    ks = _normalize_ks(k, len(offs) - 1)
+    spec = SortSpec(
+        op="topk", lengths=(offs[-1],), batch=max(len(offs) - 1, 1),
+        dtype=jnp.dtype(values.dtype).name, k=max(ks) if ks else 1,
+        descending=descending, has_payload=payload is not None,
+        backend=backend, device=_device(), nan_policy=nan_policy,
+        segment_offsets=(offs,),
+    )
+    be, use_kernel = _segmented_call(spec)
+    out, idx, ptree, out_offs = be.run["topk"](
+        values, ks, spec=spec, descending=descending, payload=payload,
+        nan_policy=nan_policy, use_kernel=use_kernel)
+    if payload is None:
+        return out, idx, out_offs
+    return out, idx, ptree, out_offs
+
+
+def segment_argmax(
+    values: jnp.ndarray,
+    segment_offsets,
+    *,
+    backend: str = "auto",
+    nan_policy: str = "last",
+):
+    """Per-segment argmax -> ``(vals (S,), idx (S,))``; empty segments
+    yield the dtype minimum and index ``-1``."""
+    from repro.segmented.bucketing import normalize_offsets
+
+    offs = normalize_offsets(segment_offsets)
+    values = jnp.asarray(values)
+    spec = SortSpec(
+        op="topk", lengths=(offs[-1],), batch=max(len(offs) - 1, 1),
+        dtype=jnp.dtype(values.dtype).name, k=1, backend=backend,
+        device=_device(), nan_policy=nan_policy, segment_offsets=(offs,),
+    )
+    be, use_kernel = _segmented_call(spec)
+    return be.run["argmax"](values, spec=spec, nan_policy=nan_policy,
+                            use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------

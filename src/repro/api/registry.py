@@ -122,7 +122,7 @@ register_backend(Backend(
     name="schedule",
     run={"merge": _sched_merge, "merge_k": _sched_merge_k, "sort": _sched_sort,
          "topk": _sched_topk, "median": _sched_median},
-    supports=lambda spec: True,
+    supports=lambda spec: spec.segment_offsets is None,
     description="pure-JAX schedule executor (any shape/op, payload-capable, "
                 "GSPMD/shard_map-safe)",
 ))
@@ -182,7 +182,7 @@ def _pallas_fused(spec: SortSpec) -> bool:
 
 
 def _pallas_supports(spec: SortSpec) -> bool:
-    if spec.network not in ("loms",):
+    if spec.network not in ("loms",) or spec.segment_offsets is not None:
         return False
     if spec.op == "topk":
         return True  # indices are native; payload/stable ride them
@@ -230,7 +230,9 @@ def _streaming_merge_k(lists, *, spec, pos=None, par=None):
 register_backend(Backend(
     name="streaming",
     run={"merge": _streaming_merge, "merge_k": _streaming_merge_k},
-    supports=lambda spec: spec.op in ("merge", "merge_k") and not spec.needs_perm,
+    supports=lambda spec: (spec.op in ("merge", "merge_k")
+                           and not spec.needs_perm
+                           and spec.segment_offsets is None),
     description="chunked carry-buffer / merge-path pipelines; fixed working "
                 "set for unbounded inputs",
 ))
@@ -274,6 +276,8 @@ def _sharded_merge(a, b, *, spec, pos=None, par=None):
 
 
 def _sharded_supports(spec: SortSpec) -> bool:
+    if spec.segment_offsets is not None:
+        return False
     if spec.op == "topk":
         return spec.sharded
     # sample-sort realizes the LOMS family only; spec.sharded already
@@ -291,6 +295,60 @@ register_backend(Backend(
                 "local LOMS sort, regular-sampling splitters, all_to_all, "
                 "per-device merge) and log-depth tree top-k over the TP "
                 "axis; data never gathers to one device",
+))
+
+
+# ---------------------------------------------------------------------------
+# segmented — CSR ragged ops over size-class buckets
+# ---------------------------------------------------------------------------
+#
+# Calling convention differs from the dense backends: adapters speak flat
+# CSR ``(values, segment_offsets)`` problems — the CSR structure rides on
+# ``spec.segment_offsets`` — and take the routing's ``use_kernel`` flag
+# (bucketed class launches vs the per-segment XLA reference). The
+# ``repro.segment_*`` entry points (ops.py) dispatch through these ``run``
+# adapters like every dense op does through its backend's.
+
+
+def _segmented_sort(values, *, spec, **kw):
+    from repro.segmented.core import segment_sort_impl
+
+    return segment_sort_impl(values, spec.segment_offsets[0], **kw)
+
+
+def _segmented_merge(a, b, *, spec, **kw):
+    from repro.segmented.core import segment_merge_impl
+
+    offs = spec.segment_offsets
+    return segment_merge_impl(a, b, offs[0], offs[1], **kw)
+
+
+def _segmented_topk(values, k, *, spec, **kw):
+    from repro.segmented.core import segment_topk_impl
+
+    return segment_topk_impl(values, spec.segment_offsets[0], k, **kw)
+
+
+def _segmented_argmax(values, *, spec, **kw):
+    from repro.segmented.core import segment_argmax_impl
+
+    return segment_argmax_impl(values, spec.segment_offsets[0], **kw)
+
+
+def _segmented_supports(spec: SortSpec) -> bool:
+    return (spec.segment_offsets is not None and not spec.stable
+            and spec.op in ("sort", "merge", "topk"))
+
+
+register_backend(Backend(
+    name="segmented",
+    run={"sort": _segmented_sort, "merge": _segmented_merge,
+         "topk": _segmented_topk, "argmax": _segmented_argmax},
+    supports=_segmented_supports,
+    description="CSR ragged segment sort/merge/top-k: trace-time size-class "
+                "bucketing, one fused Pallas launch per pow2 class, FLiMS "
+                "grid-merge spill for over-tile segments, per-segment XLA "
+                "reference fallback",
 ))
 
 
@@ -331,7 +389,7 @@ register_backend(Backend(
     name="lax",
     run={"merge": _lax_merge, "merge_k": _lax_merge_k, "sort": _lax_sort,
          "topk": _lax_topk, "median": _lax_median},
-    supports=lambda spec: True,
+    supports=lambda spec: spec.segment_offsets is None,
     description="XLA sort/top_k reference (not oblivious; benchmarking and "
                 "cross-checking only)",
 ))

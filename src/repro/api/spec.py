@@ -34,6 +34,13 @@ class SortSpec:
     backend: str = BACKEND_AUTO  # caller hint: auto|schedule|pallas|...
     device: str = "cpu"  # jax.default_backend() at call time
     sharded: bool = False  # a Parallelism with a usable TP axis was passed
+    #: static CSR segment offsets, one tuple per input list (``None`` =
+    #: dense rectangular problem). When set, the op applies *per segment*
+    #: — ``sort`` sorts each segment independently, ``merge`` merges
+    #: per-segment run pairs, ``topk`` truncates per segment — and the
+    #: planner routes to the segmented backend's size-class buckets.
+    #: Offsets are trace-time constants: they size networks and launches.
+    segment_offsets: Optional[Tuple[Tuple[int, ...], ...]] = None
     #: NaN ordering for float inputs. ``"last"`` (default): NaNs sort
     #: last, like ``jnp.sort`` — implemented by the total-order key
     #: pre-pass (repro.api.keys), which also makes genuine ±inf safe on
@@ -47,6 +54,12 @@ class SortSpec:
         assert self.op in OPS, f"unknown op {self.op!r}"
         assert self.lengths, "at least one input list required"
         assert self.nan_policy in ("last", "unsafe"), self.nan_policy
+        if self.segment_offsets is not None:
+            assert len(self.segment_offsets) == len(self.lengths), (
+                "one offsets tuple per input list",
+                self.segment_offsets, self.lengths)
+            for offs, ln in zip(self.segment_offsets, self.lengths):
+                assert offs and offs[0] == 0 and offs[-1] == ln, (offs, ln)
 
     @property
     def total(self) -> int:
@@ -69,7 +82,18 @@ class SortSpec:
         (no common column count >= 2 divides both lists)."""
         return self.op == "merge" and any(ln % 2 for ln in self.lengths)
 
+    @property
+    def segmented(self) -> bool:
+        """True when the problem is CSR ragged (per-segment semantics)."""
+        return self.segment_offsets is not None
+
+    @property
+    def n_segments(self) -> int:
+        return 0 if not self.segmented else len(self.segment_offsets[0]) - 1
+
     def describe(self) -> str:
         shape = "x".join(str(ln) for ln in self.lengths)
         extra = f" k={self.k}" if self.k is not None else ""
-        return f"{self.op}[{shape}]{extra} b={self.batch} {self.dtype} ({self.device})"
+        seg = f" S={self.n_segments}" if self.segmented else ""
+        return (f"{self.op}[{shape}]{extra}{seg} b={self.batch} "
+                f"{self.dtype} ({self.device})")

@@ -30,6 +30,13 @@ class MoEConfig:
     router_block: int = 32  # LOMS router top-k block size
     capacity_factor: float = 1.25
     dispatch: str = "scatter"  # scatter | sorted | einsum
+    #: static per-expert capacities (len == n_experts). None = uniform
+    #: capacity from capacity_factor. Ragged capacities switch the
+    #: dispatch buffer to a CSR layout — experts get exactly their slots
+    #: instead of padding every buffer to the max — and the expert FFN
+    #: runs one batched einsum per capacity class (repro.segmented's
+    #: size-class idea applied to expert compute). Non-EP paths only.
+    expert_capacities: Optional[Tuple[int, ...]] = None
     moe_every: int = 1  # apply MoE FFN every Nth layer (1 = all)
     first_dense_layers: int = 1  # deepseek: first layer(s) dense
 

@@ -1,17 +1,10 @@
-"""repro.core — List Offset Merge Sorters as oblivious JAX sort networks."""
-from .api import (  # noqa: F401
-    chunked_merge,
-    chunked_merge_k,
-    median9,
-    median_of_lists,
-    merge,
-    merge_k,
-    merge_schedule,
-    plan_merge,
-    sort,
-    topk,
-    tree_topk,
-)
+"""repro.core — List Offset Merge Sorters as oblivious JAX sort networks.
+
+The sorting *API* that once lived here moved to the unified ``repro.*``
+namespace (PR 2); the former ``repro.core.api`` shims are gone and its
+module now only raises pointed ImportErrors. This package keeps the
+network/schedule machinery the backends are built from.
+"""
 from .loms import loms_2way, loms_kway, loms_median, table1_stages  # noqa: F401
 from .networks import (  # noqa: F401
     Group,

@@ -1,90 +1,45 @@
-"""DEPRECATED — use the unified :mod:`repro.api` namespace.
+"""REMOVED — this module's shims lasted the promised one release.
 
-This module was the original public sorting API. The implementations moved
-to :mod:`repro.api.schedules` (the "schedule" backend of the dispatch
-layer) and the public surface is now ``repro.merge / merge_k / sort /
-topk / median_of_lists`` with planner-driven backend selection, any-axis
-support, and pytree payloads. Every function here forwards to its
-replacement and emits a :class:`DeprecationWarning`; the shims last one
-release and then this module goes away.
+The original ``repro.core.api`` sorting entry points moved to the unified
+``repro.*`` namespace two releases ago (the implementations live in
+:mod:`repro.api.schedules` as the "schedule" backend). The deprecation
+shims that forwarded from here are now gone; any remaining import gets a
+precise error instead of a silent behavior drift.
+
+Migration map:
+
+  repro.core.api.merge / merge_k / sort / topk / median_of_lists
+      -> repro.merge / merge_k / sort / topk / median_of_lists
+  repro.core.api.merge_schedule / median9
+      -> repro.api.schedules.merge_schedule / median9
+  repro.core.api.chunked_merge / chunked_merge_k
+      -> repro.streaming.chunked_merge / chunked_merge_k
+         (or repro.merge / merge_k, auto-routed)
+  repro.core.api.tree_topk -> repro.streaming.tree_topk
+         (or repro.topk with par=)
+  repro.core.api.plan_merge -> repro.streaming.plan_merge2
 """
 from __future__ import annotations
 
-import warnings
+_MOVED = {
+    "merge": "repro.merge",
+    "merge_k": "repro.merge_k",
+    "sort": "repro.sort",
+    "topk": "repro.topk",
+    "median_of_lists": "repro.median_of_lists",
+    "merge_schedule": "repro.api.schedules.merge_schedule",
+    "median9": "repro.api.schedules.median9",
+    "chunked_merge": "repro.streaming.chunked_merge",
+    "chunked_merge_k": "repro.streaming.chunked_merge_k",
+    "tree_topk": "repro.streaming.tree_topk",
+    "plan_merge": "repro.streaming.plan_merge2",
+}
 
 
-def _deprecated(replacement: str):
-    def deco(fn):
-        def wrapper(*args, **kwargs):
-            warnings.warn(
-                f"repro.core.api.{fn.__name__} is deprecated; "
-                f"use {replacement} instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            return fn(*args, **kwargs)
-
-        wrapper.__name__ = fn.__name__
-        wrapper.__qualname__ = fn.__name__
-        wrapper.__doc__ = (
-            f"Deprecated: use ``{replacement}``.\n\n{fn.__doc__ or ''}"
+def __getattr__(name: str):
+    if name in _MOVED:
+        raise ImportError(
+            f"repro.core.api.{name} was removed (its one-release "
+            f"deprecation shim expired); use {_MOVED[name]} instead"
         )
-        return wrapper
-
-    return deco
-
-
-def _shim(name: str, replacement: str):
-    """Late-bound forward into repro.api.schedules — the implementation
-    module imports repro.core, so binding must wait until first call."""
-
-    def fn(*args, **kwargs):
-        from repro.api import schedules as _impl
-
-        return getattr(_impl, name)(*args, **kwargs)
-
-    fn.__name__ = name
-    fn.__doc__ = f"Forwarded to repro.api.schedules.{name}."
-    return _deprecated(replacement)(fn)
-
-
-merge_schedule = _shim("merge_schedule", "repro.api.schedules.merge_schedule")
-merge = _shim("merge", "repro.merge")
-merge_k = _shim("merge_k", "repro.merge_k")
-sort = _shim("sort", "repro.sort")
-topk = _shim("topk", "repro.topk")
-median_of_lists = _shim("median_of_lists", "repro.median_of_lists")
-median9 = _shim("median9", "repro.api.schedules.median9")
-
-
-# ---------------------------------------------------------------------------
-# streaming subsystem mirrors (use repro.streaming / repro.merge directly)
-# ---------------------------------------------------------------------------
-
-
-@_deprecated("repro.streaming.chunked_merge (or repro.merge, auto-routed)")
-def chunked_merge(a, b, **kw):
-    from repro.streaming import chunked_merge as _cm
-
-    return _cm(a, b, **kw)
-
-
-@_deprecated("repro.streaming.chunked_merge_k (or repro.merge_k, auto-routed)")
-def chunked_merge_k(lists, **kw):
-    from repro.streaming import chunked_merge_k as _cmk
-
-    return _cmk(lists, **kw)
-
-
-@_deprecated("repro.streaming.tree_topk (or repro.topk with par=)")
-def tree_topk(x, k, **kw):
-    from repro.streaming import tree_topk as _tt
-
-    return _tt(x, k, **kw)
-
-
-@_deprecated("repro.streaming.plan_merge2")
-def plan_merge(m, n, **kw):
-    from repro.streaming import plan_merge2 as _pm
-
-    return _pm(m, n, **kw)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

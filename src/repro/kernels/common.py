@@ -70,6 +70,18 @@ def decode_key_values(k: jnp.ndarray, dtype) -> jnp.ndarray:
     return jax.lax.bitcast_convert_type(y, d)
 
 
+def ceil_pow2(n: int) -> int:
+    """Smallest power of two >= ``n``, with the degenerate guard ``n <= 1
+    -> 1``: a 0- or 1-element list needs no comparison network, and the
+    naive ``1 << (n - 1).bit_length()`` would emit a phantom 2-wide device
+    for ``n == 0`` (``(-1).bit_length() == 1``). Every trace-time pad-to-
+    pow2 decision (the fused sort tree, the segmented size-class bucketer)
+    must come through here so empty/singleton inputs can never size a
+    0-width or oversized network."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """``interpret=None`` -> auto: compile natively on TPU, run the kernel
     body as jnp (interpret mode) on every other platform. A trace-time
@@ -136,6 +148,13 @@ def pad_tail_sorted(x: jnp.ndarray, length: int, descending: bool = False) -> jn
     assert pad >= 0, (x.shape, length)
     if pad == 0:
         return x
+    if x.shape[-1] == 0:
+        # zero-width row (an empty segment): the "pad" is a pure fill —
+        # jnp.pad handles it, but go through jnp.full so the sentinel dtype
+        # cast is explicit and a (…, 0) int row cannot weak-promote
+        fill = np_fill(sentinel_min(x.dtype) if descending else sentinel_max(x.dtype),
+                       x.dtype)
+        return jnp.full(x.shape[:-1] + (length,), fill, dtype=x.dtype)
     fill = np_fill(sentinel_min(x.dtype) if descending else sentinel_max(x.dtype),
                    x.dtype)
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
@@ -152,6 +171,11 @@ def stable_compact(valid: jnp.ndarray, *arrays: jnp.ndarray):
     real element's index or payload. On already value-sorted input whose
     invalid slots all hold the +sentinel, compaction keeps the valid
     prefix sorted (everything it moves past is a tied maximum)."""
+    if valid.shape[-1] <= 1:
+        # width-0/1 rows are compact by construction; the cumsum/put dance
+        # below would still work for width 1 but traces three ops for a
+        # no-op, and width 0 has nothing to permute at all
+        return arrays if len(arrays) > 1 else arrays[0]
     v = valid.astype(jnp.int32)
     n_valid = v.sum(axis=-1, keepdims=True)
     dest = jnp.where(
@@ -296,6 +320,36 @@ def merge2_cols(
                                  use_mxu=use_mxu)
         return arr.reshape(shape), parr.reshape(shape)
     return sort_nsorter(arr, use_mxu=use_mxu).reshape(shape)
+
+
+def loms_tree_sort(keys: jnp.ndarray, pos: Optional[jnp.ndarray], w: int,
+                   use_mxu: bool):
+    """Trace-time-unrolled LOMS merge tree over pow2-width ``(bt, w)``
+    rows, optionally threading an int32 position lane through every
+    permute. The one home for the tree loop — the fused dense sort
+    (kernels/sort.py) and the segmented class sort share it, so the
+    column-device cutover (``run >= 64``, where the S2MS cloud is wide
+    enough to pay for the stage-2 stack) and any tie-order behavior can
+    never diverge between them. Returns ``(keys, pos)``."""
+    bt = keys.shape[0]
+    run = 1
+    while run < w:
+        g = w // (2 * run)
+        cols = pick_merge_cols(run, run) if run >= 64 else 1
+        kv = keys.reshape(bt, g, 2 * run)
+        if pos is not None:
+            pv = pos.reshape(bt, g, 2 * run)
+            kv, pv = merge2_cols(
+                kv[..., :run], kv[..., run:], n_cols=cols,
+                payload=(pv[..., :run], pv[..., run:]), use_mxu=use_mxu,
+            )
+            pos = pv.reshape(bt, w)
+        else:
+            kv = merge2_cols(kv[..., :run], kv[..., run:], n_cols=cols,
+                             use_mxu=use_mxu)
+        keys = kv.reshape(bt, w)
+        run *= 2
+    return keys, pos
 
 
 def payload_block_spec(p: jnp.ndarray, block_batch: int) -> pl.BlockSpec:

@@ -33,14 +33,14 @@ from jax.experimental import pallas as pl
 
 from .common import (
     _iota,
+    ceil_pow2,
     decode_key_values,
     encode_key_values,
     gather_lanes,
-    merge2_cols,
+    loms_tree_sort,
     np_fill,
     pad_batch,
     payload_block_spec,
-    pick_merge_cols,
     resolve_interpret,
     sentinel_max,
     stable_compact,
@@ -67,33 +67,16 @@ def _sort_kernel(
     bt = x.shape[0]
     if key_dtype is not None:  # fused nan_policy="last" encode on load
         x = encode_key_values(x)
-    npad = 1 << (n - 1).bit_length() if n > 1 else 1
+    npad = ceil_pow2(n)
     if npad != n:
         # np_fill: a bare python uint32-max overflows weak-int32 promotion
         fill = np_fill(sentinel_max(x.dtype), x.dtype)
         x = jnp.pad(x, [(0, 0), (0, npad - n)], constant_values=fill)
     need_pos = n_payload > 0 or want_perm
     pos = _iota((bt, npad), 1) if need_pos else None
-    run = 1
-    while run < npad:  # trace-time-unrolled LOMS merge tree
-        g = npad // (2 * run)
-        # column devices only once the S2MS cloud is wide enough to matter;
-        # for short runs the extra stage-2 stack/permute costs more than
-        # the comparator saving
-        cols = pick_merge_cols(run, run) if run >= 64 else 1
-        xv = x.reshape(bt, g, 2 * run)
-        if need_pos:
-            pv = pos.reshape(bt, g, 2 * run)
-            xv, pv = merge2_cols(
-                xv[..., :run], xv[..., run:], n_cols=cols,
-                payload=(pv[..., :run], pv[..., run:]), use_mxu=use_mxu,
-            )
-            pos = pv.reshape(bt, npad)
-        else:
-            xv = merge2_cols(xv[..., :run], xv[..., run:], n_cols=cols,
-                             use_mxu=use_mxu)
-        x = xv.reshape(bt, npad)
-        run *= 2
+    # the unrolled LOMS merge tree lives in common.loms_tree_sort (shared
+    # with the segmented class kernels, column-device cutover included)
+    x, pos = loms_tree_sort(x, pos, npad, use_mxu)
     if need_pos and npad != n:
         # the column devices make no cross-run tie-order promise, so a tail
         # pad that ties a genuine dtype-max value may land inside the live

@@ -89,15 +89,37 @@ def _positions_sorted(flat_e: jnp.ndarray, n_experts: int, par=None):
     to the cumsum path; position-in-expert = rank - start_of_expert.
     Data-oblivious end to end (the paper's security/safety use case).
 
-    With a TP-sharded ``par`` (the non-EP path, where this runs outside
-    any shard_map) the planner may route the key sort to the distributed
-    sample-sort — large token counts then sort device-parallel instead of
-    serially on one chip."""
+    On TPU without a sharding offer, the key sort routes through the
+    segmented backend's kernel path (``repro.segment_sort`` with
+    ``backend="segmented"``) whenever the problem fits one size class:
+    the bucketed class network is exactly as oblivious as the schedule
+    executor (a fixed trace-time comparison network, no data-dependent
+    control flow), so the security/safety property is preserved while the
+    sort gains the fused single-launch kernel. Two guards keep the old
+    executor path: problems past the class budget (the segmented spill
+    path's argsort is *not* oblivious and must never be picked here) and
+    non-TPU hosts (interpret-mode kernel emulation would only slow the
+    already-oblivious executor down). ``REPRO_DISABLE_SEGMENTED``
+    restores the executor path outright. With a TP-sharded ``par`` (the
+    non-EP path, where this runs outside any shard_map) the planner may
+    instead route to the distributed sample-sort — large token counts
+    then sort device-parallel."""
     n = flat_e.shape[0]
     keys = flat_e.astype(jnp.int32) * n + jnp.arange(n, dtype=jnp.int32)
-    sorted_keys, perm = unified_sort(
-        keys, payload=jnp.arange(n, dtype=jnp.int32),
-        backend="schedule" if par is None else "auto", par=par)
+    from repro.segmented import max_class_width, segmented_enabled
+
+    if (par is None and segmented_enabled()
+            and jax.default_backend() == "tpu"
+            and n <= max_class_width(jnp.int32)):
+        from repro.api import segment_sort
+
+        sorted_keys, perm = segment_sort(
+            keys, (0, n), payload=jnp.arange(n, dtype=jnp.int32),
+            backend="segmented")
+    else:
+        sorted_keys, perm = unified_sort(
+            keys, payload=jnp.arange(n, dtype=jnp.int32),
+            backend="schedule" if par is None else "auto", par=par)
     sorted_e = sorted_keys // n
     counts = (flat_e[:, None] == jnp.arange(n_experts)[None, :]).sum(0)
     starts = jnp.cumsum(counts) - counts
@@ -113,6 +135,32 @@ def _expert_ffn(buf, p, act: str = "swiglu"):
     g = jnp.einsum("ecd,edf->ecf", buf, p["wg"]["w"].astype(buf.dtype))
     h = jax.nn.silu(h) * g
     return jnp.einsum("ecf,efd->ecd", h, p["wo"]["w"].astype(buf.dtype))
+
+
+def _expert_ffn_csr(buf, p, caps: np.ndarray, starts: np.ndarray):
+    """Expert FFN over a CSR buffer with static ragged capacities.
+
+    ``buf``: (sum(caps), D) — expert ``i`` owns rows
+    ``starts[i]:starts[i]+caps[i]``. The size-class idea of
+    repro.segmented applied to expert *compute*: experts with equal
+    capacity share one batched einsum, so a few large-capacity experts no
+    longer force every buffer (and every FLOP) up to the max. Uniform
+    capacities collapse to a single class = the dense path's one einsum."""
+    d = buf.shape[-1]
+    out = jnp.zeros_like(buf)
+    classes = {}
+    for i, c in enumerate(np.asarray(caps).tolist()):
+        classes.setdefault(int(c), []).append(i)
+    for c, ids in sorted(classes.items()):
+        if c == 0:
+            continue
+        gmap = np.asarray(starts)[ids][:, None] + np.arange(c)[None, :]
+        sub = buf[jnp.asarray(gmap)]  # (n_ids, c, D)
+        pc = {nm: {"w": p[nm]["w"][jnp.asarray(ids)]}
+              for nm in ("wi", "wg", "wo")}
+        res = _expert_ffn(sub, pc)
+        out = out.at[jnp.asarray(gmap.reshape(-1))].set(res.reshape(-1, d))
+    return out
 
 
 def moe_ffn_local(
@@ -165,23 +213,45 @@ def moe_ffn_local(
         pos = _positions_sorted(flat_e, e, par=par)
     else:
         pos = _positions_cumsum(flat_e, e)
-    keep = pos < cap
-    dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow -> spill row
-    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(x[tok_of])
-    buf = buf[:-1].reshape(e, cap, d)
 
-    if axis_name is not None and ep_size > 1 and not ep_psum:
-        # (E, C, D) -> (E/P, P*C, D): buckets travel to expert owners
-        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=1,
-                                 tiled=True)
-        out = _expert_ffn(buf, p)
-        out = jax.lax.all_to_all(out, axis_name, split_axis=1, concat_axis=0,
-                                 tiled=True)
+    if mo.expert_capacities is not None:
+        # CSR ragged dispatch: expert i owns exactly caps[i] slots instead
+        # of every buffer padding to a uniform capacity; the FFN runs one
+        # einsum per capacity class (_expert_ffn_csr). Static shapes
+        # throughout — the raggedness lives in the trace-time offsets.
+        assert axis_name is None or ep_size == 1, (
+            "expert_capacities is a non-EP feature: EP buckets must "
+            "travel as dense (E, C, D) through all_to_all")
+        caps_np = np.asarray(mo.expert_capacities, np.int64)
+        assert caps_np.shape == (e,), (caps_np.shape, e)
+        starts_np = np.concatenate([[0], np.cumsum(caps_np)])
+        total = int(starts_np[-1])
+        caps_j = jnp.asarray(caps_np, jnp.int32)
+        starts_j = jnp.asarray(starts_np[:-1], jnp.int32)
+        keep = pos < caps_j[flat_e]
+        dest = jnp.where(keep, starts_j[flat_e] + pos, total)  # spill row
+        buf_flat = jnp.zeros((total + 1, d), x.dtype).at[dest].add(x[tok_of])
+        flat_out = _expert_ffn_csr(buf_flat[:-1], p, caps_np, starts_np)
+        flat_out = jnp.concatenate([flat_out, jnp.zeros((1, d), x.dtype)])
+        y_choice = flat_out[dest]  # spill row reads the zero pad
     else:
-        out = _expert_ffn(buf, p)
+        keep = pos < cap
+        dest = jnp.where(keep, flat_e * cap + pos, e * cap)  # spill row
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(x[tok_of])
+        buf = buf[:-1].reshape(e, cap, d)
 
-    flat_out = out.reshape(e * cap, d)
-    y_choice = flat_out[jnp.minimum(dest, e * cap - 1)]
+        if axis_name is not None and ep_size > 1 and not ep_psum:
+            # (E, C, D) -> (E/P, P*C, D): buckets travel to expert owners
+            buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                     concat_axis=1, tiled=True)
+            out = _expert_ffn(buf, p)
+            out = jax.lax.all_to_all(out, axis_name, split_axis=1,
+                                     concat_axis=0, tiled=True)
+        else:
+            out = _expert_ffn(buf, p)
+
+        flat_out = out.reshape(e * cap, d)
+        y_choice = flat_out[jnp.minimum(dest, e * cap - 1)]
     w = (gates.reshape(-1) * keep).astype(x.dtype)
     y = (y_choice * w[:, None]).reshape(t, k, d).sum(axis=1)
 

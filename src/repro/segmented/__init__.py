@@ -1,0 +1,28 @@
+"""repro.segmented — CSR ragged sort/merge/top-k over size-class buckets.
+
+The paper's "any mixture of input list sizes" property as a first-class
+workload (DESIGN.md §12): segments with static CSR offsets bucket into
+pow2 length classes at trace time, each class runs one fused Pallas
+launch, and over-tile segments spill to the FLiMS grid merge. Public
+entry points live on the unified namespace —
+``repro.segment_sort / segment_merge / segment_topk / segment_argmax`` —
+and dispatch through the planner like every other op; this package holds
+the machinery.
+"""
+from .bucketing import (  # noqa: F401
+    SizeClass,
+    bucket_merge_pairs,
+    bucket_segments,
+    normalize_offsets,
+    segment_lengths,
+)
+from .core import (  # noqa: F401
+    MAX_CLASS_WIDTH,
+    max_class_width,
+    segment_argmax_impl,
+    segment_merge_impl,
+    segment_sort_impl,
+    segment_topk_impl,
+    segmented_enabled,
+    set_segmented_enabled,
+)

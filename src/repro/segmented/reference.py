@@ -1,0 +1,162 @@
+"""Per-segment XLA reference path for the segmented ops.
+
+This is the escape hatch (``REPRO_DISABLE_SEGMENTED`` /
+``set_segmented_enabled(False)``), the non-TPU auto route, and the test
+oracle: one ``jnp.sort`` / stable ``argsort`` per segment, stitched back
+into the CSR layout. Static offsets make every slice a compile-time
+constant, so this traces to plain XLA slices/sorts/concats — slower than
+the bucketed launches (one sort per segment instead of one per size
+class) but correct for every input, and the bit-equality target the
+kernel path is tested against.
+
+Ordering conventions match the kernel path: ``descending`` is a *stable
+ascending sort of the bit-flipped keys* (``kernels.segmented.flip_keys``
+— the same transform the class kernels apply in VMEM), so NaNs come
+first under ``nan_policy="last"`` — never the reverse-of-ascending
+convention, whose tie order would invert the kernels' on every
+duplicate. Values are gathered from the raw input at the permutation,
+never decoded from keys, and are bit-identical to the kernel path for
+every input. The *permutation* among tied values additionally matches
+the kernels on every stable sub-path (classes narrower than the
+column-device cutover); wider classes use the column S2MS devices,
+which — exactly like the dense ``repro.sort`` without ``stable=True``
+(see ``merge2_cols``'s tie caution) — make no tie-order promise, so
+perm/idx on duplicates is unspecified there, not part of the contract.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import encode_key_values, key_transformable
+from repro.kernels.segmented import flip_keys
+
+
+def _seg_order(seg: jnp.ndarray, descending: bool, nan_policy: str):
+    """Stable ascending argsort of the segment's (flipped-for-descending)
+    total-order keys — bit-for-bit the kernel path's tie convention."""
+    keys = seg
+    if nan_policy == "last" and key_transformable(seg.dtype):
+        keys = encode_key_values(seg)
+    if descending:
+        keys = flip_keys(keys)
+    return jnp.argsort(keys, stable=True)
+
+
+def ref_segment_sort(
+    values: jnp.ndarray,
+    offsets: Tuple[int, ...],
+    *,
+    descending: bool = False,
+    nan_policy: str = "last",
+    payload_lanes: Sequence[jnp.ndarray] = (),
+    want_perm: bool = False,
+):
+    """Per-segment sort; returns ``(values, perm | None, payload_outs)``."""
+    need_perm = want_perm or bool(payload_lanes)
+    outs, perms = [], []
+    pouts = [[] for _ in payload_lanes]
+    for o0, o1 in zip(offsets, offsets[1:]):
+        seg = values[o0:o1]
+        if o1 - o0 <= 1:
+            outs.append(seg)
+            if need_perm:
+                perms.append(jnp.zeros((o1 - o0,), jnp.int32))
+                for i, lane in enumerate(payload_lanes):
+                    pouts[i].append(lane[o0:o1])
+            continue
+        order = _seg_order(seg, descending, nan_policy)
+        outs.append(seg[order])
+        if need_perm:
+            perms.append(order.astype(jnp.int32))
+            for i, lane in enumerate(payload_lanes):
+                pouts[i].append(lane[o0:o1][order])
+
+    def cat(parts, like):
+        return jnp.concatenate(parts) if parts else like[:0]
+
+    out = cat(outs, values)
+    perm = cat(perms, jnp.zeros((0,), jnp.int32)) if need_perm else None
+    return out, perm, tuple(cat(p, lane) for p, lane in
+                            zip(pouts, payload_lanes))
+
+
+def ref_segment_merge(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    offsets_a: Tuple[int, ...],
+    offsets_b: Tuple[int, ...],
+    *,
+    descending: bool = False,
+    nan_policy: str = "last",
+    payload_lanes: Sequence[jnp.ndarray] = (),  # segment-concat CSR lanes
+    want_perm: bool = False,
+):
+    """Per-segment 2-way merge of sorted runs. ``payload_lanes`` are in
+    the merged CSR layout (per segment: a's payload then b's). Returns
+    ``(values, perm | None, payload_outs, out_offsets)``."""
+    need_perm = want_perm or bool(payload_lanes)
+    out_offsets = tuple(oa + ob for oa, ob in zip(offsets_a, offsets_b))
+    outs, perms = [], []
+    pouts = [[] for _ in payload_lanes]
+    for s in range(len(offsets_a) - 1):
+        a0, a1 = offsets_a[s], offsets_a[s + 1]
+        b0, b1 = offsets_b[s], offsets_b[s + 1]
+        seg = jnp.concatenate([a[a0:a1], b[b0:b1]])
+        if seg.shape[0] <= 1:
+            order = jnp.zeros(seg.shape, jnp.int32)
+        else:
+            order = _seg_order(seg, descending, nan_policy).astype(jnp.int32)
+        outs.append(seg[order] if seg.shape[0] > 1 else seg)
+        if need_perm:
+            perms.append(order)
+            o0 = out_offsets[s]
+            for i, lane in enumerate(payload_lanes):
+                pouts[i].append(lane[o0:o0 + seg.shape[0]][order])
+
+    def cat(parts, like):
+        return jnp.concatenate(parts) if parts else like[:0]
+
+    out = cat(outs, a)
+    perm = cat(perms, jnp.zeros((0,), jnp.int32)) if need_perm else None
+    return out, perm, tuple(cat(p, lane) for p, lane in
+                            zip(pouts, payload_lanes)), out_offsets
+
+
+def ref_segment_topk(
+    values: jnp.ndarray,
+    offsets: Tuple[int, ...],
+    ks: Tuple[int, ...],
+    *,
+    descending: bool = True,
+    nan_policy: str = "last",
+    payload_lanes: Sequence[jnp.ndarray] = (),
+):
+    """Per-segment top-k (``descending=False`` = bottom-k). Returns
+    ``(values, idx, payload_outs, out_offsets)`` in CSR layout with
+    ``out_offsets[s+1]-out_offsets[s] == min(ks[s], len_s)``."""
+    outs, idxs = [], []
+    pouts = [[] for _ in payload_lanes]
+    out_offsets = [0]
+    for s, (o0, o1) in enumerate(zip(offsets, offsets[1:])):
+        ln = o1 - o0
+        cnt = min(int(ks[s]), ln)
+        out_offsets.append(out_offsets[-1] + cnt)
+        if cnt == 0:
+            continue
+        seg = values[o0:o1]
+        order = (_seg_order(seg, descending, nan_policy)[:cnt]
+                 if ln > 1 else jnp.zeros((cnt,), jnp.int32))
+        outs.append(seg[order])
+        idxs.append(order.astype(jnp.int32))
+        for i, lane in enumerate(payload_lanes):
+            pouts[i].append(lane[o0:o1][order])
+
+    def cat(parts, like):
+        return jnp.concatenate(parts) if parts else like[:0]
+
+    return (cat(outs, values), cat(idxs, jnp.zeros((0,), jnp.int32)),
+            tuple(cat(p, lane) for p, lane in zip(pouts, payload_lanes)),
+            tuple(out_offsets))

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,14 +24,20 @@ from .sample import sample_greedy, sample_topk
 @dataclasses.dataclass
 class ServeConfig:
     max_new_tokens: int = 16
-    top_k: int = 64
+    #: one int, or one per request — a continuous batch mixing sampling
+    #: configs scores through the segmented ragged top-k in one launch
+    top_k: Union[int, Sequence[int]] = 64
     temperature: float = 1.0
     seed: int = 0
 
 
-def make_serve_step(cfg: ModelConfig, par=None, top_k: int = 64,
+def make_serve_step(cfg: ModelConfig, par=None,
+                    top_k: Union[int, Sequence[int]] = 64,
                     temperature: float = 1.0):
-    """(params, tokens (B,1), cache, positions, key) -> (next (B,1), cache)."""
+    """(params, tokens (B,1), cache, positions, key) -> (next (B,1), cache).
+
+    ``top_k`` follows :func:`repro.serving.sample.sample_topk`: a static
+    per-request sequence routes scoring through ``repro.segment_topk``."""
 
     def serve_step(params, tokens, cache, positions, key):
         logits, cache = decode_step(params, tokens, cache, cfg,

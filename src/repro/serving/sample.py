@@ -16,11 +16,13 @@ TPU and the schedule executor elsewhere.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.api import segment_topk
 from repro.api import sort as unified_sort
 from repro.api import topk as unified_topk
 
@@ -29,17 +31,69 @@ def sample_topk(
     key,
     logits: jnp.ndarray,  # (B, V)
     *,
-    k: int = 64,
+    k: Union[int, Sequence[int]] = 64,
     temperature: float = 1.0,
     par=None,
 ) -> jnp.ndarray:
-    """Top-k + temperature categorical sampling -> (B,) int32 tokens."""
+    """Top-k + temperature categorical sampling -> (B,) int32 tokens.
+
+    ``k`` may be one static int per *request* (a continuous batch mixing
+    sampling configs): the scoring then runs as one ragged
+    ``repro.segment_topk`` call — every request's vocab row is a segment,
+    per-request k, one launch per size class — instead of B separate
+    kernels or a pad-to-max-k batch."""
+    if not isinstance(k, (int, np.integer)):
+        return _sample_topk_ragged(key, logits, tuple(int(x) for x in k),
+                                   temperature, par=par)
     if temperature <= 0.0 or k == 1:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     vals, idx = unified_topk(logits, k, par=par)
     probs_logits = vals.astype(jnp.float32) / temperature
     choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
     return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+
+
+def _sample_topk_ragged(key, logits: jnp.ndarray, ks, temperature: float,
+                        par=None):
+    """Mixed-k continuous batch: per-request vocab top-k through the
+    segmented backend, then one categorical draw over each request's own
+    candidate prefix (shorter prefixes mask to -inf).
+
+    With a TP-sharded ``par`` the scoring instead runs one *uniform*
+    ``max(ks)`` top-k through the unified dispatch — the planner's
+    device-tree sharded reduction stays engaged, the vocab row never
+    gathers onto one device, and each request still draws only from its
+    own ``k_r`` prefix of the descending candidates (identical sample
+    law: the top-``k_r`` of a row is the ``k_r`` prefix of its top-k_max).
+    """
+    b, v = logits.shape
+    assert len(ks) == b and all(1 <= x <= v for x in ks), (ks, logits.shape)
+    if temperature <= 0.0 or all(x == 1 for x in ks):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k_max = max(ks)
+    if par is not None:
+        dense_v, dense_i = unified_topk(logits, k_max, par=par)  # (B, k_max)
+        cnts = jnp.asarray(np.asarray(ks, np.int32))[:, None]
+    else:
+        offsets = tuple(range(0, (b + 1) * v, v))
+        vals, idx, out_offs = segment_topk(logits.reshape(-1), offsets, ks)
+        # CSR -> dense (B, k_max) via static maps; pad lanes mask to -inf
+        # so the categorical never picks them
+        gmap = np.full((b, k_max), out_offs[-1], np.int64)
+        for r in range(b):
+            cnt = out_offs[r + 1] - out_offs[r]
+            gmap[r, :cnt] = out_offs[r] + np.arange(cnt)
+        vals_ext = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
+        idx_ext = jnp.concatenate([idx, jnp.zeros((1,), idx.dtype)])
+        dense_v = vals_ext[jnp.asarray(gmap)]
+        dense_i = idx_ext[jnp.asarray(gmap)]
+        cnts = jnp.asarray(np.diff(np.asarray(out_offs)))[:, None]
+    lane = jnp.arange(k_max)[None, :]
+    probs_logits = jnp.where(lane < cnts,
+                             dense_v.astype(jnp.float32) / temperature,
+                             -jnp.inf)
+    choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
+    return jnp.take_along_axis(dense_i, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
 
 
 def sample_greedy(logits: jnp.ndarray) -> jnp.ndarray:

@@ -25,8 +25,11 @@ from typing import Any, Dict, Optional
 
 #: entry-format version; bump when MergePlan fields change meaning.
 #: v2 added the fused-pipeline knobs (``block``) and the VMEM-fit
-#: (non-divisor) block_batch semantics.
-SCHEMA_VERSION = 2
+#: (non-divisor) block_batch semantics. v3 added the segmented size-class
+#: plan family (``segmented|batch x widths`` keys, block_batch counting
+#: segments per tile) — pre-segmented caches are ignored wholesale rather
+#: than risking a dense-era entry mis-tiling a class launch.
+SCHEMA_VERSION = 3
 
 
 def default_cache_path() -> str:

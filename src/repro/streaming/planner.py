@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import pick_merge_cols
+from repro.kernels.common import ceil_pow2, pick_merge_cols
 
 from .cache import AutotuneCache, default_cache, plan_key
 
@@ -114,7 +114,7 @@ def _vmem_bytes_sort(n: int, block_batch: int, dtype) -> int:
     tree level materializes a (npad/2, npad/2) rank cloud per row pair
     plus the value/position lanes."""
     it = max(_itemsize(dtype), 4)
-    npad = 1 << (n - 1).bit_length() if n > 1 else 1
+    npad = ceil_pow2(n)
     cloud = (npad // 2) * (npad // 2) * 4 * 2  # cmp counts + rank ints
     lanes = npad * (it + 4) * 2  # values + int32 position lane, double-buffered
     return block_batch * (cloud + lanes)
@@ -239,6 +239,36 @@ def plan_topk(n: int, k: int, *, batch: int = 8, dtype=jnp.float32,
                      use_mxu=_is_float(dtype), source="heuristic")
 
 
+def plan_segmented(
+    widths: Sequence[int],
+    *,
+    n_segments: int = 8,
+    dtype=jnp.float32,
+    target_block_batch: int = 8,
+) -> MergePlan:
+    """Heuristic plan for one segmented size-class launch.
+
+    ``widths`` is the class's pow2 tile width — one entry for a class
+    sort (kernels/segmented.py packs ``n_segments`` rows per tile and
+    runs the unrolled LOMS tree, the same working set as the fused sort),
+    two for a class merge (the column S2MS working set). ``block_batch``
+    counts *segments* per tile, picked by VMEM fit exactly like the dense
+    kernels — a class of 1007 ragged segments pads, it never degrades to
+    1-row tiles."""
+    widths = tuple(int(w) for w in widths)
+    if len(widths) == 1:
+        row_bytes = lambda bb: _vmem_bytes_sort(widths[0], bb, dtype)  # noqa: E731
+        n_cols = 2
+    else:
+        assert len(widths) == 2, widths
+        n_cols = max(pick_merge_cols(widths[0], widths[1]), 1)
+        row_bytes = lambda bb: _vmem_bytes_merge2(  # noqa: E731
+            widths[0], widths[1], n_cols, bb, dtype)
+    bb = pick_block_batch(n_segments, row_bytes, target=target_block_batch)
+    return MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
+                     use_mxu=_is_float(dtype), source="heuristic")
+
+
 def plan_chunked(
     total_a: int,
     total_b: int,
@@ -304,6 +334,9 @@ _register_heuristic("kway")(
 _register_heuristic("topk")(
     lambda lengths, batch, dtype, k: plan_topk(
         lengths[0], k or 1, batch=batch, dtype=dtype))
+_register_heuristic("segmented")(
+    lambda lengths, batch, dtype, k: plan_segmented(
+        lengths, n_segments=batch, dtype=dtype))
 _register_heuristic("chunked2")(
     lambda lengths, batch, dtype, k: plan_chunked(
         lengths[0], lengths[1], batch=batch, dtype=dtype))

@@ -8,11 +8,10 @@ Covers the acceptance criteria of the api_redesign issue:
     jnp.sort / jax.lax.top_k references across dtypes (randomized
     hypothesis sweeps of the same properties live in
     test_api_properties.py);
-  * the old repro.core.api entry points still work as deprecation shims;
+  * the expired repro.core.api shims raise pointed ImportErrors;
   * the padded top-k sentinel index regression (-1, never an aliasing 0).
 """
 import types
-import warnings
 
 import numpy as np
 import jax
@@ -423,27 +422,28 @@ def test_topk_backends_agree(backend):
     np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
 
 
-def test_core_api_shims_warn_and_forward():
+def test_core_api_shims_removed_with_pointed_errors():
+    # the PR 2 one-release deprecation shims expired: every legacy entry
+    # point now raises ImportError naming its replacement, and nothing in
+    # the tree imports them anymore
     from repro.core import api as old_api
 
-    a, b = _sorted((2, 8), jnp.float32), _sorted((2, 8), jnp.float32)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        merged = old_api.merge(a, b)
-        vals, idx = old_api.topk(a, 3)
-        plan_ = old_api.plan_merge(64, 64)
-    assert all(
-        any(issubclass(w.category, DeprecationWarning) and name in str(w.message)
-            for w in caught)
-        for name in ("merge", "topk", "plan_merge"))
-    np.testing.assert_array_equal(
-        np.asarray(merged), np.asarray(repro.merge(a, b)))
-    assert plan_.n_cols >= 2
-    # every legacy entry point is still importable
-    for name in ("merge", "merge_k", "sort", "topk", "median_of_lists",
-                 "median9", "merge_schedule", "chunked_merge",
-                 "chunked_merge_k", "tree_topk", "plan_merge"):
-        assert callable(getattr(old_api, name)), name
+    for name, repl in (("merge", "repro.merge"),
+                       ("merge_k", "repro.merge_k"),
+                       ("sort", "repro.sort"),
+                       ("topk", "repro.topk"),
+                       ("median_of_lists", "repro.median_of_lists"),
+                       ("merge_schedule", "repro.api.schedules"),
+                       ("median9", "repro.api.schedules"),
+                       ("chunked_merge", "repro.streaming"),
+                       ("chunked_merge_k", "repro.streaming"),
+                       ("tree_topk", "repro.streaming"),
+                       ("plan_merge", "repro.streaming.plan_merge2")):
+        with pytest.raises(ImportError, match=repl.replace(".", r"\.")):
+            getattr(old_api, name)
+    # unknown attributes stay AttributeError (not ImportError)
+    with pytest.raises(AttributeError):
+        old_api.does_not_exist
 
 
 def test_unified_api_jit_and_grad_safe():

@@ -22,6 +22,7 @@ from repro.streaming.planner import (
     autotune_sort,
     plan_merge2,
     plan_op,
+    plan_segmented,
     plan_sort,
     sort_fits_vmem,
 )
@@ -118,6 +119,47 @@ def test_corrupt_cache_file_starts_empty(tmp_path):
     p.write_text("{not json")
     c = AutotuneCache(path=str(p))
     assert len(c) == 0
+
+
+def test_pre_segmented_caches_ignored(cache):
+    # PR 5 regression: v3 bumped the schema for the segmented plan family
+    # (block_batch now counts segments per class tile). A v2-era entry —
+    # even one sitting under a key the segmented planner would hit — must
+    # degrade to the heuristic, never mis-tile a class launch.
+    assert SCHEMA_VERSION >= 3
+    key = plan_key("segmented", shapes=(64, 128), dtype="float32")
+    cache._entries[key] = dict(
+        MergePlan(block_batch=16).to_entry(), _schema=2)
+    assert cache.get(key) is None
+    plan = plan_op("segmented", (128,), batch=64, dtype=jnp.float32,
+                   cache=cache)
+    assert plan.source == "heuristic"
+    # current-schema entries round-trip as cache hits
+    cache.put(key, MergePlan(block_batch=4).to_entry())
+    hit = plan_op("segmented", (128,), batch=64, dtype=jnp.float32,
+                  cache=cache)
+    assert hit.source == "cache" and hit.block_batch == 4
+
+
+# ---------------------------------------------------------------------------
+# segmented class plans (plan_segmented)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_segmented_sort_class_fits_budget():
+    from repro.streaming.planner import _vmem_bytes_sort, vmem_budget
+
+    plan = plan_segmented((256,), n_segments=1007, dtype=jnp.float32)
+    assert plan.block_batch > 1  # ragged segment counts pad, never degrade
+    assert _vmem_bytes_sort(256, plan.block_batch, jnp.float32) \
+        <= vmem_budget()
+
+
+def test_plan_segmented_merge_class_picks_columns():
+    plan = plan_segmented((64, 128), n_segments=32, dtype=jnp.float32)
+    assert plan.n_cols >= 2  # pow2 class pair always has a common column
+    degenerate = plan_segmented((1, 8), n_segments=4, dtype=jnp.float32)
+    assert degenerate.n_cols == 1  # width-1 run: single-stage S2MS fallback
 
 
 # ---------------------------------------------------------------------------

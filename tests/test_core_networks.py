@@ -7,6 +7,15 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.api.schedules import (  # the former repro.core.api surface
+    median9,
+    median_of_lists,
+    merge,
+    merge_k,
+    merge_schedule,
+    sort,
+    topk,
+)
 from repro.core import (
     apply_schedule,
     apply_schedule_with_payload,
@@ -15,16 +24,9 @@ from repro.core import (
     loms_2way,
     loms_kway,
     loms_median,
-    merge,
-    merge_k,
-    merge_schedule,
-    median9,
-    median_of_lists,
     rank_merge_runs,
     rank_sort,
-    sort,
     table1_stages,
-    topk,
     validate_01_merge,
     validate_01_sort,
 )

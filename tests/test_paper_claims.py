@@ -3,9 +3,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro.api.schedules import merge_schedule
 from repro.core import (comparator_count, depth, loms_2way, loms_kway,
-                        loms_median, merge_schedule, table1_stages,
-                        validate_01_merge)
+                        loms_median, table1_stages, validate_01_merge)
 from repro.core.metrics import lut_proxy, series_levels, vmem_bytes
 from repro.core.mwms import mwms_kway, mwms_median
 
