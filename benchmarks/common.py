@@ -1,30 +1,42 @@
-"""Shared benchmark utilities: timing, CSV emission, device table."""
+"""Shared benchmark utilities: timing, CSV emission, device table.
+
+Timing routes through :mod:`repro.obs.timing` — the one shared
+warmup + ``block_until_ready`` + percentile helper — so every benchmark
+reports the same p50/p95/p99 statistics that the autotuner persists and
+``BENCH_*.json`` stamps.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.timing import TimingStats, time_jitted
+
 ROWS: List[Dict] = []
 
 
+def timeit_stats(fn: Callable, *args, warmup: int = 2,
+                 iters: int = 10) -> TimingStats:
+    """p50/p95/p99 wall-time stats (µs) of a jitted callable."""
+    return time_jitted(fn, *args, warmup=warmup, iters=iters)
+
+
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall-time per call (seconds) of a jitted callable."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    """p50 wall-time per call (seconds) of a jitted callable."""
+    return timeit_stats(fn, *args, warmup=warmup, iters=iters).p50_s
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+def emit(name: str, us_per_call: float, derived: str = "",
+         stats: Optional[TimingStats] = None):
+    row = {"name": name, "us_per_call": us_per_call, "derived": derived}
+    if stats is not None:
+        row.update(stats.to_row())
+        derived = (derived + " " if derived else "") + (
+            f"p95 {stats.p95_us:.0f}us p99 {stats.p99_us:.0f}us")
+    ROWS.append(row)
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
@@ -32,3 +44,7 @@ def sorted_batch(rng, batch, n, dtype=jnp.float32, bits=32):
     hi = 255 if bits == 8 else 100_000
     x = rng.integers(0, hi, size=(batch, n))
     return jnp.sort(jnp.asarray(x).astype(dtype), axis=-1)
+
+
+__all__ = ["ROWS", "TimingStats", "emit", "sorted_batch", "timeit",
+           "timeit_stats"]

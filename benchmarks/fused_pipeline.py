@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit, timeit_stats
 
 #: benchmarked shapes: (op, batch, lengths, payload?)
 CASES = [
@@ -153,23 +153,24 @@ def collect_rows(iters: int = 3):
             failures.append(
                 f"{op}[{shape}]: fused xla_ops {fused_ops} > unfused "
                 f"{unfused_ops}")
-        t_fused = timeit(fused_fn, *args, iters=iters) * 1e6
-        t_unfused = timeit(unfused_fn, *args, iters=iters) * 1e6
-        for backend, ops, us in (("pallas-fused", fused_ops, t_fused),
-                                 ("unfused", unfused_ops, t_unfused)):
+        st_fused = timeit_stats(fused_fn, *args, iters=iters)
+        st_unfused = timeit_stats(unfused_fn, *args, iters=iters)
+        for backend, ops, st in (("pallas-fused", fused_ops, st_fused),
+                                 ("unfused", unfused_ops, st_unfused)):
             rows.append({
                 "op": op,
                 "shape": shape,
                 "dtype": "float32",
                 "payload": payload,
                 "backend": backend,
-                "wall_us": round(us, 1),
+                "wall_us": round(st.p50_us, 1),
+                **st.to_row(),
                 "xla_ops": ops,
                 "platform": jax.default_backend(),
             })
-        emit(f"fused_{op}_{shape}", t_fused,
+        emit(f"fused_{op}_{shape}", st_fused.p50_us,
              f"xla_ops {fused_ops} vs unfused {unfused_ops} "
-             f"({t_unfused:.0f}us)")
+             f"({st_unfused.p50_us:.0f}us)", stats=st_fused)
     return rows, failures
 
 

@@ -2,7 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all sorter benches
   PYTHONPATH=src python -m benchmarks.run --roofline # + roofline table
+  PYTHONPATH=src python -m benchmarks.run --obs      # + Chrome trace
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+``--obs`` forces the obs layer on for the whole run and writes a
+perfetto-loadable ``BENCH_sort.trace.json`` next to the JSON (schema
+checked via :func:`repro.obs.validate_chrome_trace`).
 
 Also writes the repo-root ``BENCH_sort.json`` trajectory — one entry per
 (op, shape, dtype, backend) with wall time and the XLA-level op-count
@@ -43,12 +47,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true",
                     help="also print the dry-run roofline table")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable span tracing/metrics and write a Chrome "
+                         "trace next to BENCH_sort.json")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
+    if args.obs:
+        # before any benchmark module (and hence repro) import work runs,
+        # so planner/dispatch trace-time spans are captured too
+        os.environ["REPRO_OBS"] = "1"
+
     from . import api_dispatch, dist_sort, fig11_12_speed_2way
     from . import fig13_resources_2way, fig14_17_lut_modes, fig18_20_3way
-    from . import fused_pipeline, moe_routing, segmented, streaming_merge
+    from . import fused_pipeline, moe_routing, segmented, serve
+    from . import streaming_merge
 
     modules = {
         "fig11_12": fig11_12_speed_2way,
@@ -61,6 +74,7 @@ def main() -> None:
         "dist_sort": dist_sort,
         "fused": fused_pipeline,
         "segmented": segmented,
+        "serve": serve,
     }
     print("name,us_per_call,derived")
     # the BENCH_sort.json trajectory collects rows from every module that
@@ -79,6 +93,21 @@ def main() -> None:
     if wrote_any:
         path = write_bench_json(bench_rows)
         print(f"# wrote {path}", file=sys.stderr)
+    if args.obs:
+        import repro.obs as obs
+
+        trace_path = os.path.abspath(BENCH_JSON).replace(
+            ".json", ".trace.json")
+        snap = obs.snapshot()
+        obs.write_chrome_trace(trace_path, snap)
+        with open(trace_path) as f:
+            errs = obs.validate_chrome_trace(json.load(f))
+        for e in errs:
+            print(f"# OBS-TRACE-INVALID {e}", file=sys.stderr)
+        print(f"# wrote {trace_path} ({len(snap['spans'])} spans, "
+              f"{len(snap['metrics'])} metric series)", file=sys.stderr)
+        if errs:
+            sys.exit(1)
     if args.roofline:
         from . import roofline
 

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit, timeit_stats
 from .fused_pipeline import count_xla_ops
 
 #: (name, segment length distribution) — lengths chosen so total work is
@@ -125,14 +125,15 @@ def collect_rows(iters: int = 3):
                     ("seg-reference", ref_fn, slots_seg),
                     ("padded-dense", dense_fn, slots_dense))
         for backend, fn, slots in variants:
-            us = timeit(fn, x, iters=iters) * 1e6
+            st = timeit_stats(fn, x, iters=iters)
             rows.append({
                 "op": "segment_sort",
                 "shape": shape,
                 "dtype": "float32",
                 "payload": False,
                 "backend": backend,
-                "wall_us": round(us, 1),
+                "wall_us": round(st.p50_us, 1),
+                **st.to_row(),
                 "xla_ops": count_xla_ops(fn, x),
                 "padded_slots": slots,
                 "raggedness": round(max_len * len(lengths) / n, 2),
@@ -153,14 +154,15 @@ def collect_rows(iters: int = 3):
                     else np.zeros((0,), np.float32))
         if not np.array_equal(vals, ref_topk, equal_nan=True):
             failures.append(f"topk[{name}]: segmented != per-segment ref")
-        us = timeit(topk_fn, x, iters=iters) * 1e6
+        st = timeit_stats(topk_fn, x, iters=iters)
         rows.append({
             "op": "segment_topk",
             "shape": shape,
             "dtype": "float32",
             "payload": False,
             "backend": "segmented",
-            "wall_us": round(us, 1),
+            "wall_us": round(st.p50_us, 1),
+            **st.to_row(),
             "xla_ops": count_xla_ops(topk_fn, x),
             "padded_slots": slots_seg,
             "raggedness": round(max_len * len(lengths) / n, 2),

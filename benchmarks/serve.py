@@ -1,0 +1,174 @@
+"""Decode microbenchmark → ``BENCH_serve.json`` (+ the obs smoke gate).
+
+For each case this runs the real serving path — ``init_cache`` →
+``prefill`` → jitted decode loop with donated cache — on a smoke-scale
+model config, with ``ServeConfig.time_steps`` on so every decode step is
+host-timed, and reports:
+
+* ``tok_per_s``             — decode throughput (batch tokens / decode wall)
+* ``prefill_us``            — one synchronized prefill
+* ``decode_step_p50/95/99`` — per-step latency percentiles
+
+Rows land in the repo-root ``BENCH_serve.json`` trajectory (schema
+mirrors ``BENCH_sort.json``). Wall numbers are informational off-TPU
+(interpret-mode kernels); the ``--check`` gate asserts *structure*, never
+timing:
+
+* every case produced tokens in-range and ``tok_per_s > 0``;
+* the p50/p95/p99 fields are present and ordered;
+* with obs forced on, one generate() leaves ``serve.prefill`` /
+  ``serve.decode`` spans and serve counters in the snapshot, and the
+  exported Chrome trace (written next to the JSON) passes the
+  trace-event schema check — the CI obs-enabled benchmark row.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from .common import emit
+
+BENCH_SERVE_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_serve.json")
+
+#: (model, batch, prompt_len, new_tokens, top_k, temperature)
+CASES = [
+    ("chatglm3-6b", 2, 16, 8, 8, 1.0),
+    ("qwen3-8b", 2, 12, 6, 0, 0.0),  # greedy decode
+]
+
+
+def _run_case(model, batch_size, prompt_len, new_tokens, top_k, temperature):
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import model_init
+    from repro.serving.engine import ServeConfig, generate
+
+    cfg = get_smoke_config(model)
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch_size, prompt_len)), jnp.int32)}
+    sc = ServeConfig(max_new_tokens=new_tokens, top_k=top_k,
+                     temperature=temperature, time_steps=True)
+    out = generate(params, batch, cfg, sc)
+    row = {
+        "model": model,
+        "batch": batch_size,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "top_k": top_k,
+        "temperature": temperature,
+        "tok_per_s": round(float(out["tok_per_s"]), 2),
+        "prefill_us": round(float(out["prefill_s"]) * 1e6, 1),
+        "decode_us": round(float(out["decode_s"]) * 1e6, 1),
+        "p50_us": round(out["decode_step_p50_us"], 1),
+        "p95_us": round(out["decode_step_p95_us"], 1),
+        "p99_us": round(out["decode_step_p99_us"], 1),
+        "platform": jax.default_backend(),
+    }
+    failures = []
+    toks = out["tokens"]
+    if toks.shape != (batch_size, new_tokens):
+        failures.append(f"{model}: tokens shape {toks.shape}")
+    if not ((toks >= 0).all() and (toks < cfg.vocab_size).all()):
+        failures.append(f"{model}: tokens out of vocab range")
+    if not out["tok_per_s"] > 0:
+        failures.append(f"{model}: tok_per_s {out['tok_per_s']}")
+    if not (row["p50_us"] <= row["p95_us"] <= row["p99_us"]):
+        failures.append(f"{model}: decode percentiles not ordered")
+    return row, failures
+
+
+def write_serve_json(rows) -> str:
+    path = os.path.abspath(BENCH_SERVE_JSON)
+    payload = {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "platform": jax.default_backend(),
+        "note": ("tokens/sec + per-decode-step latency percentiles; "
+                 "wall numbers are informational off-TPU (interpret-mode "
+                 "kernels) — CI gates on structure, never timing"),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _obs_smoke(failures) -> None:
+    """The obs-enabled benchmark row: rerun one case with obs forced on,
+    assert the snapshot carries serve spans + counters, and write a
+    schema-validated Chrome trace next to BENCH_serve.json."""
+    import repro.obs as obs
+
+    prev = obs.set_enabled(True)
+    obs.trace.clear()
+    obs.metrics.reset()
+    try:
+        _run_case(*CASES[0])
+        snap = obs.snapshot()
+        names = {sp["name"] for sp in snap["spans"]}
+        for want in ("serve.prefill", "serve.decode"):
+            if want not in names:
+                failures.append(f"obs: span {want!r} missing from snapshot")
+        for want in ("serve.decode_steps", "serve.tokens", "plan.decisions"):
+            if want not in snap["metrics"]:
+                failures.append(f"obs: metric {want!r} missing from snapshot")
+        trace_path = os.path.abspath(BENCH_SERVE_JSON).replace(
+            ".json", ".trace.json")
+        obs.write_chrome_trace(trace_path, snap)
+        with open(trace_path) as f:
+            errs = obs.validate_chrome_trace(json.load(f))
+        for e in errs:
+            failures.append(f"obs: chrome trace schema: {e}")
+        print(f"# wrote {trace_path} ({len(snap['spans'])} spans)",
+              file=sys.stderr)
+    finally:
+        obs.set_enabled(prev)
+
+
+def collect_rows():
+    rows, failures = [], []
+    for case in CASES:
+        row, fails = _run_case(*case)
+        rows.append(row)
+        failures += fails
+        emit(f"serve_{case[0]}_b{case[1]}", row["p50_us"],
+             f"tok/s {row['tok_per_s']} p99 {row['p99_us']}us")
+    return rows, failures
+
+
+def run():
+    rows, failures = collect_rows()
+    if rows:
+        path = write_serve_json(rows)
+        print(f"# wrote {path}", file=sys.stderr)
+    for f in failures:
+        print(f"SERVE-CHECK-FAIL {f}", file=sys.stderr)
+    return rows, failures
+
+
+def main(check: bool = False) -> int:
+    rows, failures = collect_rows()
+    if check:
+        _obs_smoke(failures)
+    if rows:
+        path = write_serve_json(rows)
+        print(f"# wrote {path}", file=sys.stderr)
+    for f in failures:
+        print(f"SERVE-CHECK-FAIL {f}", file=sys.stderr)
+    if check and failures:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(check="--check" in sys.argv))

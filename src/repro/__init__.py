@@ -11,8 +11,10 @@ namespace, planner-driven backend selection, pytree payloads.
 Subsystems: ``repro.core`` (schedules + executor), ``repro.kernels``
 (Pallas TPU sorters), ``repro.streaming`` (chunked pipelines, planner,
 device-tree top-k), ``repro.models`` / ``repro.serving`` (the LLM stack
-consuming them).
+consuming them), ``repro.obs`` (span tracing + metrics + timing export,
+inert unless ``REPRO_OBS`` is set; DESIGN.md §13).
 """
+from repro import obs  # noqa: F401
 from repro.api import (  # noqa: F401
     Backend,
     Decision,
@@ -43,6 +45,7 @@ __all__ = [
     "median_of_lists",
     "merge",
     "merge_k",
+    "obs",
     "plan",
     "register_backend",
     "segment_argmax",

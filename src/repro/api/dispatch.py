@@ -55,6 +55,8 @@ from typing import List, Optional
 import jax.numpy as jnp
 
 from repro.kernels.topk import ROUTER_TOPK_MAX  # noqa: F401  (re-exported)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .registry import get_backend
 from .spec import BACKEND_AUTO, SortSpec
@@ -140,7 +142,25 @@ def _plan_segmented(spec: SortSpec) -> Decision:
 
 
 def plan(spec: SortSpec, par=None) -> Decision:
-    """Resolve the backend for one problem. Pure function of (spec, par)."""
+    """Resolve the backend for one problem. Pure function of (spec, par).
+
+    Every decision is recorded in the obs layer (``plan.decisions``
+    counter: op / backend / detail / device labels) when ``REPRO_OBS``
+    is on — the route-count telemetry the measured cost model audits
+    fused-vs-unfused choices against. Disabled, the extra cost is one
+    predicate check."""
+    with obs_trace.span("plan", kind="trace", op=spec.op):
+        dec = _resolve(spec, par)
+    if obs_trace.enabled():
+        obs_metrics.counter("plan.decisions").inc(
+            op=spec.op, backend=dec.backend, detail=dec.detail,
+            device=spec.device or "?", segmented=spec.segmented,
+            sharded=spec.sharded, payload=spec.has_payload,
+        )
+    return dec
+
+
+def _resolve(spec: SortSpec, par=None) -> Decision:
     if spec.segmented and spec.backend == BACKEND_AUTO:
         return _plan_segmented(spec)
     if spec.backend != BACKEND_AUTO:
@@ -257,8 +277,35 @@ def plan(spec: SortSpec, par=None) -> Decision:
     return Decision("schedule", "loms_kway", f"{spec.device or 'non-TPU'} host")
 
 
+def _tuned_us(spec: SortSpec) -> Optional[float]:
+    """Cached measured wall time (µs) for the spec's kernel tuning point,
+    if an autotune sweep ever ran it on this platform. Surfaces the
+    persisted ``MergePlan.us`` samples in :func:`decision_table` so perf
+    regressions are inspectable without rerunning benchmarks."""
+    from repro.streaming.cache import default_cache, plan_key
+
+    op_map = {
+        "sort": ("sort", (spec.lengths[0],), None),
+        "merge": ("merge2", tuple(spec.lengths), None),
+        "merge_k": ("kway", tuple(spec.lengths), None),
+        "topk": ("topk", (spec.total,), spec.k),
+    }
+    if spec.segmented or spec.op not in op_map:
+        return None
+    op, lengths, k = op_map[spec.op]
+    entry = default_cache().get(
+        plan_key(op, shapes=(spec.batch,) + lengths, dtype=spec.dtype, k=k))
+    if entry is None or "us" not in entry:
+        return None
+    return float(entry["us"])
+
+
 def decision_table(device: Optional[str] = None) -> List[dict]:
-    """Representative routing grid for docs and the dispatch benchmark."""
+    """Representative routing grid for docs and the dispatch benchmark.
+
+    Each row carries ``tuned_us`` — the cached autotune wall-time sample
+    for that tuning point (``None`` until an autotune sweep measured it
+    on this platform)."""
     devices = (device,) if device else ("cpu", "tpu")
     rows: List[dict] = []
     cases = []
@@ -301,5 +348,6 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
             "backend": dec.backend,
             "detail": dec.detail,
             "reason": dec.reason,
+            "tuned_us": _tuned_us(spec),
         })
     return rows

@@ -1,0 +1,50 @@
+"""repro.obs — observability: spans, metrics, timing, export.
+
+The measured-telemetry layer of the stack (DESIGN.md §13): the paper
+characterizes every sorter by measured speed and resource cost; this
+package gives the TPU reproduction the same footing. Span tracing
+(``trace``), a process-global metric registry (``metrics``), the one
+shared timing helper (``timing``), and JSONL / Chrome-trace export
+(``export``). Everything is a strict no-op unless ``REPRO_OBS`` is set
+(or :func:`set_enabled` forces it on).
+
+    import repro.obs as obs
+    obs.set_enabled(True)
+    with obs.span("my.region", kind="run"):
+        jax.block_until_ready(fn(x))
+    obs.snapshot()                      # {meta, spans, metrics}
+    obs.write_chrome_trace("out.trace.json")   # perfetto-loadable
+"""
+from . import export, metrics, timing, trace  # noqa: F401
+from .export import (  # noqa: F401
+    chrome_trace,
+    snapshot,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+from .metrics import counter, gauge, histogram  # noqa: F401
+from .timing import TimingStats, time_jitted, time_once  # noqa: F401
+from .trace import enabled, set_enabled, span, traced  # noqa: F401
+
+__all__ = [
+    "TimingStats",
+    "chrome_trace",
+    "counter",
+    "enabled",
+    "export",
+    "gauge",
+    "histogram",
+    "metrics",
+    "set_enabled",
+    "snapshot",
+    "span",
+    "time_jitted",
+    "time_once",
+    "timing",
+    "trace",
+    "traced",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -1,0 +1,171 @@
+"""Export sinks for the observability layer (DESIGN.md §13).
+
+Three consumers, three shapes:
+
+* :func:`snapshot` — one JSON-ready dict ``{meta, spans, metrics}``, the
+  programmatic API (tests, the serve benchmark, future planner cost
+  models read this).
+* :func:`write_jsonl` — line-oriented sink (one ``{"type": ...}`` object
+  per line: ``meta``, then every span, then every metric) for log
+  shippers and offline analysis.
+* :func:`chrome_trace` / :func:`write_chrome_trace` — Chrome trace-event
+  JSON (``traceEvents`` with ``ph: "X"`` complete events), loadable in
+  ``chrome://tracing`` and perfetto. Span kinds become categories, so
+  trace-time (planning/lowering) and run-time spans are separately
+  filterable.
+
+``REPRO_OBS_EXPORT=<path>`` auto-writes at interpreter exit when obs is
+on: ``*.jsonl`` selects the JSONL sink, anything else the Chrome trace.
+
+:func:`validate_chrome_trace` is the schema check CI gates the exported
+trace against — it returns a list of violations (empty = valid) instead
+of raising, so callers can aggregate.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import time
+from typing import List, Optional
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+_EXPORT_ENV = "REPRO_OBS_EXPORT"
+
+
+def _meta() -> dict:
+    import jax
+
+    return {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "pid": os.getpid(),
+        "platform": jax.default_backend(),
+        "dropped_spans": _trace.dropped(),
+    }
+
+
+def snapshot() -> dict:
+    """Everything recorded so far: ``{meta, spans, metrics}``."""
+    return {
+        "meta": _meta(),
+        "spans": [sp.to_dict() for sp in _trace.spans()],
+        "metrics": _metrics.snapshot(),
+    }
+
+
+def write_jsonl(path: str, snap: Optional[dict] = None) -> str:
+    """One JSON object per line: meta, spans, metrics."""
+    snap = snap if snap is not None else snapshot()
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "meta", **snap["meta"]}) + "\n")
+        for sp in snap["spans"]:
+            f.write(json.dumps({"type": "span", **sp}) + "\n")
+        for m in snap["metrics"].values():
+            f.write(json.dumps({"type": "metric", **m}) + "\n")
+    return path
+
+
+def chrome_trace(snap: Optional[dict] = None) -> dict:
+    """Chrome trace-event JSON (perfetto-loadable) from recorded spans.
+
+    Spans map to ``ph: "X"`` complete events (ts/dur in µs on the
+    host-monotonic clock); metric totals ride along as one ``ph: "C"``
+    counter sample each so headline counts are visible on the timeline."""
+    snap = snap if snap is not None else snapshot()
+    pid = snap["meta"]["pid"]
+    events: List[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": f"repro.obs ({snap['meta']['platform']})"},
+    }]
+    t0 = min((sp["ts_us"] for sp in snap["spans"]), default=0.0)
+    for sp in snap["spans"]:
+        events.append({
+            "name": sp["name"],
+            "cat": sp["kind"],
+            "ph": "X",
+            "ts": sp["ts_us"] - t0,
+            "dur": sp["dur_us"],
+            "pid": pid,
+            "tid": sp["thread"] % (1 << 31),
+            "args": dict(sp["attrs"], span_id=sp["id"],
+                         parent=sp["parent"]),
+        })
+    for name, m in snap["metrics"].items():
+        if m["kind"] != "counter":
+            continue
+        total = sum(s["value"] for s in m["series"])
+        events.append({
+            "name": name, "ph": "C", "ts": 0.0, "pid": pid, "tid": 0,
+            "args": {"total": total},
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, snap: Optional[dict] = None) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(snap), f)
+        f.write("\n")
+    return path
+
+
+def validate_chrome_trace(obj: dict) -> List[str]:
+    """Schema check for the exported trace; returns violations (empty =
+    valid). Covers the invariants chrome://tracing / perfetto require:
+    a ``traceEvents`` list whose events carry name/ph/pid/tid, complete
+    (``X``) events with numeric non-negative ts/dur."""
+    errs: List[str] = []
+    if not isinstance(obj, dict):
+        return ["trace is not a JSON object"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in ev:
+                errs.append(f"{where}: missing {field!r}")
+        ph = ev.get("ph")
+        if ph not in ("X", "M", "C", "B", "E", "i"):
+            errs.append(f"{where}: unknown phase {ph!r}")
+        if ph == "X":
+            for field in ("ts", "dur"):
+                v = ev.get(field)
+                if not isinstance(v, (int, float)) or v < 0:
+                    errs.append(f"{where}: {field} not a non-negative number")
+            if not isinstance(ev.get("cat", ""), str):
+                errs.append(f"{where}: cat not a string")
+    return errs
+
+
+def _export_at_exit() -> None:  # pragma: no cover - exit hook
+    path = os.environ.get(_EXPORT_ENV)
+    if not path or not _trace.enabled():
+        return
+    try:
+        if path.endswith(".jsonl"):
+            write_jsonl(path)
+        else:
+            write_chrome_trace(path)
+    except Exception as e:  # noqa: BLE001 — never fail interpreter exit
+        print(f"[repro.obs] export to {path} failed: {e}")
+
+
+_atexit_registered = False
+
+
+def install_atexit_export() -> None:
+    """Idempotently register the ``REPRO_OBS_EXPORT`` exit hook."""
+    global _atexit_registered
+    if not _atexit_registered:
+        atexit.register(_export_at_exit)
+        _atexit_registered = True
+
+
+if os.environ.get(_EXPORT_ENV):
+    install_atexit_export()

@@ -1,0 +1,110 @@
+"""The one timing helper for jitted callables (DESIGN.md §13).
+
+Before this module, the warmup + ``block_until_ready`` + percentile
+pattern existed in four divergent copies (benchmarks/common.py, the
+planner's ``_time_call``, the serve loop, the train loop) with
+inconsistent sync semantics. Everything now routes through:
+
+* :func:`time_jitted` — warm up, then measure ``iters`` synchronized
+  calls and report p50/p95/p99 (plus mean/min/max and the raw samples).
+  This is what benchmarks and the autotuner use, and what the planner's
+  measured cost model will consume.
+* :func:`time_once` — one synchronized call, for code that times real
+  work as it happens (train steps, prefill) rather than re-running it.
+
+Both block on the *returned* pytree, so the measured interval covers
+device execution, not just dispatch. When observability is on, each
+measured region also emits a ``run`` span so timings land in the export.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import metrics
+from .trace import span
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    """Percentile summary of one measured callable (microseconds)."""
+
+    n: int
+    mean_us: float
+    p50_us: float
+    p95_us: float
+    p99_us: float
+    min_us: float
+    max_us: float
+    samples_us: Tuple[float, ...] = ()
+
+    @property
+    def p50_s(self) -> float:
+        return self.p50_us * 1e-6
+
+    def to_row(self, prefix: str = "") -> dict:
+        """The BENCH_*.json row fragment: p50/p95/p99 stamped columns."""
+        return {
+            f"{prefix}p50_us": round(self.p50_us, 1),
+            f"{prefix}p95_us": round(self.p95_us, 1),
+            f"{prefix}p99_us": round(self.p99_us, 1),
+        }
+
+    @classmethod
+    def from_samples(cls, samples_s: Sequence[float]) -> "TimingStats":
+        us = np.asarray(samples_s, np.float64) * 1e6
+        assert us.size, "at least one sample required"
+        return cls(
+            n=int(us.size),
+            mean_us=float(us.mean()),
+            p50_us=float(np.percentile(us, 50)),
+            p95_us=float(np.percentile(us, 95)),
+            p99_us=float(np.percentile(us, 99)),
+            min_us=float(us.min()),
+            max_us=float(us.max()),
+            samples_us=tuple(float(x) for x in us),
+        )
+
+
+def time_jitted(
+    fn: Callable,
+    *args,
+    warmup: int = 2,
+    iters: int = 10,
+    name: Optional[str] = None,
+    **kwargs,
+) -> TimingStats:
+    """Measure a jitted callable: warm up (compile), then ``iters``
+    host-timed synchronized calls. Returns percentile stats in µs.
+
+    ``name`` (optional) tags the emitted span and feeds the
+    ``timing.<name>`` histogram so repeated measurements accumulate."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args, **kwargs))
+    samples = []
+    with span(f"timing.{name}" if name else "timing", kind="run",
+              iters=iters):
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kwargs))
+            samples.append(time.perf_counter() - t0)
+    stats = TimingStats.from_samples(samples)
+    if name:
+        metrics.histogram(f"timing.{name}").observe(stats.p50_us)
+    return stats
+
+
+def time_once(fn: Callable, *args, **kwargs) -> Tuple[Any, float]:
+    """One synchronized call: returns ``(result, seconds)``.
+
+    Blocks on every leaf of the result, so the duration covers device
+    execution — the sync rule the train/serve loops previously each
+    implemented their own way."""
+    t0 = time.perf_counter()
+    result = fn(*args, **kwargs)
+    jax.block_until_ready(result)
+    return result, time.perf_counter() - t0

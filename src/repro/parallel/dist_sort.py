@@ -54,6 +54,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.common import np_fill, sentinel_max, stable_compact
+from repro.obs import metrics as obs_metrics
 
 #: below this total length the partition + two exchanges dominate the
 #: device-parallel merge win; plan() keeps single-device backends.
@@ -180,6 +181,11 @@ def _partition(
 
 def _a2a(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Send split-axis slice j to device j; received slices stack there."""
+    # per-device payload bytes of this exchange, recorded at trace time
+    # (one count per compilation — the interconnect-traffic figure the
+    # DIST_MIN_TOTAL cutover is meant to amortize)
+    obs_metrics.counter("dist_sort.all_to_all_bytes").inc(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize)
     return jax.lax.all_to_all(x, axis_name, split_axis=1, concat_axis=1)
 
 

@@ -15,7 +15,6 @@ Failure model (designed for 1000+ nodes, exercised here on 1):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -23,6 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import metrics as obs_metrics
+from repro.obs.timing import time_once
+from repro.obs.trace import span
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import loss_fn, model_init
@@ -97,13 +99,20 @@ def train(
     losses = []
     for step in range(start_step, tc.steps):
         batch = {k: jnp.asarray(v) for k, v in pipeline.get_batch(step).items()}
-        t0 = time.perf_counter()
         if fail_at_step is not None and step == fail_at_step:
             raise RuntimeError(f"injected fault at step {step}")
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        # one synchronized measurement per step (shared obs timing helper
+        # instead of the loop's former inline perf_counter copy): the dt
+        # feeds the StragglerMonitor and, with REPRO_OBS on, a train.step
+        # span + step-time histogram land in the export
+        with span("train.step", kind="run", step=step):
+            (params, opt_state, metrics), dt = time_once(
+                step_fn, params, opt_state, batch)
         loss = float(metrics["loss"])
-        dt = time.perf_counter() - t0
+        obs_metrics.counter("train.steps").inc()
+        obs_metrics.histogram("train.step_ms").observe(dt * 1e3)
         if mon.record(dt):
+            obs_metrics.counter("train.stragglers").inc()
             print(f"[train] STRAGGLER step {step}: {dt:.3f}s "
                   f"(median {np.median(mon.times[-50:]):.3f}s)")
         losses.append(loss)

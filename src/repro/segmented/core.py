@@ -43,6 +43,8 @@ from repro.kernels.common import (
     np_fill,
     sentinel_min,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.kernels.segmented import (
     flip_keys,
     key_sentinel,
@@ -97,6 +99,44 @@ def _class_plan(widths: Tuple[int, ...], n_segs: int, dtype):
     from repro.streaming.planner import plan_op
 
     return plan_op("segmented", widths, batch=n_segs, dtype=dtype)
+
+
+def _record_bucketing(op: str, classes, spill) -> None:
+    """Bucketing telemetry for one segmented call (trace-time: these fire
+    once per compilation, the deterministic count). ``classes``/``spill``
+    hold :class:`SizeClass` entries for sort/topk and ``(ca, cb)`` pairs
+    for merge.
+
+    The padded-slot waste fraction is the segmented analog of the paper's
+    resource column: the share of class-kernel lanes that carry sentinel
+    padding rather than data."""
+    if not obs_trace.enabled():
+        return
+
+    def slots(group) -> int:
+        if isinstance(group, tuple):  # merge pair
+            ca, cb = group
+            return ca.n * (ca.width + cb.width)
+        return group.n * group.width
+
+    def valid(group) -> int:
+        if isinstance(group, tuple):
+            return sum(group[0].lens) + sum(group[1].lens)
+        return sum(group.lens)
+
+    class_slots = sum(slots(g) for g in classes)
+    class_valid = sum(valid(g) for g in classes)
+    spill_segs = sum((g[0].n if isinstance(g, tuple) else g.n)
+                     for g in spill)
+    obs_metrics.counter("segmented.class_launches").inc(len(classes), op=op)
+    obs_metrics.counter("segmented.spill_groups").inc(len(spill), op=op)
+    obs_metrics.counter("segmented.spill_segments").inc(spill_segs, op=op)
+    obs_metrics.counter("segmented.padded_slots").inc(
+        class_slots - class_valid, op=op)
+    obs_metrics.counter("segmented.valid_slots").inc(class_valid, op=op)
+    if class_slots:
+        obs_metrics.histogram("segmented.padded_waste_frac").observe(
+            (class_slots - class_valid) / class_slots, op=op)
 
 
 def _flatten_leaves(payload, n: int):
@@ -257,6 +297,7 @@ def segment_sort_impl(
     lengths = segment_lengths(offs)
     mw = max_class_width(values.dtype)
     classes, spill = bucket_segments(lengths, mw)
+    _record_bucketing("segment_sort", classes, spill)
     encode = nan_policy == "last" and key_transformable(values.dtype)
     vext = _ext(values)
     lext = [_ext(l) for l in lanes]
@@ -360,6 +401,7 @@ def segment_merge_impl(
     lens_b = segment_lengths(offs_b)
     mw = max_class_width(a.dtype)
     classes, spill = bucket_merge_pairs(lens_a, lens_b, mw)
+    _record_bucketing("segment_merge", classes, spill)
     encode = nan_policy == "last" and key_transformable(a.dtype)
     aext, bext = _ext(a), _ext(b)
     lext = [_ext(l) for l in lanes]
@@ -509,6 +551,7 @@ def segment_topk_impl(
 
     mw = max_class_width(values.dtype)
     classes, spill = bucket_segments(lengths, mw)
+    _record_bucketing("segment_topk", classes, spill)
     encode = nan_policy == "last" and key_transformable(values.dtype)
     vext = _ext(values)
     lext = [_ext(l) for l in lanes]

@@ -4,13 +4,23 @@ The decode step (model decode + sampler) is one jitted function; the cache
 is donated every step so serving runs at fixed memory. ``serve_step`` — the
 function the decode dry-run shapes lower — is exposed separately for the
 launcher/dryrun.
+
+Timing contract (DESIGN.md §13): the decode loop keeps every sampled
+token **on device** and transfers once after a final ``block_until_ready``
+— a per-step host transfer would serialize dispatch against execution and
+the reported decode time would measure the transfer stalls, not the step
+function. Per-step latency percentiles are opt-in
+(``ServeConfig.time_steps``) because they require a sync per step; the
+decode microbenchmark (benchmarks/serve.py) uses them for the
+``BENCH_serve.json`` p50/p99 rows. Prefill and decode run under obs spans
+and feed the ``serve.*`` metrics when ``REPRO_OBS`` is on.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional, Sequence, Union
+from typing import Dict, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +28,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_cache, prefill
+from repro.obs import metrics as obs_metrics
+from repro.obs.timing import time_once
+from repro.obs.trace import span
 from .sample import sample_greedy, sample_topk
 
 
@@ -29,6 +42,10 @@ class ServeConfig:
     top_k: Union[int, Sequence[int]] = 64
     temperature: float = 1.0
     seed: int = 0
+    #: synchronize after every decode step and record per-step wall
+    #: times (returned as ``step_times_s`` + p50/p95/p99 µs). Costs one
+    #: host sync per token — benchmark mode, off in production serving.
+    time_steps: bool = False
 
 
 def make_serve_step(cfg: ModelConfig, par=None,
@@ -52,6 +69,15 @@ def make_serve_step(cfg: ModelConfig, par=None,
     return serve_step
 
 
+def _percentiles_us(times_s) -> Dict[str, float]:
+    us = np.asarray(times_s, np.float64) * 1e6
+    return {
+        "decode_step_p50_us": float(np.percentile(us, 50)),
+        "decode_step_p95_us": float(np.percentile(us, 95)),
+        "decode_step_p99_us": float(np.percentile(us, 99)),
+    }
+
+
 def generate(
     params,
     batch: Dict[str, jnp.ndarray],
@@ -68,11 +94,11 @@ def generate(
         prompt_len += cfg.frontend_len
     cache = init_cache(cfg, bsz, total)
 
-    t0 = time.perf_counter()
-    logits, cache = jax.jit(
-        functools.partial(prefill, cfg=cfg, par=par))(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    with span("serve.prefill", kind="run", batch=bsz,
+              prompt_len=prompt_len):
+        (logits, cache), t_prefill = time_once(
+            jax.jit(functools.partial(prefill, cfg=cfg, par=par)),
+            params, batch, cache)
 
     step = jax.jit(make_serve_step(cfg, par=par, top_k=sc.top_k,
                                    temperature=sc.temperature),
@@ -84,19 +110,38 @@ def generate(
         key, sub = jax.random.split(key)
         tok = sample_topk(sub, logits, k=sc.top_k,
                           temperature=sc.temperature, par=par)[:, None]
-    out = [np.asarray(tok)]
+    # device-resident token buffer: transferring (or even np.asarray-ing)
+    # inside the loop would force a sync per step and serialize dispatch
+    toks = [tok]
+    step_times = [] if sc.time_steps else None
+    n_steps = sc.max_new_tokens - 1
     t1 = time.perf_counter()
-    for i in range(sc.max_new_tokens - 1):
-        key, sub = jax.random.split(key)
-        positions = jnp.full((bsz, 1), prompt_len + i, jnp.int32)
-        tok, cache = step(params, tok, cache, positions, sub)
-        out.append(np.asarray(tok))
-    jax.block_until_ready(tok)
+    with span("serve.decode", kind="run", batch=bsz, steps=n_steps):
+        for i in range(n_steps):
+            key, sub = jax.random.split(key)
+            positions = jnp.full((bsz, 1), prompt_len + i, jnp.int32)
+            if step_times is not None:
+                (tok, cache), dt = time_once(step, params, tok, cache,
+                                             positions, sub)
+                step_times.append(dt)
+            else:
+                tok, cache = step(params, tok, cache, positions, sub)
+            toks.append(tok)
+        jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t1
-    tokens = np.concatenate(out, axis=1)
-    return {
+    tokens = np.concatenate([np.asarray(t) for t in toks], axis=1)
+    tok_per_s = bsz * max(n_steps, 1) / max(t_decode, 1e-9)
+    obs_metrics.counter("serve.requests").inc(bsz)
+    obs_metrics.counter("serve.decode_steps").inc(max(n_steps, 0))
+    obs_metrics.counter("serve.tokens").inc(int(tokens.size))
+    obs_metrics.histogram("serve.tok_per_s").observe(tok_per_s)
+    out: Dict[str, np.ndarray] = {
         "tokens": tokens,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
-        "tok_per_s": bsz * max(sc.max_new_tokens - 1, 1) / max(t_decode, 1e-9),
+        "tok_per_s": tok_per_s,
     }
+    if step_times:
+        out["step_times_s"] = np.asarray(step_times)
+        out.update(_percentiles_us(step_times))
+    return out

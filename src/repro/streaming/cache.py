@@ -23,6 +23,8 @@ import tempfile
 import threading
 from typing import Any, Dict, Optional
 
+from repro.obs import metrics as obs_metrics
+
 #: entry-format version; bump when MergePlan fields change meaning.
 #: v2 added the fused-pipeline knobs (``block``) and the VMEM-fit
 #: (non-divisor) block_batch semantics. v3 added the segmented size-class
@@ -103,8 +105,18 @@ class AutotuneCache:
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
             entry = self._entries.get(key)
-        if entry is None or entry.get("_schema") != SCHEMA_VERSION:
+        # hit / miss / stale-schema telemetry: the op is the key's first
+        # component (low-cardinality by construction), the result label is
+        # what the measured-cost planner reads to know its coverage
+        op = key.split("|", 1)[0]
+        if entry is None:
+            obs_metrics.counter("autotune.cache").inc(op=op, result="miss")
+            return None
+        if entry.get("_schema") != SCHEMA_VERSION:
+            obs_metrics.counter("autotune.cache").inc(op=op,
+                                                      result="stale_schema")
             return None  # stale-schema entries degrade to a heuristic plan
+        obs_metrics.counter("autotune.cache").inc(op=op, result="hit")
         return entry
 
     def put(self, key: str, value: Dict[str, Any]) -> None:
@@ -128,3 +140,13 @@ def default_cache() -> AutotuneCache:
     if _default is None:
         _default = AutotuneCache()
     return _default
+
+
+def set_default_cache(cache: Optional[AutotuneCache]) -> Optional[AutotuneCache]:
+    """Swap the process-default cache (``None`` resets to lazy re-init).
+    Returns the previous instance — tests point dispatch/planner lookups
+    at a temp file without monkeypatching module internals."""
+    global _default
+    prev = _default
+    _default = cache
+    return prev

@@ -40,6 +40,8 @@ from repro.kernels.common import (
     pick_merge_cols,
     resolve_interpret,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def _grid_merge2_kernel(
@@ -125,6 +127,13 @@ def grid_chunked_merge2(
     t = int(tile)
     total = na + nb
     out_tiles = -(-total // t)
+    if obs_trace.enabled():
+        # trace-time telemetry (this body runs once per compilation): the
+        # prologue DMAs two tiles per row, every later grid step one —
+        # the HBM-refill count the FLiMS carry pipeline is sized by
+        obs_metrics.counter("grid_merge.launches").inc(tile=t)
+        obs_metrics.counter("grid_merge.refill_tiles").inc(
+            bsz * (out_tiles + 1), tile=t)
     # each stream gets one all-sentinel drain tile past its (padded) tail
     la = (-(-na // t) + 1) * t
     lb = (-(-nb // t) + 1) * t

@@ -25,7 +25,6 @@ so a stale cache entry costs speed, not correctness.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
@@ -33,6 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.common import ceil_pow2, pick_merge_cols
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.timing import time_jitted
 
 from .cache import AutotuneCache, default_cache, plan_key
 
@@ -65,6 +67,11 @@ class MergePlan:
     tile: int = 512  # chunked/streaming tile size (per input)
     block: int = 0  # topk block size (0 = op default)
     source: str = "heuristic"  # 'heuristic' | 'autotune' | 'cache'
+    #: measured p50 wall time (µs) from the autotune sweep that produced
+    #: this plan; ``None`` for heuristic plans. Round-trips through the
+    #: cache (``to_entry``/``from_entry``) so the measured sample survives
+    #: into later processes — the raw material of measured-cost dispatch.
+    us: Optional[float] = None
 
     def to_entry(self, us: Optional[float] = None) -> dict:
         d = {
@@ -75,12 +82,14 @@ class MergePlan:
             "tile": self.tile,
             "block": self.block,
         }
-        if us is not None:
-            d["us"] = float(us)
+        measured = us if us is not None else self.us
+        if measured is not None:
+            d["us"] = float(measured)
         return d
 
     @classmethod
     def from_entry(cls, entry: dict, source: str = "cache") -> "MergePlan":
+        us = entry.get("us")
         return cls(
             kind=str(entry.get("kind", "loms")),
             n_cols=int(entry["n_cols"]),
@@ -89,6 +98,7 @@ class MergePlan:
             tile=int(entry.get("tile", 512)),
             block=int(entry.get("block", 0)),
             source=source,
+            us=float(us) if us is not None else None,
         )
 
 
@@ -345,6 +355,36 @@ _register_heuristic("chunked_k")(
         lengths, batch=batch, dtype=dtype))
 
 
+def estimate_vmem_bytes(
+    op: str, lengths: Sequence[int], plan: MergePlan, dtype=jnp.float32
+) -> int:
+    """Estimated on-chip working set (bytes) of ``plan`` applied to one
+    ``op`` problem — the TPU analog of the paper's LUT-usage column, and
+    the per-plan resource figure the obs layer records."""
+    lengths = tuple(int(x) for x in lengths)
+    bb = max(plan.block_batch, 1)
+    if op == "merge2":
+        return _vmem_bytes_merge2(lengths[0], lengths[1], plan.n_cols, bb,
+                                  dtype)
+    if op == "sort":
+        return _vmem_bytes_sort(lengths[0], bb, dtype)
+    if op == "kway":
+        total = sum(lengths)
+        return bb * total * total * 4
+    if op == "topk":
+        block = plan.block or 32
+        return bb * lengths[0] * (max(_itemsize(dtype), 4) + block * 4)
+    if op == "segmented":
+        if len(lengths) == 1:
+            return _vmem_bytes_sort(lengths[0], bb, dtype)
+        return _vmem_bytes_merge2(lengths[0], lengths[1], plan.n_cols, bb,
+                                  dtype)
+    if op in ("chunked2", "chunked_k"):
+        t = max(plan.tile, 1)
+        return _vmem_bytes_merge2(t, t, max(plan.n_cols, 2), bb, dtype)
+    return 0
+
+
 def plan_op(
     op: str,
     lengths: Sequence[int],
@@ -364,10 +404,17 @@ def plan_op(
     cache = cache if cache is not None else default_cache()
     key = plan_key(op, shapes=(batch,) + tuple(lengths),
                    dtype=jnp.dtype(dtype).name, k=k)
-    hit = cache.get(key)
-    if hit is not None:
-        return MergePlan.from_entry(hit, source="cache")
-    return _HEURISTICS[op](tuple(lengths), batch, dtype, k)
+    with obs_trace.span("plan_op", kind="trace", op=op):
+        hit = cache.get(key)
+        if hit is not None:
+            plan = MergePlan.from_entry(hit, source="cache")
+        else:
+            plan = _HEURISTICS[op](tuple(lengths), batch, dtype, k)
+    if obs_trace.enabled():
+        obs_metrics.counter("plan.tile_plans").inc(op=op, source=plan.source)
+        obs_metrics.histogram("plan.vmem_bytes").observe(
+            estimate_vmem_bytes(op, lengths, plan, dtype), op=op)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -376,14 +423,9 @@ def plan_op(
 
 
 def _time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)) * 1e6  # us
+    """p50 µs of one candidate, via the shared obs timing helper (the
+    planner's former private copy of the warmup+sync pattern)."""
+    return time_jitted(fn, *args, warmup=warmup, iters=iters).p50_us
 
 
 def _sorted_rows(rng, batch, n, dtype):
@@ -438,11 +480,18 @@ def _autotune(
     if not cands:
         return fallback
     best, best_us = None, float("inf")
-    for plan in cands:
-        us = _time_call(runner(plan), iters=iters)
-        if us < best_us:
-            best, best_us = plan, us
-    cache.put(key, best.to_entry(best_us))
+    with obs_trace.span(f"autotune.{op}", kind="run",
+                        candidates=len(cands)):
+        for plan in cands:
+            us = _time_call(runner(plan), iters=iters)
+            if us < best_us:
+                best, best_us = plan, us
+    # the measured p50 persists with the winner: plan_op cache hits carry
+    # it back out (MergePlan.us) and decision_table() surfaces it
+    best = dataclasses.replace(best, us=best_us)
+    cache.put(key, best.to_entry())
+    obs_metrics.counter("autotune.sweeps").inc(op=op)
+    obs_metrics.histogram("autotune.best_us").observe(best_us, op=op)
     return best
 
 

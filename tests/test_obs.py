@@ -1,0 +1,390 @@
+"""repro.obs: spans, metrics, export, timing — and the no-op guarantees.
+
+The load-bearing contracts (DESIGN.md §13):
+
+* with ``REPRO_OBS`` unset, instrumentation is invisible — identical
+  jaxpr op counts, bit-identical outputs, sub-µs per-call overhead;
+* trace-time metrics count *compilations*, so they are deterministic
+  under jit retracing;
+* the exported Chrome trace passes its own schema check;
+* measured autotune wall time round-trips through the cache and
+  surfaces in ``decision_table``.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+import repro.obs as obs
+from repro.obs import export, metrics, timing, trace
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture
+def obs_on():
+    prev = obs.set_enabled(True)
+    trace.clear()
+    metrics.reset()
+    yield
+    trace.clear()
+    metrics.reset()
+    obs.set_enabled(prev)
+
+
+@pytest.fixture
+def obs_off():
+    prev = obs.set_enabled(False)
+    yield
+    obs.set_enabled(prev)
+
+
+# ---------------------------------------------------------------- spans
+
+
+def test_span_nesting_records_parent_ids(obs_on):
+    with obs.span("outer", kind="run", a=1):
+        with obs.span("inner", kind="trace"):
+            pass
+        with obs.span("inner2", kind="run"):
+            pass
+    got = {sp.name: sp for sp in trace.spans()}
+    assert set(got) == {"outer", "inner", "inner2"}
+    assert got["inner"].parent_id == got["outer"].span_id
+    assert got["inner2"].parent_id == got["outer"].span_id
+    assert got["outer"].parent_id is None
+    assert got["outer"].attrs == {"a": 1}
+    assert got["inner"].kind == "trace" and got["outer"].kind == "run"
+    # children complete (and are recorded) before the parent
+    assert [sp.name for sp in trace.spans()] == ["inner", "inner2", "outer"]
+
+
+def test_span_disabled_is_shared_null_context(obs_off):
+    a, b = obs.span("x"), obs.span("y", kind="trace")
+    assert a is b  # one preallocated null object, no per-call state
+    with a:
+        pass
+    assert trace.spans() == ()
+
+
+def test_traced_decorator(obs_on):
+    @obs.traced("my.fn", kind="run")
+    def fn(x):
+        return x + 1
+
+    assert fn(1) == 2
+    assert [sp.name for sp in trace.spans()] == ["my.fn"]
+
+
+def test_span_clear_resets_buffer_and_dropped(obs_on):
+    with obs.span("s"):
+        pass
+    assert len(trace.spans()) == 1
+    trace.clear()
+    assert trace.spans() == () and trace.dropped() == 0
+
+
+# -------------------------------------------------------------- metrics
+
+
+def test_counter_gauge_histogram_snapshot(obs_on):
+    metrics.counter("c", help="a counter").inc(op="sort")
+    metrics.counter("c").inc(2, op="sort")
+    metrics.counter("c").inc(op="merge")
+    metrics.gauge("g").set(7.5, dev="cpu")
+    h = metrics.histogram("h")
+    for v in range(100):
+        h.observe(float(v))
+
+    assert metrics.counter("c").value(op="sort") == 3
+    assert metrics.counter("c").total() == 4
+    assert metrics.gauge("g").value(dev="cpu") == 7.5
+
+    snap = metrics.snapshot()
+    assert snap["c"]["kind"] == "counter" and snap["c"]["help"] == "a counter"
+    hs = snap["h"]["series"][0]
+    assert hs["count"] == 100 and hs["min"] == 0.0 and hs["max"] == 99.0
+    assert hs["p50"] <= hs["p95"] <= hs["p99"] <= hs["max"]
+
+
+def test_metrics_disabled_are_inert(obs_off):
+    metrics.reset()
+    metrics.counter("dead").inc(5)
+    metrics.gauge("deadg").set(1.0)
+    metrics.histogram("deadh").observe(2.0)
+    assert metrics.counter("dead").total() == 0
+    assert metrics.gauge("deadg").value() is None
+    assert metrics.histogram("deadh").stats() is None
+    metrics.reset()
+
+
+def test_metric_kind_collision_asserts(obs_on):
+    metrics.counter("kc")
+    with pytest.raises(AssertionError):
+        metrics.gauge("kc")
+
+
+def test_trace_time_counters_count_compilations_not_calls(obs_on):
+    """Calling a jitted fn 3x with one shape traces once -> counter 1;
+    a new shape retraces -> 2. Deterministic under retracing, by design."""
+    fn = jax.jit(lambda v: repro.sort(v))
+    x = jnp.asarray(RNG.normal(size=(2, 64)).astype(np.float32))
+    before = metrics.counter("plan.decisions").total()
+    for _ in range(3):
+        fn(x).block_until_ready()
+    assert metrics.counter("plan.decisions").total() == before + 1
+    y = jnp.asarray(RNG.normal(size=(2, 128)).astype(np.float32))
+    fn(y).block_until_ready()
+    assert metrics.counter("plan.decisions").total() == before + 2
+
+
+def test_autotune_cache_hit_miss_counters(obs_on, tmp_path):
+    from repro.streaming.cache import AutotuneCache, plan_key
+
+    cache = AutotuneCache(path=str(tmp_path / "at.json"))
+    key = plan_key("sort", shapes=(4, 128), dtype="float32")
+    assert cache.get(key) is None
+    c = metrics.counter("autotune.cache")
+    assert c.value(op="sort", result="miss") == 1
+    cache.put(key, {"kind": "loms", "n_cols": 8, "block_batch": 4,
+                    "use_mxu": False})
+    assert cache.get(key) is not None
+    assert c.value(op="sort", result="hit") == 1
+    # stale-schema entries are counted and ignored
+    cache._entries[key]["_schema"] = -1
+    assert cache.get(key) is None
+    assert c.value(op="sort", result="stale_schema") == 1
+
+
+def test_segmented_bucketing_counters(obs_on):
+    lengths = [8, 8, 16, 5, 64]
+    offs = tuple(np.concatenate([[0], np.cumsum(lengths)]).tolist())
+    x = jnp.asarray(RNG.normal(size=(offs[-1],)).astype(np.float32))
+    repro.segment_sort(x, offs, backend="segmented")
+    assert metrics.counter("segmented.class_launches").total() > 0
+    padded = metrics.counter("segmented.padded_slots").total()
+    valid = metrics.counter("segmented.valid_slots").total()
+    assert padded >= 0 and valid > 0
+    st = metrics.histogram("segmented.padded_waste_frac").stats(
+        op="segment_sort")
+    assert st is not None and 0.0 <= st["min"] <= st["max"] <= 1.0
+
+
+# --------------------------------------------------------------- export
+
+
+def test_snapshot_and_jsonl_schema(obs_on, tmp_path):
+    with obs.span("region", kind="run", tag="t"):
+        pass
+    metrics.counter("c").inc(op="sort")
+    snap = obs.snapshot()
+    assert set(snap) == {"meta", "spans", "metrics"}
+    assert snap["meta"]["schema"] == 1 and snap["meta"]["dropped_spans"] == 0
+    sp = snap["spans"][0]
+    assert sp["name"] == "region" and sp["kind"] == "run"
+    assert sp["dur_us"] >= 0 and sp["attrs"] == {"tag": "t"}
+
+    path = tmp_path / "out.jsonl"
+    obs.write_jsonl(str(path), snap)
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [ln["type"] for ln in lines] == ["meta", "span", "metric"]
+
+
+def test_chrome_trace_valid_and_loadable(obs_on, tmp_path):
+    with obs.span("outer", kind="run"):
+        with obs.span("inner", kind="trace"):
+            pass
+    metrics.counter("c").inc(3)
+    path = tmp_path / "t.trace.json"
+    obs.write_chrome_trace(str(path))
+    loaded = json.loads(path.read_text())
+    assert obs.validate_chrome_trace(loaded) == []
+    evs = {ev["name"]: ev for ev in loaded["traceEvents"]}
+    assert evs["outer"]["ph"] == "X" and evs["outer"]["cat"] == "run"
+    assert evs["inner"]["cat"] == "trace"
+    assert evs["inner"]["args"]["parent"] == evs["outer"]["args"]["span_id"]
+    assert evs["c"]["ph"] == "C" and evs["c"]["args"]["total"] == 3
+
+
+def test_validate_chrome_trace_catches_violations():
+    assert export.validate_chrome_trace([]) == ["trace is not a JSON object"]
+    assert export.validate_chrome_trace({}) == [
+        "traceEvents missing or not a list"]
+    errs = export.validate_chrome_trace({"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 1, "ts": -1.0, "dur": "x"},
+        {"name": "ok", "ph": "Z", "pid": 1, "tid": 1},
+    ]})
+    assert any("missing 'name'" in e for e in errs)
+    assert any("ts not a non-negative number" in e for e in errs)
+    assert any("dur not a non-negative number" in e for e in errs)
+    assert any("unknown phase 'Z'" in e for e in errs)
+
+
+# --------------------------------------------------------------- timing
+
+
+def test_time_jitted_stats_ordering(obs_on):
+    fn = jax.jit(lambda v: jnp.sort(v, axis=-1))
+    x = jnp.asarray(RNG.normal(size=(4, 256)).astype(np.float32))
+    st = timing.time_jitted(fn, x, warmup=1, iters=5, name="unit")
+    assert st.n == 5 and len(st.samples_us) == 5
+    assert st.min_us <= st.p50_us <= st.p95_us <= st.p99_us <= st.max_us
+    assert st.p50_s == pytest.approx(st.p50_us * 1e-6)
+    row = st.to_row()
+    assert set(row) == {"p50_us", "p95_us", "p99_us"}
+    assert metrics.histogram("timing.unit").stats()["count"] == 1
+    assert any(sp.name == "timing.unit" for sp in trace.spans())
+
+
+def test_time_once_blocks_and_returns_result():
+    fn = jax.jit(lambda v: v * 2)
+    x = jnp.ones((8,), jnp.float32)
+    out, dt = timing.time_once(fn, x)
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((8,)))
+    assert dt > 0
+
+
+# ------------------------------------------------- disabled-path no-ops
+
+
+def _eqn_count(fn, *args) -> int:
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            n += 1
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    n += walk(v.jaxpr)
+                elif isinstance(v, (list, tuple)):
+                    for vi in v:
+                        if hasattr(vi, "jaxpr"):
+                            n += walk(vi.jaxpr)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _obs_cases():
+    x = jnp.asarray(RNG.normal(size=(4, 128)).astype(np.float32))
+    lists = [jnp.sort(jnp.asarray(
+        RNG.normal(size=(4, n)).astype(np.float32)), -1) for n in (64, 96, 32)]
+    offs = (0, 16, 80, 128)
+    seg = jnp.asarray(RNG.normal(size=(offs[-1],)).astype(np.float32))
+    return [
+        ("sort", lambda: repro.sort(x)),
+        ("merge_k", lambda: repro.merge_k(lists)),
+        ("segment_topk", lambda: repro.segment_topk(
+            seg, offs, 8, backend="segmented")[0]),
+    ]
+
+
+def test_obs_is_invisible_to_lowering_and_results():
+    """Enabled vs disabled: same XLA-level op count, bit-identical values
+    — the acceptance gate that REPRO_OBS never changes computation."""
+    for name, fn in _obs_cases():
+        prev = obs.set_enabled(False)
+        try:
+            ops_off = _eqn_count(fn)
+            val_off = np.asarray(jax.jit(fn)())
+            obs.set_enabled(True)
+            ops_on = _eqn_count(fn)
+            val_on = np.asarray(jax.jit(fn)())
+        finally:
+            obs.set_enabled(prev)
+            trace.clear()
+            metrics.reset()
+        assert ops_on == ops_off, f"{name}: obs changed jaxpr op count"
+        assert np.array_equal(val_on, val_off, equal_nan=True), (
+            f"{name}: obs changed results")
+
+
+def test_disabled_span_overhead_under_5us(obs_off):
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("hot", kind="run", arg=1):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 5e-6, f"disabled span costs {per_call * 1e6:.2f}us/call"
+
+
+# ----------------------------------------- measured-cost plumbing (us)
+
+
+def test_merge_plan_us_roundtrip(tmp_path):
+    from repro.streaming.planner import MergePlan
+
+    plan = MergePlan(kind="loms", n_cols=8, block_batch=4, use_mxu=False,
+                     tile=512, block=0, source="autotune", us=12.5)
+    entry = plan.to_entry()
+    assert entry["us"] == 12.5
+    back = MergePlan.from_entry(entry)
+    assert back.us == 12.5
+    assert MergePlan.from_entry({k: v for k, v in entry.items()
+                                 if k != "us"}).us is None
+    # explicit us= wins over the field
+    assert plan.to_entry(us=99.0)["us"] == 99.0
+
+
+def test_decision_table_surfaces_tuned_us(tmp_path):
+    from repro.api.dispatch import decision_table
+    from repro.streaming.cache import (AutotuneCache, plan_key,
+                                       set_default_cache)
+
+    cache = AutotuneCache(path=str(tmp_path / "at.json"))
+    # the decision_table sort case: batch=8, length 1024, float32
+    key = plan_key("sort", shapes=(8, 1024), dtype="float32")
+    cache.put(key, {"kind": "loms", "n_cols": 8, "block_batch": 8,
+                    "use_mxu": False, "us": 42.0})
+    prev = set_default_cache(cache)
+    try:
+        rows = decision_table(device="cpu")
+    finally:
+        set_default_cache(prev)
+    assert all("tuned_us" in r for r in rows)
+    tuned = {r["problem"]: r["tuned_us"] for r in rows}
+    assert tuned["sort[1024] b=8 float32 (cpu)"] == 42.0
+    # untuned points stay None rather than inventing numbers
+    assert tuned["merge[512x512] b=8 float32 (cpu)"] is None
+
+
+def test_estimate_vmem_bytes_positive_and_monotone():
+    from repro.streaming.planner import MergePlan, estimate_vmem_bytes
+
+    plan = MergePlan(kind="loms", n_cols=8, block_batch=4, use_mxu=False)
+    small = estimate_vmem_bytes("merge2", (256, 256), plan)
+    large = estimate_vmem_bytes("merge2", (4096, 4096), plan)
+    assert 0 < small < large
+    for op, lens in (("sort", (1024,)), ("kway", (64, 96, 32)),
+                     ("topk", (4096,))):
+        assert estimate_vmem_bytes(op, lens, plan) > 0
+
+
+# ------------------------------------------------------------- serving
+
+
+def test_generate_time_steps_percentiles_match_greedy():
+    from repro.configs import get_smoke_config
+    from repro.models import model_init
+    from repro.serving.engine import ServeConfig, generate
+
+    cfg = get_smoke_config("qwen3-8b")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)}
+    base = generate(params, batch, cfg,
+                    ServeConfig(max_new_tokens=4, temperature=0.0))
+    timed = generate(params, batch, cfg,
+                     ServeConfig(max_new_tokens=4, temperature=0.0,
+                                 time_steps=True))
+    np.testing.assert_array_equal(base["tokens"], timed["tokens"])
+    assert "decode_step_p50_us" not in base
+    assert (timed["decode_step_p50_us"] <= timed["decode_step_p95_us"]
+            <= timed["decode_step_p99_us"])
+    assert len(timed["step_times_s"]) == 3  # max_new_tokens - 1 steps
