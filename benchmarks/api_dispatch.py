@@ -60,21 +60,68 @@ def dispatch_overhead():
          "schedules.topk direct")
 
 
+def measure_routes():
+    """Feed the measured-cost dispatcher: time the capable single-device
+    backends on representative shapes and record the samples
+    (repro.api.dispatch.record_route_us). Subsequent ``plan()`` calls for
+    those exact points then rank on the measurements instead of the
+    static ladder — the decision table marks such rows source=measured."""
+    from repro.api.dispatch import record_route_us
+    from repro.api.spec import SortSpec
+    from repro.api.registry import get_backend
+
+    rng = np.random.default_rng(0)
+    dev = jax.default_backend()
+    points = [
+        ("merge", {"lengths": (256, 256), "batch": 8}),
+        ("topk", {"lengths": (4096,), "batch": 8, "k": 64}),
+    ]
+    for op, kw in points:
+        spec = SortSpec(op=op, dtype="float32", device=dev, **kw)
+        if op == "merge":
+            a = jnp.sort(jnp.asarray(
+                rng.standard_normal((kw["batch"], kw["lengths"][0])),
+                jnp.float32), -1)
+            b = jnp.sort(jnp.asarray(
+                rng.standard_normal((kw["batch"], kw["lengths"][1])),
+                jnp.float32), -1)
+            run_be = lambda be: timeit(
+                jax.jit(lambda x, y: repro.merge(x, y, backend=be)), a, b)
+        else:
+            x = jnp.asarray(
+                rng.standard_normal((kw["batch"], kw["lengths"][0])),
+                jnp.float32)
+            run_be = lambda be: timeit(
+                jax.jit(lambda v: repro.topk(v, kw["k"], backend=be)[0]), x)
+        for be in ("pallas", "schedule", "streaming"):
+            if not get_backend(be).supports(spec):
+                continue
+            us = run_be(be) * 1e6
+            record_route_us(spec, be, us)
+            emit(f"dispatch/route_{op}_{be}", us, "measured route sample")
+
+
 def backend_table():
     print("\nbackend-choice table (repro.decision_table):")
     rows = repro.decision_table()
-    header = f"{'problem':<44} {'payload':<8} {'sharded':<8} {'backend':<10} detail"
+    header = (f"{'problem':<44} {'payload':<8} {'sharded':<8} "
+              f"{'backend':<10} {'source':<9} detail")
     print(header)
     print("-" * len(header))
     for r in rows:
         print(f"{r['problem']:<44} {str(r['payload']):<8} "
-              f"{str(r['sharded']):<8} {r['backend']:<10} {r['detail']}")
+              f"{str(r['sharded']):<8} {r['backend']:<10} "
+              f"{r['source']:<9} {r['detail']}")
 
 
-def run():
+def run(measure: bool = False):
     dispatch_overhead()
+    if measure:
+        measure_routes()
     backend_table()
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    run(measure="--measure-routes" in sys.argv)

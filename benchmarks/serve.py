@@ -20,6 +20,15 @@ timing:
   ``serve.decode`` spans and serve counters in the snapshot, and the
   exported Chrome trace (written next to the JSON) passes the
   trace-event schema check — the CI obs-enabled benchmark row.
+
+Offered-load rows (``kind="offered_load"``): Poisson arrivals drive the
+request scheduler (repro.serving.scheduler) — mixed per-request sampling
+configs through paged slots and continuous batching — and report request
+throughput plus p50/p99 request-latency and TTFT. ``--check``
+additionally gates the scheduler rows: every request drains with the
+right token count, the latency percentiles are ordered, and a sampled
+pair of requests is re-run solo through one-shot ``generate()`` and must
+match bit-for-bit (the scheduler's oracle contract).
 """
 from __future__ import annotations
 
@@ -86,6 +95,103 @@ def _run_case(model, batch_size, prompt_len, new_tokens, top_k, temperature):
     return row, failures
 
 
+#: (model, n_requests, rate req/tick, prompt_lo, prompt_hi, new_tokens,
+#:  n_slots, page_size, pages_per_slot, seed)
+LOAD_CASES = [
+    ("chatglm3-6b", 8, 0.5, 3, 12, 4, 2, 8, 4, 0),
+]
+
+
+def _run_load_case(model, n_req, rate, p_lo, p_hi, new_tokens,
+                   n_slots, page_size, pages_per_slot, seed):
+    from repro.configs import get_smoke_config
+    from repro.models import model_init
+    from repro.serving.engine import ServeConfig, generate
+    from repro.serving.scheduler import (
+        SamplingParams, ScheduledEngine, SchedulerConfig)
+
+    cfg = get_smoke_config(model)
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    # Poisson offered load: exponential inter-arrival gaps at `rate`
+    # requests per scheduler tick, floored onto the virtual tick clock
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(1.0 / rate, n_req))).astype(int)
+    plens = rng.integers(p_lo, p_hi + 1, n_req)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    sps = [SamplingParams(k=int(rng.choice([1, 4, 8])),
+                          temperature=float(rng.choice([0.0, 0.7, 1.0])),
+                          top_p=float(rng.choice([1.0, 0.9])),
+                          max_new_tokens=new_tokens, seed=int(i))
+           for i in range(n_req)]
+    sched = SchedulerConfig(n_slots=n_slots, page_size=page_size,
+                            pages_per_slot=pages_per_slot)
+    eng = ScheduledEngine(params, cfg, sched)
+    t0 = time.perf_counter()
+    rids = [eng.submit(p, sp, arrival=int(a))
+            for p, sp, a in zip(prompts, sps, arrivals)]
+    out = eng.run()
+    wall = time.perf_counter() - t0
+    lat_ms = np.asarray([(eng.requests[r].t_finish - eng.requests[r].t_submit)
+                         * 1e3 for r in rids])
+    ttft_ms = np.asarray([(eng.requests[r].t_first - eng.requests[r].t_submit)
+                          * 1e3 for r in rids])
+    total_toks = sum(len(v) for v in out.values())
+    row = {
+        "kind": "offered_load",
+        "model": model,
+        "n_requests": n_req,
+        "rate_per_tick": rate,
+        "n_slots": n_slots,
+        "page_size": page_size,
+        "pages_per_slot": pages_per_slot,
+        "ticks": eng.t,
+        "throughput_tok_per_s": round(total_toks / max(wall, 1e-9), 2),
+        "req_p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+        "req_p99_ms": round(float(np.percentile(lat_ms, 99)), 2),
+        "ttft_p50_ms": round(float(np.percentile(ttft_ms, 50)), 2),
+        "ttft_p99_ms": round(float(np.percentile(ttft_ms, 99)), 2),
+        "platform": jax.default_backend(),
+    }
+    failures = []
+    if sorted(out) != sorted(rids):
+        failures.append(f"{model}: offered-load drain incomplete")
+    for rid in rids:
+        if rid in out and out[rid].shape != (new_tokens,):
+            failures.append(f"{model}: rid {rid} token count {out[rid].shape}")
+    if not (row["req_p50_ms"] <= row["req_p99_ms"]):
+        failures.append(f"{model}: request latency percentiles not ordered")
+    if not (row["ttft_p50_ms"] <= row["ttft_p99_ms"]):
+        failures.append(f"{model}: TTFT percentiles not ordered")
+    # the oracle gate: a sampled pair of scheduled requests must match a
+    # solo one-shot generate() bit for bit (equal cache capacity)
+    for rid in rids[:2]:
+        sp = sps[rids.index(rid)]
+        sc = ServeConfig(max_new_tokens=sp.max_new_tokens, top_k=sp.k,
+                         top_p=sp.top_p, temperature=sp.temperature,
+                         seed=sp.seed, cache_len=sched.slot_capacity)
+        solo = generate(params, {"tokens": prompts[rids.index(rid)][None]},
+                        cfg, sc)["tokens"][0]
+        if not np.array_equal(out[rid], solo):
+            failures.append(
+                f"{model}: rid {rid} scheduler tokens differ from solo "
+                f"generate ({out[rid].tolist()} vs {solo.tolist()})")
+    return row, failures
+
+
+def collect_load_rows():
+    rows, failures = [], []
+    for case in LOAD_CASES:
+        row, fails = _run_load_case(*case)
+        rows.append(row)
+        failures += fails
+        emit(f"serve_load_{case[0]}_n{case[1]}", row["req_p50_ms"] * 1e3,
+             f"tok/s {row['throughput_tok_per_s']} "
+             f"p99 {row['req_p99_ms']}ms ttft50 {row['ttft_p50_ms']}ms")
+    return rows, failures
+
+
 def write_serve_json(rows) -> str:
     path = os.path.abspath(BENCH_SERVE_JSON)
     payload = {
@@ -148,6 +254,9 @@ def collect_rows():
 
 def run():
     rows, failures = collect_rows()
+    lrows, lfails = collect_load_rows()
+    rows += lrows
+    failures += lfails
     if rows:
         path = write_serve_json(rows)
         print(f"# wrote {path}", file=sys.stderr)
@@ -158,6 +267,9 @@ def run():
 
 def main(check: bool = False) -> int:
     rows, failures = collect_rows()
+    lrows, lfails = collect_load_rows()
+    rows += lrows
+    failures += lfails
     if check:
         _obs_smoke(failures)
     if rows:

@@ -64,11 +64,17 @@ from .spec import BACKEND_AUTO, SortSpec
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    """One routing outcome: backend name, kernel detail, human reason."""
+    """One routing outcome: backend name, kernel detail, human reason.
+
+    ``source`` records how the backend was picked: ``"rule"`` (the static
+    ladder) or ``"measured"`` (a faster measured route sample overrode the
+    rule). ``measured_us`` carries the winning sample when one existed."""
 
     backend: str
     detail: str = ""
     reason: str = ""
+    source: str = "rule"
+    measured_us: Optional[float] = None
 
 
 def _merge2_fits_vmem(spec: SortSpec) -> bool:
@@ -151,11 +157,13 @@ def plan(spec: SortSpec, par=None) -> Decision:
     predicate check."""
     with obs_trace.span("plan", kind="trace", op=spec.op):
         dec = _resolve(spec, par)
+        dec = _measured_override(spec, dec)
     if obs_trace.enabled():
         obs_metrics.counter("plan.decisions").inc(
             op=spec.op, backend=dec.backend, detail=dec.detail,
             device=spec.device or "?", segmented=spec.segmented,
             sharded=spec.sharded, payload=spec.has_payload,
+            source=dec.source,
         )
     return dec
 
@@ -277,6 +285,101 @@ def _resolve(spec: SortSpec, par=None) -> Decision:
     return Decision("schedule", "loms_kway", f"{spec.device or 'non-TPU'} host")
 
 
+# ---------------------------------------------------------------------------
+# measured-cost dispatch: recorded route timings override the static ladder
+# ---------------------------------------------------------------------------
+
+#: single-device backends the measured ranking may choose between
+_MEASURED_CANDIDATES = ("pallas", "schedule", "streaming")
+
+
+def measured_dispatch_enabled() -> bool:
+    """``REPRO_MEASURED_DISPATCH=0`` pins routing to the static rules."""
+    import os
+
+    return os.environ.get("REPRO_MEASURED_DISPATCH", "1") != "0"
+
+
+def _route_key(spec: SortSpec, backend: str) -> str:
+    """Cache key for one (op, shapes, dtype, k, payload, platform, backend)
+    route sample. The platform rides in the key's backend tag so TPU and
+    CPU timings never rank against each other."""
+    import jax
+
+    from repro.streaming.cache import plan_key
+
+    tag = (f"{jax.default_backend()}:"
+           f"{'payload' if spec.has_payload else 'plain'}:{backend}")
+    return plan_key(f"route_{spec.op}",
+                    shapes=(spec.batch,) + tuple(spec.lengths),
+                    dtype=spec.dtype, k=spec.k, backend=tag)
+
+
+def record_route_us(spec: SortSpec, backend: str, us: float) -> None:
+    """Record one measured wall-time sample (µs) for running ``spec``
+    through ``backend``. Keeps the fastest sample seen — a robust
+    estimator under timer noise, and monotone: a route can only get
+    *preferred* by measuring it faster. Benchmarks are the intended
+    writers (``benchmarks/api_dispatch.py --measure-routes``); the samples
+    persist in the autotune cache alongside the kernel tuning points."""
+    from repro.streaming.cache import default_cache
+
+    cache = default_cache()
+    key = _route_key(spec, backend)
+    prev = cache.get(key)
+    best = float(us)
+    if prev is not None and "us" in prev:
+        best = min(best, float(prev["us"]))
+    cache.put(key, {"us": best, "backend": backend, "op": spec.op})
+
+
+def measured_route_us(spec: SortSpec, backend: str) -> Optional[float]:
+    """Fastest recorded sample for routing ``spec`` via ``backend``."""
+    from repro.streaming.cache import default_cache
+
+    entry = default_cache().get(_route_key(spec, backend))
+    if entry is None or "us" not in entry:
+        return None
+    return float(entry["us"])
+
+
+def _measured_override(spec: SortSpec, dec: Decision) -> Decision:
+    """Prefer the fastest *measured* candidate over the static rule.
+
+    Engages only for auto, single-device, non-segmented specs, and only
+    when at least two capable backends have recorded samples for this
+    exact (op, shapes, dtype, k, payload, platform) point — one sample
+    can't rank alternatives. Candidates respect the same escape hatches
+    as the rules (a fused-pipeline opt-out also removes the fused pallas
+    rows from the measured ranking)."""
+    if (not measured_dispatch_enabled() or spec.backend != BACKEND_AUTO
+            or spec.segmented or spec.sharded or dec.backend == "sharded"):
+        return dec
+    samples = {}
+    for b in _MEASURED_CANDIDATES:
+        if (b == "pallas" and not _fused_on()
+                and (spec.op == "sort" or spec.needs_perm)):
+            continue
+        if not get_backend(b).supports(spec):
+            continue
+        us = measured_route_us(spec, b)
+        if us is not None:
+            samples[b] = us
+    if len(samples) < 2:
+        return dec
+    winner = min(samples, key=samples.get)
+    if winner == dec.backend:
+        return dataclasses.replace(dec, measured_us=samples[winner])
+    runner_b, runner_us = min(
+        ((b, u) for b, u in samples.items() if b != winner),
+        key=lambda kv: kv[1])
+    return dataclasses.replace(
+        dec, backend=winner, detail="measured",
+        reason=(f"measured {samples[winner]:.1f}µs via {winner} beats "
+                f"{runner_b} {runner_us:.1f}µs (rule chose {dec.backend})"),
+        source="measured", measured_us=samples[winner])
+
+
 def _tuned_us(spec: SortSpec) -> Optional[float]:
     """Cached measured wall time (µs) for the spec's kernel tuning point,
     if an autotune sweep ever ran it on this platform. Surfaces the
@@ -348,6 +451,8 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
             "backend": dec.backend,
             "detail": dec.detail,
             "reason": dec.reason,
+            "source": dec.source,
+            "measured_us": dec.measured_us,
             "tuned_us": _tuned_us(spec),
         })
     return rows

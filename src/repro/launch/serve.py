@@ -2,6 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16 --top-k 16
+
+Ragged prompts (attention-cache families): ``--ragged`` draws a random
+length per request in [1, prompt_len], right-pads the batch, and prefill
+gathers each row's logits at its own last valid position — bit-identical
+per row to running the unpadded prompt alone.
+
+Engine mode: ``--engine`` routes the same request mix through the
+continuous-batching scheduler (admission queue, paged KV-cache slots,
+disaggregated prefill/decode) instead of one-shot ``generate()``.
 """
 from __future__ import annotations
 
@@ -14,9 +23,18 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ragged", action="store_true",
+                    help="random per-request prompt lengths in "
+                         "[1, prompt_len], right-padded per bucket")
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--top-k", type=int, default=16)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the request scheduler "
+                         "(paged slots + continuous batching)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     import jax
@@ -31,14 +49,54 @@ def main():
     assert not cfg.is_encoder_only, f"{cfg.name} is encoder-only: no decode"
     params, _ = model_init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    lengths = None
+    if args.ragged:
+        assert cfg.family in ("dense", "moe"), \
+            f"--ragged needs attention caches, not {cfg.family}"
+        lengths = rng.integers(1, args.prompt_len + 1, args.batch).astype(np.int32)
+    tokens = rng.integers(0, cfg.vocab_size,
+                          (args.batch, args.prompt_len)).astype(np.int32)
+    if lengths is not None:
+        for r, n in enumerate(lengths):  # right-pad past each valid length
+            tokens[r, n:] = 0
+
+    if args.engine:
+        from repro.serving.scheduler import (
+            SamplingParams, ScheduledEngine, SchedulerConfig)
+
+        assert cfg.family == "dense", \
+            "--engine bit-equality contract covers dense stacks"
+        lens = lengths if lengths is not None \
+            else np.full(args.batch, args.prompt_len, np.int32)
+        import math
+        pages = math.ceil((args.prompt_len + args.new_tokens) / args.page_size)
+        eng = ScheduledEngine(params, cfg, SchedulerConfig(
+            n_slots=args.slots, page_size=args.page_size,
+            pages_per_slot=pages))
+        rids = [eng.submit(tokens[r, :lens[r]],
+                           SamplingParams(k=args.top_k, top_p=args.top_p,
+                                          temperature=args.temperature,
+                                          max_new_tokens=args.new_tokens,
+                                          seed=r),
+                           arrival=r)
+                for r in range(args.batch)]
+        out = eng.run()
+        print(f"[serve] engine drained {len(out)} requests in {eng.t} ticks "
+              f"({args.slots} slots, page {args.page_size})")
+        for rid in rids[:2]:
+            print(f"  rid {rid}: {out[rid]}")
+        return
+
+    batch = {"tokens": jnp.asarray(tokens)}
+    if lengths is not None:
+        batch["lengths"] = lengths
     if cfg.family == "vlm":
         batch["patches"] = jnp.asarray(
             rng.standard_normal((args.batch, cfg.frontend_len, cfg.frontend_dim)),
             jnp.float32)
     out = generate(params, batch, cfg,
                    ServeConfig(max_new_tokens=args.new_tokens, top_k=args.top_k,
+                               top_p=args.top_p,
                                temperature=args.temperature))
     print(f"[serve] tokens shape {out['tokens'].shape} "
           f"prefill {out['prefill_s']*1e3:.1f}ms "

@@ -1,2 +1,2 @@
 """repro.models — model zoo for the assigned architectures."""
-from .model import decode_step, forward, init_cache, loss_fn, model_init, prefill  # noqa: F401
+from .model import cache_with_lengths, decode_step, forward, init_cache, loss_fn, model_init, prefill  # noqa: F401

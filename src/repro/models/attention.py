@@ -201,13 +201,32 @@ def decode_attention(
     # fp8 caches are read through an explicit convert (fused on TPU).
     if k_cache.dtype != q.dtype:
         k_cache = k_cache.astype(q.dtype)
-    logits = jnp.einsum("bhgd,bhds->bhgs", q, k_cache).astype(jnp.float32) * scale
+    if v_cache.dtype != q.dtype:
+        v_cache = v_cache.astype(q.dtype)
     pos = jnp.arange(s)
+    if par is None:
+        # per-row body via lax.map: the body is compiled once with
+        # batch-free shapes, so a request's attention bits are invariant
+        # to the decode batch it rides in. The serving scheduler's
+        # bit-equality oracle (a request alone through generate() vs the
+        # same request in a continuous batch) depends on this — the
+        # batched einsum lets XLA pick batch-size-dependent reduction
+        # tilings that perturb last-bit results.
+        valid = jnp.broadcast_to(jnp.reshape(valid_len, (-1,)), (q.shape[0],))
+
+        def row(args):
+            qr, kr, vr, vlr = args  # (hkv,g,d) (hkv,d,S) (hkv,S,dv) ()
+            lg = jnp.einsum("hgd,hds->hgs", qr, kr).astype(jnp.float32) * scale
+            lg = jnp.where((pos < vlr)[None, None, :], lg, -1e30)
+            w = jax.nn.softmax(lg, axis=-1)
+            return jnp.einsum("hgs,hsv->hgv", w.astype(vr.dtype), vr)
+
+        out = jax.lax.map(row, (q, k_cache, v_cache, valid))
+        return out.astype(q.dtype)
+    logits = jnp.einsum("bhgd,bhds->bhgs", q, k_cache).astype(jnp.float32) * scale
     mask = pos[None, :] < jnp.reshape(valid_len, (-1, 1))
     logits = jnp.where(mask[:, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
-    if v_cache.dtype != q.dtype:
-        v_cache = v_cache.astype(q.dtype)
     out = jnp.einsum("bhgs,bhsv->bhgv", w.astype(v_cache.dtype), v_cache)
     return out.astype(q.dtype)
 
@@ -269,11 +288,18 @@ def attn_apply(
     new_cache = cache
     if mode == "decode":
         assert sq == 1 and cache is not None
-        idx = cache["pos"]  # scalar int32: slot to write
+        idx = cache["pos"]  # int32 slot to write: scalar, or (B,) per-row
         k_t = jnp.moveaxis(k, 1, -1).astype(cache["k"].dtype)  # (b,hkv,d,1)
         v_t = jnp.moveaxis(v, 1, 2).astype(cache["v"].dtype)  # (b,hkv,1,dv)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, idx, 3)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, idx, 2)
+        if jnp.ndim(idx) == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, idx, 3)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, idx, 2)
+        else:
+            # per-row write positions (paged slot views: every request sits
+            # at its own depth); scatter one column per batch row
+            rows = jnp.arange(b)
+            k_cache = cache["k"].at[rows, :, :, idx].set(k_t[..., 0])
+            v_cache = cache["v"].at[rows, :, idx, :].set(v_t[:, :, 0, :])
         new_cache = {"k": k_cache, "v": v_cache, "pos": idx + 1}
         qh = q[:, 0].reshape(b, hkv, g, hd)
         out = decode_attention(qh, k_cache, v_cache, valid_len=idx + 1, par=par)
@@ -387,10 +413,15 @@ def mla_apply(
     if mode == "decode":
         assert sq == 1 and cache is not None
         idx = cache["pos"]
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], jnp.moveaxis(ckv, 1, -1).astype(cache["ckv"].dtype), idx, 2)
-        kpe_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["kpe"], jnp.moveaxis(k_pe, 1, -1).astype(cache["kpe"].dtype), idx, 2)
+        ckv_t = jnp.moveaxis(ckv, 1, -1).astype(cache["ckv"].dtype)  # (b,l,1)
+        kpe_t = jnp.moveaxis(k_pe, 1, -1).astype(cache["kpe"].dtype)
+        if jnp.ndim(idx) == 0:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, idx, 2)
+            kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["kpe"], kpe_t, idx, 2)
+        else:
+            rows = jnp.arange(b)
+            ckv_c = cache["ckv"].at[rows, :, idx].set(ckv_t[..., 0])
+            kpe_c = cache["kpe"].at[rows, :, idx].set(kpe_t[..., 0])
         new_cache = {"ckv": ckv_c, "kpe": kpe_c, "pos": idx + 1}
         # absorbed form: score = (q_nope W_uk) . ckv + q_pe . k_pe
         q_lat = jnp.einsum("bhq,lhq->bhl", q_nope[:, 0], p["wuk"]["w"].astype(x.dtype))

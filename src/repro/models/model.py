@@ -103,14 +103,55 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return stack_cache_init(cfg, batch, max_len, dt)
 
 
-def prefill(p, batch, cache, cfg: ModelConfig, *, par=None):
+def _map_layer_caches(tree, fn):
+    """Apply ``fn`` to every per-layer attention/MLA cache dict (a dict
+    with a ``pos`` leaf) in a cache pytree, leaving other nodes alone."""
+    if isinstance(tree, dict) and "pos" in tree:
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: _map_layer_caches(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_map_layer_caches(v, fn) for v in tree)
+    return tree
+
+
+def cache_with_lengths(cache, lengths):
+    """Replace every layer cache's prefill ``pos`` with per-row valid
+    lengths (B,), so a right-padded ragged prefill leaves each row's
+    decode write index at its own prompt length instead of the padded
+    one. Stacked (scanned) layer caches carry a leading layer axis on
+    ``pos``; the vector broadcasts across it."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    def fix(lc):
+        pos = lc["pos"]
+        if pos.ndim == 0:
+            new = lengths
+        else:  # stacked: (L,) scalar-per-layer -> (L, B)
+            new = jnp.broadcast_to(lengths, pos.shape + lengths.shape)
+        return {**lc, "pos": new}
+
+    return _map_layer_caches(cache, fix)
+
+
+def prefill(p, batch, cache, cfg: ModelConfig, *, par=None, lengths=None):
     """Run the prompt through the stack, filling the cache.
 
-    Returns (last-position logits (B, V), cache)."""
+    Returns (last-position logits (B, V), cache). With ``lengths`` (B,)
+    the prompt batch is right-padded: logits are gathered per row at
+    ``lengths - 1`` (causal masking makes every valid position's
+    activations bit-identical to the unpadded run) and the cache ``pos``
+    leaves become the per-row lengths vector."""
     p = _cast_params(p, cfg)
     x = _embed_inputs(p, batch, cfg)
     x, cache = stack_apply(p["stack"], x, cfg, mode="prefill", caches=cache, par=par)
-    return _logits(p, x[:, -1:], cfg)[:, 0], cache
+    if lengths is None:
+        return _logits(p, x[:, -1:], cfg)[:, 0], cache
+    assert cfg.family not in ("vlm", "audio"), \
+        "ragged prefill covers token-only prompts"
+    lengths = jnp.asarray(lengths, jnp.int32)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+    return _logits(p, last, cfg)[:, 0], cache_with_lengths(cache, lengths)
 
 
 def decode_step(p, tokens, cache, cfg: ModelConfig, *, positions=None, par=None):

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Sequence, Union
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +40,19 @@ class ServeConfig:
     #: one int, or one per request — a continuous batch mixing sampling
     #: configs scores through the segmented ragged top-k in one launch
     top_k: Union[int, Sequence[int]] = 64
+    #: nucleus truncation within the top-k prefix; one float, or one per
+    #: request (the latter requires per-request ``top_k`` too)
+    top_p: Union[float, Sequence[float]] = 1.0
     temperature: float = 1.0
     seed: int = 0
+    #: KV-cache capacity override (must be >= prompt_len +
+    #: max_new_tokens). XLA fuses the masked decode-attention reduction
+    #: per cache length, so bit-equality across runs requires equal cache
+    #: shapes: the scheduler's oracle tests size the solo cache to the
+    #: paged slot capacity (pages_per_slot * page_size) to compare
+    #: streams bit-for-bit. Positions past the valid length carry exactly
+    #: zero attention weight, so capacity never changes the math.
+    cache_len: Optional[int] = None
     #: synchronize after every decode step and record per-step wall
     #: times (returned as ``step_times_s`` + p50/p95/p99 µs). Costs one
     #: host sync per token — benchmark mode, off in production serving.
@@ -50,7 +61,8 @@ class ServeConfig:
 
 def make_serve_step(cfg: ModelConfig, par=None,
                     top_k: Union[int, Sequence[int]] = 64,
-                    temperature: float = 1.0):
+                    temperature: float = 1.0,
+                    top_p: Union[float, Sequence[float]] = 1.0):
     """(params, tokens (B,1), cache, positions, key) -> (next (B,1), cache).
 
     ``top_k`` follows :func:`repro.serving.sample.sample_topk`: a static
@@ -63,7 +75,7 @@ def make_serve_step(cfg: ModelConfig, par=None,
             nxt = sample_greedy(logits)
         else:
             nxt = sample_topk(key, logits, k=top_k, temperature=temperature,
-                              par=par)
+                              top_p=top_p, par=par)
         return nxt[:, None], cache
 
     return serve_step
@@ -86,22 +98,41 @@ def generate(
     par=None,
 ) -> Dict[str, np.ndarray]:
     """Prefill the prompt batch then decode ``max_new_tokens`` greedily or
-    with LOMS top-k sampling. Returns tokens + timing stats."""
+    with LOMS top-k sampling. Returns tokens + timing stats.
+
+    ``batch["lengths"]`` (B,) marks right-padded ragged prompts: prefill
+    gathers each row's logits at its own last valid position and decode
+    continues from there — bit-identical per row to running the unpadded
+    prompt alone (attention-cache families only)."""
     bsz, prompt_len = batch["tokens"].shape
+    lengths = batch.get("lengths")
+    if lengths is not None:
+        assert cfg.family in ("dense", "moe"), \
+            f"ragged prompts need attention caches, not {cfg.family}"
+        lengths = np.asarray(lengths, np.int32)
+        assert lengths.shape == (bsz,) and (lengths >= 1).all() \
+            and (lengths <= prompt_len).all(), (lengths, batch["tokens"].shape)
+        batch = {k: v for k, v in batch.items() if k != "lengths"}
+        lengths = jnp.asarray(lengths)
     total = prompt_len + sc.max_new_tokens
     if cfg.family == "vlm":
         total += cfg.frontend_len
         prompt_len += cfg.frontend_len
+    if sc.cache_len is not None:
+        assert sc.cache_len >= total, (sc.cache_len, total)
+        total = sc.cache_len
     cache = init_cache(cfg, bsz, total)
 
     with span("serve.prefill", kind="run", batch=bsz,
               prompt_len=prompt_len):
         (logits, cache), t_prefill = time_once(
-            jax.jit(functools.partial(prefill, cfg=cfg, par=par)),
+            jax.jit(functools.partial(prefill, cfg=cfg, par=par,
+                                      lengths=lengths)),
             params, batch, cache)
 
     step = jax.jit(make_serve_step(cfg, par=par, top_k=sc.top_k,
-                                   temperature=sc.temperature),
+                                   temperature=sc.temperature,
+                                   top_p=sc.top_p),
                    donate_argnums=(2,))
     key = jax.random.PRNGKey(sc.seed)
     if sc.temperature <= 0.0:
@@ -109,7 +140,8 @@ def generate(
     else:
         key, sub = jax.random.split(key)
         tok = sample_topk(sub, logits, k=sc.top_k,
-                          temperature=sc.temperature, par=par)[:, None]
+                          temperature=sc.temperature, top_p=sc.top_p,
+                          par=par)[:, None]
     # device-resident token buffer: transferring (or even np.asarray-ing)
     # inside the loop would force a sync per step and serialize dispatch
     toks = [tok]
@@ -119,7 +151,10 @@ def generate(
     with span("serve.decode", kind="run", batch=bsz, steps=n_steps):
         for i in range(n_steps):
             key, sub = jax.random.split(key)
-            positions = jnp.full((bsz, 1), prompt_len + i, jnp.int32)
+            if lengths is None:
+                positions = jnp.full((bsz, 1), prompt_len + i, jnp.int32)
+            else:
+                positions = (lengths + i)[:, None]
             if step_times is not None:
                 (tok, cache), dt = time_once(step, params, tok, cache,
                                              positions, sub)

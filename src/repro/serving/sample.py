@@ -27,12 +27,54 @@ from repro.api import sort as unified_sort
 from repro.api import topk as unified_topk
 
 
+def nucleus_mask(probs_logits: jnp.ndarray, p) -> jnp.ndarray:
+    """Mask a *descending* candidate row (…, k) of scaled logits down to
+    the smallest prefix with probability mass >= p (top-1 always kept).
+    ``p`` may be a python float or a broadcastable array (per-request)."""
+    probs = jax.nn.softmax(probs_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = jnp.concatenate(
+        [jnp.ones_like(cum[..., :1], bool), cum[..., :-1] < p], axis=-1)
+    return jnp.where(keep, probs_logits, -jnp.inf)
+
+
+def scored_draw(key, vals: jnp.ndarray, temperature, top_p=None) -> jnp.ndarray:
+    """Categorical draw over descending top-k candidate *values* (…, k):
+    temperature scale, optional nucleus truncation, one draw per row.
+
+    This is the shared tail of :func:`sample_topk` and the scheduler's
+    per-slot draws — both paths must produce bit-identical tokens given
+    the same key and candidate values, so the arithmetic lives in one
+    place. ``temperature``/``top_p`` may be python floats or f32 scalars
+    (a float32 array holds the exact same value the weak-typed python
+    float converts to, so either form gives the same bits)."""
+    probs_logits = vals.astype(jnp.float32) / temperature
+    if top_p is not None:
+        probs_logits = nucleus_mask(probs_logits, top_p)
+    return jax.random.categorical(key, probs_logits, axis=-1)
+
+
+def canonical_token(logits: jnp.ndarray, vals: jnp.ndarray,
+                    choice: jnp.ndarray) -> jnp.ndarray:
+    """Map a drawn candidate back to a vocab id, canonicalizing ties.
+
+    ``vals`` (…, k) are descending candidate values from *some* top-k
+    backend; ``choice`` (…,) indexes into them. The emitted token is the
+    lowest vocab id whose logit equals the drawn value — backends may
+    order equal values differently, but the value itself (and hence this
+    token) is backend-invariant. Equality is exact: candidate values are
+    copies of logit entries in the same dtype."""
+    chosen = jnp.take_along_axis(vals, choice[..., None], axis=-1)
+    return jnp.argmax(logits == chosen, axis=-1).astype(jnp.int32)
+
+
 def sample_topk(
     key,
     logits: jnp.ndarray,  # (B, V)
     *,
     k: Union[int, Sequence[int]] = 64,
     temperature: float = 1.0,
+    top_p: Union[float, Sequence[float]] = 1.0,
     par=None,
 ) -> jnp.ndarray:
     """Top-k + temperature categorical sampling -> (B,) int32 tokens.
@@ -41,20 +83,41 @@ def sample_topk(
     sampling configs): the scoring then runs as one ragged
     ``repro.segment_topk`` call — every request's vocab row is a segment,
     per-request k, one launch per size class — instead of B separate
-    kernels or a pad-to-max-k batch."""
+    kernels or a pad-to-max-k batch.
+
+    ``top_p < 1.0`` applies nucleus truncation *within* the top-k
+    candidate prefix (the kernels hand candidates back descending, so the
+    nucleus is one cumsum — no extra sort). Per-request sequences are
+    allowed alongside per-request ``k``.
+
+    Tie canonicalization (unsharded path): the emitted token is the
+    *lowest* vocab id whose logit equals the drawn candidate value, so
+    tokens are independent of which top-k backend scored the row — the
+    blockwise/pallas kernels and the segmented CSR path may order equal
+    values differently, and the scheduler's bit-equality oracle compares
+    across them."""
     if not isinstance(k, (int, np.integer)):
+        tps = (tuple(float(x) for x in top_p)
+               if not isinstance(top_p, (int, float)) else
+               (float(top_p),) * len(tuple(k)))
         return _sample_topk_ragged(key, logits, tuple(int(x) for x in k),
-                                   temperature, par=par)
+                                   temperature, tps, par=par)
+    assert isinstance(top_p, (int, float)), \
+        "per-request top_p needs per-request k"
     if temperature <= 0.0 or k == 1:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     vals, idx = unified_topk(logits, k, par=par)
-    probs_logits = vals.astype(jnp.float32) / temperature
-    choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
-    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    choice = scored_draw(key, vals, temperature,
+                         top_p if top_p < 1.0 else None)  # (B,)
+    if par is not None:
+        # sharded logits row: avoid the full-vocab compare (a gather)
+        return jnp.take_along_axis(
+            idx, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    return canonical_token(logits, vals, choice)
 
 
 def _sample_topk_ragged(key, logits: jnp.ndarray, ks, temperature: float,
-                        par=None):
+                        top_ps=None, par=None):
     """Mixed-k continuous batch: per-request vocab top-k through the
     segmented backend, then one categorical draw over each request's own
     candidate prefix (shorter prefixes mask to -inf).
@@ -68,6 +131,9 @@ def _sample_topk_ragged(key, logits: jnp.ndarray, ks, temperature: float,
     """
     b, v = logits.shape
     assert len(ks) == b and all(1 <= x <= v for x in ks), (ks, logits.shape)
+    if top_ps is None:
+        top_ps = (1.0,) * b
+    assert len(top_ps) == b and all(0.0 < x <= 1.0 for x in top_ps), top_ps
     if temperature <= 0.0 or all(x == 1 for x in ks):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     k_max = max(ks)
@@ -92,8 +158,16 @@ def _sample_topk_ragged(key, logits: jnp.ndarray, ks, temperature: float,
     probs_logits = jnp.where(lane < cnts,
                              dense_v.astype(jnp.float32) / temperature,
                              -jnp.inf)
+    if any(p < 1.0 for p in top_ps):
+        # per-request nucleus over each row's own valid prefix: -inf pad
+        # lanes carry zero mass, so the row cumsum is the request's cumsum
+        probs_logits = nucleus_mask(
+            probs_logits, jnp.asarray(np.asarray(top_ps, np.float32))[:, None])
     choice = jax.random.categorical(key, probs_logits, axis=-1)  # (B,)
-    return jnp.take_along_axis(dense_i, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    if par is not None:
+        return jnp.take_along_axis(
+            dense_i, choice[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    return canonical_token(logits, dense_v, choice)
 
 
 def sample_greedy(logits: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,19 @@
+"""Production serving scheduler over the LOMS sampling kernels.
+
+Disaggregated prefill/decode with continuous batching: an admission
+queue feeds prompt-length-bucketed prefill batches, each admitted
+request gets a page-granular KV-cache slot from a fixed pool, and one
+persistent jitted decode step advances every occupied slot — drawing
+each request's next token through a single segmented ``segment_topk``
+launch (per-request k / top-p / temperature / seed).
+
+The bit-equality contract: every request's token stream is identical to
+running it alone through the one-shot :func:`repro.serving.engine.generate`
+with ``cache_len`` equal to the slot capacity. DESIGN.md §14 documents
+the request lifecycle and the invariants that make this hold.
+"""
+from .engine import ScheduledEngine, SchedulerConfig  # noqa: F401
+from .paged import PagedKVCache, SlotManager  # noqa: F401
+from .params import SamplingParams  # noqa: F401
+from .queue import AdmissionQueue  # noqa: F401
+from .request import Request, RequestState  # noqa: F401

@@ -1,0 +1,180 @@
+"""Paged KV-cache pool: page-granular slots over the stacked layer caches.
+
+The pool is one ``stack_cache_init(cfg, batch=n_pages, max_len=page_size)``
+body — every leaf is ``(L, P, *block)`` with a ``page_size`` sequence dim
+somewhere in ``block`` (axis per leaf name below). A *slot* is a
+``pages_per_slot``-entry row of the page table; gathering a batch of slot
+rows and merging the page axis into the sequence axis reconstructs a
+dense ``(L, ns, ..., pages_per_slot * page_size, ...)`` cache view that
+``decode_step`` consumes unchanged.
+
+Invariants (DESIGN.md §14):
+  * page 0 is reserved scratch — free page-table entries point at it, so
+    a gather is always dense and in-bounds; positions past a slot's valid
+    length carry exactly zero attention weight (the -1e30 mask underflows
+    ``exp`` to 0.0), so scratch contents never reach the math.
+  * decode writes land only in allocated pages: admission sizes the
+    allocation to ``ceil((prompt + max_new) / page_size)`` up front, so
+    ``lengths // page_size`` always indexes an owned page.
+  * the gather/scatter round-trip is bit-exact — pages are copies, the
+    merge is a reshape, and the write-back scatters the single written
+    column, so a gathered view equals the contiguous cache bit-for-bit.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+
+#: sequence axis of each cache leaf, indexed from the END of the per-page
+#: block (valid for both the per-layer (B, *block) and pooled
+#: (L, P, *block) layouts): k (B,hkv,hd,S), v (B,hkv,S,hd),
+#: ckv (B,rank,S), kpe (B,rope,S)
+_SEQ_AXIS = {"k": -1, "v": -2, "ckv": -1, "kpe": -1}
+
+
+def gather_view(leaves: Dict[str, jnp.ndarray], page_table: jnp.ndarray,
+                lengths: jnp.ndarray, page_size: int) -> Dict[str, jnp.ndarray]:
+    """Reconstruct a dense batched cache body from slot page rows.
+
+    ``page_table`` (ns, npg) int32, ``lengths`` (ns,) valid depths →
+    body dict with leaves (L, ns, ..., npg*page_size, ...) plus a
+    stacked ``pos`` of per-row lengths (the decode write index and
+    attention valid-length both read ``cache["pos"]``)."""
+    ns, npg = page_table.shape
+    flat = page_table.reshape(-1)
+    view: Dict[str, jnp.ndarray] = {}
+    n_layers = 0
+    for name, pool in leaves.items():
+        n_layers = pool.shape[0]
+        g = jnp.take(pool, flat, axis=1)
+        g = g.reshape((n_layers, ns, npg) + pool.shape[2:])
+        ax = g.ndim + _SEQ_AXIS[name]  # abs index of the page-seq axis
+        g = jnp.moveaxis(g, 2, ax - 1)  # page axis next to its seq axis
+        view[name] = g.reshape(
+            g.shape[: ax - 1] + (npg * page_size,) + g.shape[ax + 1:])
+    view["pos"] = jnp.broadcast_to(
+        jnp.reshape(lengths, (1, ns)).astype(jnp.int32), (n_layers, ns))
+    return view
+
+
+def take_col(view_leaf: jnp.ndarray, name: str,
+             positions: jnp.ndarray) -> jnp.ndarray:
+    """Extract one sequence column per row: (L, ns, *block-with-seq) at
+    per-row ``positions`` (ns,) → (L, ns, *block-without-seq)."""
+    ax = view_leaf.ndim + _SEQ_AXIS[name]
+    shape = [1] * view_leaf.ndim
+    shape[1] = -1
+    p = positions.reshape(shape).astype(jnp.int32)
+    return jnp.squeeze(jnp.take_along_axis(view_leaf, p, axis=ax), axis=ax)
+
+
+def scatter_col(pool: jnp.ndarray, name: str, col: jnp.ndarray,
+                page_ids: jnp.ndarray, offs: jnp.ndarray) -> jnp.ndarray:
+    """Write one column per slot into the pool: ``col`` (L, ns, *block-
+    without-seq) lands at (page_ids[s], offs[s]) for each slot s.
+
+    The two index arrays sit at non-adjacent axes (1 and the seq axis),
+    so numpy advanced indexing moves the broadcast slot dim to the FRONT
+    of the result — hence the moveaxis putting slots first."""
+    idx = [slice(None)] * pool.ndim
+    idx[1] = page_ids
+    idx[pool.ndim + _SEQ_AXIS[name]] = offs
+    return pool.at[tuple(idx)].set(jnp.moveaxis(col, 1, 0))
+
+
+def split_pages(prefill_leaf: jnp.ndarray, name: str, row,
+                npg: int, page_size: int) -> jnp.ndarray:
+    """Slice one prefill-cache row into page blocks for a pool write:
+    (L, bb, *block seq=blen) row → (L, npg, *block seq=page_size)."""
+    rowv = jax.lax.dynamic_index_in_dim(prefill_leaf, row, 1, keepdims=False)
+    ax = rowv.ndim + _SEQ_AXIS[name]
+    rowv = jax.lax.slice_in_dim(rowv, 0, npg * page_size, axis=ax)
+    rowv = rowv.reshape(rowv.shape[:ax] + (npg, page_size) + rowv.shape[ax + 1:])
+    return jnp.moveaxis(rowv, ax, 1)
+
+
+class PagedKVCache:
+    """Device-side page pool: the stacked cache body with batch = pages.
+
+    Only homogeneous attention stacks (cache = ``{"body": ...}``, leaf
+    names in ``_SEQ_AXIS``) are supported — that covers the dense and
+    qwen3-moe families the scheduler serves."""
+
+    def __init__(self, cfg, n_pages: int, page_size: int):
+        cache = init_cache(cfg, n_pages, page_size)
+        assert set(cache.keys()) == {"body"}, (
+            f"paged slots need a homogeneous attention stack, "
+            f"got cache groups {sorted(cache)}")
+        body = cache["body"]
+        unknown = set(body) - set(_SEQ_AXIS) - {"pos"}
+        assert not unknown, f"unsupported cache leaves: {sorted(unknown)}"
+        self.leaves: Dict[str, jnp.ndarray] = {
+            n: a for n, a in body.items() if n != "pos"}
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_layers = next(iter(self.leaves.values())).shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self.leaves.values())
+
+
+class SlotManager:
+    """Host-side slot + page bookkeeping (free lists, page table).
+
+    ``order`` picks which free slot is reused next — "fifo" (queue) or
+    "lifo" (stack). Token bits must be invariant to it (the determinism
+    tests flip it); only metrics and memory layout may differ."""
+
+    def __init__(self, n_slots: int, pages_per_slot: int, n_pages: int,
+                 order: str = "fifo"):
+        assert order in ("fifo", "lifo"), order
+        assert n_slots >= 1 and pages_per_slot >= 1
+        assert n_pages >= 1 + pages_per_slot, (
+            "pool needs the reserved scratch page plus one full slot")
+        self.n_slots = n_slots
+        self.pages_per_slot = pages_per_slot
+        self.order = order
+        self.page_table = np.zeros((n_slots, pages_per_slot), np.int32)
+        self._free_slots = deque(range(n_slots))
+        self._free_pages = deque(range(1, n_pages))  # page 0 = scratch
+        self._n_alloc: Dict[int, int] = {}
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free_pages)
+
+    def can_admit(self, npg: int) -> bool:
+        return bool(self._free_slots) and len(self._free_pages) >= npg
+
+    def alloc(self, npg: int) -> Tuple[int, np.ndarray]:
+        """Claim a slot and ``npg`` pages; unfilled page-table entries
+        stay 0 (the scratch page), keeping gathers dense."""
+        assert 0 < npg <= self.pages_per_slot, npg
+        assert self.can_admit(npg), (npg, self.free_slot_count,
+                                     self.free_page_count)
+        slot = (self._free_slots.popleft() if self.order == "fifo"
+                else self._free_slots.pop())
+        pages = np.asarray([self._free_pages.popleft() for _ in range(npg)],
+                           np.int32)
+        self.page_table[slot] = 0
+        self.page_table[slot, :npg] = pages
+        self._n_alloc[slot] = npg
+        return slot, pages
+
+    def release(self, slot: int) -> None:
+        npg = self._n_alloc.pop(slot)
+        for p in self.page_table[slot, :npg]:
+            self._free_pages.append(int(p))
+        self.page_table[slot] = 0
+        self._free_slots.append(slot)

@@ -1,0 +1,46 @@
+"""Per-request sampling parameters.
+
+``k``/``greedy``/``topp_active`` are *static* under the decode jit: the
+scheduler compiles one decode-step program per batch composition (the
+tuple of per-slot signatures), while temperature and top-p values ride
+along as f32 scalars — an f32 array holds the exact value the weak-typed
+python float converts to, so the arithmetic is bit-identical either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request samples. Mirrors the knobs of
+    :class:`repro.serving.engine.ServeConfig` at per-request granularity."""
+
+    k: int = 64
+    top_p: float = 1.0
+    temperature: float = 1.0
+    max_new_tokens: int = 16
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.k >= 1, self.k
+        assert 0.0 < self.top_p <= 1.0, self.top_p
+        assert self.max_new_tokens >= 1, self.max_new_tokens
+
+    @property
+    def greedy(self) -> bool:
+        """Mirrors ``sample_topk``'s argmax shortcut (``temperature <= 0``
+        or ``k == 1``) so scheduler draws match the solo path exactly."""
+        return self.temperature <= 0.0 or self.k == 1
+
+    @property
+    def topp_active(self) -> bool:
+        """Whether the nucleus mask applies — must mirror the solo path's
+        ``top_p if top_p < 1.0 else None`` (p=1.0 with float-rounded
+        cumsums could otherwise mask real lanes and change the draw)."""
+        return not self.greedy and self.top_p < 1.0
+
+    @property
+    def sig(self):
+        """Static per-slot decode signature: (k, greedy, topp_active)."""
+        return (self.k, self.greedy, self.topp_active)

@@ -1,0 +1,34 @@
+"""FIFO admission queue ordered by (arrival tick, request id).
+
+Admission is head-of-line blocking on purpose: if the oldest arrived
+request does not fit (no free slot / pages), nothing younger jumps it.
+That makes the admission order — and therefore every compiled batch
+composition — a pure function of the arrival trace, which the
+determinism tests rely on.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional
+
+from .request import Request
+
+
+class AdmissionQueue:
+    def __init__(self):
+        self._heap: List[tuple] = []
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.arrival, req.rid, req))
+
+    def peek(self) -> Optional[Request]:
+        return self._heap[0][2] if self._heap else None
+
+    def pop(self) -> Request:
+        return heapq.heappop(self._heap)[2]
+
+    def next_arrival(self) -> Optional[int]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,45 @@
+"""Request lifecycle state (DESIGN.md §14): QUEUED → RUNNING → DONE.
+
+Prefill + slot insert happen within one scheduler tick, so there is no
+separate PREFILL state — a request is QUEUED until its cache row lands
+in a slot, RUNNING while the slot decodes, DONE after eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+from .params import SamplingParams
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    params: SamplingParams
+    arrival: int = 0  # virtual tick (admission is tick-deterministic)
+
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    #: generated tokens (first one sampled from the prefill logits)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    #: cache depth: positions filled in the slot so far
+    length: int = 0
+    #: per-request PRNG chain — split exactly as the solo generate() does
+    key: Optional[object] = None
+
+    # wall-clock latency markers (metrics only; never affect scheduling)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_finish: float = 0.0
+    admit_tick: int = -1
+    finish_tick: int = -1

@@ -458,3 +458,89 @@ def test_unified_api_jit_and_grad_safe():
     assert g.shape == x.shape
     # gradient flows only into the selected entries
     assert int((np.asarray(g) != 0).sum()) == 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# measured-cost dispatch (route samples override the static ladder)
+# ---------------------------------------------------------------------------
+
+
+def _route_cache(tmp_path):
+    from repro.streaming.cache import AutotuneCache
+
+    return AutotuneCache(path=str(tmp_path / "routes.json"), autosave=False)
+
+
+def test_measured_dispatch_prefers_faster_recorded_backend(tmp_path):
+    from repro.api.dispatch import record_route_us
+    from repro.streaming.cache import set_default_cache
+
+    prev = set_default_cache(_route_cache(tmp_path))
+    try:
+        spec = SortSpec(op="merge", lengths=(64, 64), batch=4,
+                        dtype="float32", device="cpu")
+        base = plan(spec)
+        assert base.backend == "schedule" and base.source == "rule"
+        record_route_us(spec, "schedule", 120.0)
+        record_route_us(spec, "streaming", 40.0)
+        dec = plan(spec)
+        assert dec.backend == "streaming"
+        assert dec.source == "measured"
+        assert dec.measured_us == 40.0
+        # recorder keeps the fastest sample (noise-robust minimum)
+        record_route_us(spec, "streaming", 900.0)
+        assert plan(spec).measured_us == 40.0
+        # re-measuring the rule's own choice faster flips routing back;
+        # winner == rule keeps source="rule" with the sample annotated
+        record_route_us(spec, "schedule", 10.0)
+        dec2 = plan(spec)
+        assert dec2.backend == "schedule" and dec2.source == "rule"
+        assert dec2.measured_us == 10.0
+    finally:
+        set_default_cache(prev)
+
+
+def test_measured_dispatch_needs_two_samples(tmp_path):
+    from repro.api.dispatch import record_route_us
+    from repro.streaming.cache import set_default_cache
+
+    prev = set_default_cache(_route_cache(tmp_path))
+    try:
+        spec = SortSpec(op="merge", lengths=(64, 64), batch=4,
+                        dtype="float32", device="cpu")
+        record_route_us(spec, "streaming", 5.0)
+        dec = plan(spec)  # one sample cannot rank alternatives
+        assert dec.backend == "schedule" and dec.source == "rule"
+        assert dec.measured_us is None
+    finally:
+        set_default_cache(prev)
+
+
+def test_measured_dispatch_respects_optout_and_explicit(tmp_path, monkeypatch):
+    from repro.api.dispatch import record_route_us
+    from repro.streaming.cache import set_default_cache
+
+    prev = set_default_cache(_route_cache(tmp_path))
+    try:
+        spec = SortSpec(op="merge", lengths=(64, 64), batch=4,
+                        dtype="float32", device="cpu")
+        record_route_us(spec, "schedule", 120.0)
+        record_route_us(spec, "streaming", 40.0)
+        assert plan(spec).backend == "streaming"
+        monkeypatch.setenv("REPRO_MEASURED_DISPATCH", "0")
+        assert plan(spec).backend == "schedule"
+        monkeypatch.delenv("REPRO_MEASURED_DISPATCH")
+        # explicit caller override is never second-guessed
+        explicit = SortSpec(op="merge", lengths=(64, 64), batch=4,
+                            dtype="float32", device="cpu", backend="schedule")
+        dec = plan(explicit)
+        assert dec.backend == "schedule" and dec.source == "rule"
+    finally:
+        set_default_cache(prev)
+
+
+def test_decision_table_carries_measured_columns():
+    rows = repro.decision_table(device="cpu")
+    assert all("source" in r and "measured_us" in r and "tuned_us" in r
+               for r in rows)
+    assert all(r["source"] in ("rule", "measured") for r in rows)
