@@ -126,11 +126,20 @@ def collect_rows(iters: int = 3):
     """Measure every case fused and unfused; returns (rows, failures)."""
     from repro.api import fused as fused_mod
 
+    from repro.streaming.planner import plan_op
+
     rng = np.random.default_rng(0)
     rows, failures = [], []
+    plan_ops = {"sort": "sort", "merge": "merge2", "merge_k": "kway",
+                "topk": "topk"}
     for op, batch, lens, payload in CASES:
         args, pay = _inputs(rng, op, batch, lens, payload)
         shape = f"{batch}x" + "+".join(str(n) for n in lens)
+        # the comparator-network family the planner (tournament winner on
+        # a tuned cache, LOMS heuristic otherwise) assigns this size class
+        network = plan_op(plan_ops[op], lens, batch=batch,
+                          dtype=jnp.float32,
+                          k=TOPK_K if op == "topk" else None).network
 
         fused_fn = jax.jit(lambda *a, _op=op, _p=pay: _call(_op, list(a), _p,
                                                             "pallas"))
@@ -166,6 +175,7 @@ def collect_rows(iters: int = 3):
                 "wall_us": round(st.p50_us, 1),
                 **st.to_row(),
                 "xla_ops": ops,
+                "network": network,
                 "platform": jax.default_backend(),
             })
         emit(f"fused_{op}_{shape}", st_fused.p50_us,

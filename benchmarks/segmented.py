@@ -95,6 +95,16 @@ def collect_rows(iters: int = 3):
         max_len = max(lengths)
         x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
         shape = f"S{len(lengths)}xN{n}xmax{max_len}"
+        # comparator-network family the planner assigns the dominant size
+        # class (tournament winner on a tuned cache, LOMS heuristic
+        # otherwise) — the per-class stamp the decision audit reads
+        from repro.segmented.core import max_class_width
+        from repro.streaming.planner import plan_op
+
+        top_w = min(1 << (max(max_len - 1, 1)).bit_length(),
+                    max_class_width(jnp.float32))
+        network = plan_op("segmented", (top_w,), batch=len(lengths),
+                          dtype=jnp.float32).network
         ref = _ref_sort(x, offs)
 
         from repro.segmented.core import segment_sort_impl
@@ -137,6 +147,7 @@ def collect_rows(iters: int = 3):
                 "xla_ops": count_xla_ops(fn, x),
                 "padded_slots": slots,
                 "raggedness": round(max_len * len(lengths) / n, 2),
+                "network": network,
                 "platform": jax.default_backend(),
             })
         emit(f"segmented_sort_{name}", rows[-3]["wall_us"],
@@ -166,6 +177,7 @@ def collect_rows(iters: int = 3):
             "xla_ops": count_xla_ops(topk_fn, x),
             "padded_slots": slots_seg,
             "raggedness": round(max_len * len(lengths) / n, 2),
+            "network": network,
             "platform": jax.default_backend(),
         })
     return rows, failures

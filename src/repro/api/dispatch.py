@@ -68,13 +68,17 @@ class Decision:
 
     ``source`` records how the backend was picked: ``"rule"`` (the static
     ladder) or ``"measured"`` (a faster measured route sample overrode the
-    rule). ``measured_us`` carries the winning sample when one existed."""
+    rule). ``measured_us`` carries the winning sample when one existed.
+    ``network`` names the comparator-network family the pallas kernels
+    will execute (the autotuner-tournament winner when a tuned entry
+    exists for this point; ``None`` for non-pallas backends)."""
 
     backend: str
     detail: str = ""
     reason: str = ""
     source: str = "rule"
     measured_us: Optional[float] = None
+    network: Optional[str] = None
 
 
 def _merge2_fits_vmem(spec: SortSpec) -> bool:
@@ -158,12 +162,16 @@ def plan(spec: SortSpec, par=None) -> Decision:
     with obs_trace.span("plan", kind="trace", op=spec.op):
         dec = _resolve(spec, par)
         dec = _measured_override(spec, dec)
+        if dec.backend == "pallas":
+            entry = _tuned_entry(spec)
+            dec = dataclasses.replace(
+                dec, network=str((entry or {}).get("network", "loms")))
     if obs_trace.enabled():
         obs_metrics.counter("plan.decisions").inc(
             op=spec.op, backend=dec.backend, detail=dec.detail,
             device=spec.device or "?", segmented=spec.segmented,
             sharded=spec.sharded, payload=spec.has_payload,
-            source=dec.source,
+            source=dec.source, network=dec.network or "-",
         )
     return dec
 
@@ -380,11 +388,10 @@ def _measured_override(spec: SortSpec, dec: Decision) -> Decision:
         source="measured", measured_us=samples[winner])
 
 
-def _tuned_us(spec: SortSpec) -> Optional[float]:
-    """Cached measured wall time (µs) for the spec's kernel tuning point,
-    if an autotune sweep ever ran it on this platform. Surfaces the
-    persisted ``MergePlan.us`` samples in :func:`decision_table` so perf
-    regressions are inspectable without rerunning benchmarks."""
+def _tuned_entry(spec: SortSpec) -> Optional[dict]:
+    """Full cached autotune entry for the spec's kernel tuning point, if
+    an autotune sweep ever ran it on this platform. Carries the measured
+    ``us`` sample and the ``network`` tournament winner."""
     from repro.streaming.cache import default_cache, plan_key
 
     op_map = {
@@ -396,8 +403,16 @@ def _tuned_us(spec: SortSpec) -> Optional[float]:
     if spec.segmented or spec.op not in op_map:
         return None
     op, lengths, k = op_map[spec.op]
-    entry = default_cache().get(
+    return default_cache().get(
         plan_key(op, shapes=(spec.batch,) + lengths, dtype=spec.dtype, k=k))
+
+
+def _tuned_us(spec: SortSpec) -> Optional[float]:
+    """Cached measured wall time (µs) for the spec's kernel tuning point.
+    Surfaces the persisted ``MergePlan.us`` samples in
+    :func:`decision_table` so perf regressions are inspectable without
+    rerunning benchmarks."""
+    entry = _tuned_entry(spec)
     if entry is None or "us" not in entry:
         return None
     return float(entry["us"])
@@ -452,6 +467,7 @@ def decision_table(device: Optional[str] = None) -> List[dict]:
             "detail": dec.detail,
             "reason": dec.reason,
             "source": dec.source,
+            "network": dec.network,
             "measured_us": dec.measured_us,
             "tuned_us": _tuned_us(spec),
         })

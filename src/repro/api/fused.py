@@ -101,6 +101,7 @@ class FusedCfg:
     use_mxu: bool = True
     block: int = 0
     k: Optional[int] = None
+    network: str = "loms"  # comparator-network family (tournament winner)
 
 
 def fused_cfg_for(spec: SortSpec, batch: int, dtype) -> Optional[FusedCfg]:
@@ -133,6 +134,7 @@ def fused_cfg_for(spec: SortSpec, batch: int, dtype) -> Optional[FusedCfg]:
         descending=spec.descending, block_batch=plan.block_batch,
         n_cols=plan.n_cols if plan.kind == "loms" else 2,
         use_mxu=plan.use_mxu and float_vals, block=plan.block, k=spec.k,
+        network=plan.network if plan.kind == "loms" else "loms",
     )
 
 
@@ -184,9 +186,9 @@ def _fused_sort_run(cfg, x, leaves, want_perm: bool):
     from repro.kernels.sort import loms_sort_pallas
 
     res = loms_sort_pallas(
-        x, tuple(leaves), block_batch=cfg.block_batch, use_mxu=cfg.use_mxu,
-        key_dtype=cfg.key_dtype, descending=cfg.descending,
-        want_perm=want_perm,
+        x, tuple(leaves), network=cfg.network, block_batch=cfg.block_batch,
+        use_mxu=cfg.use_mxu, key_dtype=cfg.key_dtype,
+        descending=cfg.descending, want_perm=want_perm,
     )
     if not leaves and not want_perm:
         return res, None, ()
@@ -259,16 +261,16 @@ def _fused_merge_k_run(cfg, lists, leaves, want_perm: bool):
         from repro.kernels.loms_merge import loms_merge2_pallas
 
         res = loms_merge2_pallas(
-            lists[0], lists[1], tuple(leaves), n_cols=cfg.n_cols,
-            block_batch=cfg.block_batch, use_mxu=cfg.use_mxu,
-            key_dtype=cfg.key_dtype, descending=cfg.descending,
-            want_perm=want_perm,
+            lists[0], lists[1], tuple(leaves), network=cfg.network,
+            n_cols=cfg.n_cols, block_batch=cfg.block_batch,
+            use_mxu=cfg.use_mxu, key_dtype=cfg.key_dtype,
+            descending=cfg.descending, want_perm=want_perm,
         )
     else:
-        from repro.core import loms as core_loms
         from repro.kernels.kway import kway_merge_pallas
+        from repro.networks import kway_schedule
 
-        sched = core_loms.loms_kway(cfg.lens)
+        sched = kway_schedule(cfg.lens)
         x = jnp.concatenate(list(lists), axis=-1)
         res = kway_merge_pallas(
             x, sched, tuple(leaves), block_batch=cfg.block_batch,

@@ -144,8 +144,8 @@ def _pallas_merge(a, b, *, spec, pos=None, par=None):
 
         return schedules.merge(a, b), None
     return loms_merge2_pallas(
-        a, b, n_cols=plan.n_cols, block_batch=plan.block_batch,
-        use_mxu=plan.use_mxu,
+        a, b, network=plan.network, n_cols=plan.n_cols,
+        block_batch=plan.block_batch, use_mxu=plan.use_mxu,
     ), None
 
 

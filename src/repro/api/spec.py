@@ -79,8 +79,14 @@ class SortSpec:
     @property
     def ragged2(self) -> bool:
         """2-way merge whose lengths defeat the hole-free kernel layout
-        (no common column count >= 2 divides both lists)."""
-        return self.op == "merge" and any(ln % 2 for ln in self.lengths)
+        (no common column count >= 2 divides both lists). Divisor-based:
+        (7, 7) or (12, 9) get a real column device (the paper's UP-7/DN-7
+        shape class); only coprime-ish pairs like (7, 5) fall back."""
+        if self.op != "merge" or len(self.lengths) != 2:
+            return False
+        import math
+
+        return math.gcd(int(self.lengths[0]), int(self.lengths[1])) < 2
 
     @property
     def segmented(self) -> bool:

@@ -1,60 +1,42 @@
-"""Pallas TPU kernel: Batcher bitonic 2-way merge (the paper's baseline).
-
-The bitonic merge is TPU-pleasant in one way — its compare-exchange pattern
-is expressible as strided reshapes (no gathers) — but it needs log2(m+n)
-dependent stages over the whole array vs LOMS's 2, so it makes log-many
-full passes over the VMEM tile. The benchmark harness contrasts the two.
-"""
+"""Deprecated shims: the Batcher bitonic kernel is now the ``bitonic``
+network family (``repro.networks``), executed by the shared fused
+kernels. The one-off batch-pad wrapper and hand-rolled halver loop are
+gone — these aliases route through ``loms_merge2_pallas`` /
+``loms_sort_pallas`` with ``network="bitonic"`` (the shared ``pad_batch``
+path) and are kept for one release."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from .common import pad_batch, resolve_interpret
-
-
-def _bitonic_merge_kernel(a_ref, b_ref, o_ref):
-    a = a_ref[...]  # (bt, m) ascending
-    b = b_ref[...]  # (bt, n) ascending
-    bt = a.shape[0]
-    x = jnp.concatenate([a, b[:, ::-1]], axis=-1)  # bitonic
-    total = x.shape[-1]
-    d = total // 2
-    while d >= 1:
-        y = x.reshape(bt, total // (2 * d), 2, d)
-        lo = jnp.minimum(y[:, :, 0, :], y[:, :, 1, :])
-        hi = jnp.maximum(y[:, :, 0, :], y[:, :, 1, :])
-        x = jnp.stack([lo, hi], axis=2).reshape(bt, total)
-        d //= 2
-    o_ref[...] = x
+from .loms_merge import loms_merge2_pallas
+from .sort import loms_sort_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
 def bitonic_merge2_pallas(
-    a: jnp.ndarray, b: jnp.ndarray, *, block_batch: int = 8,
-    interpret: Optional[bool] = None
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_batch: int = 8,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Merge sorted (B, m) and (B, n); m == n == power of two (Batcher's
-    constraint, paper §VI). Ragged batch sizes pad up to a ``block_batch``
-    multiple and slice back. ``interpret=None`` auto-resolves."""
-    interpret = resolve_interpret(interpret)
-    (bsz, m), (_, n) = a.shape, b.shape
-    assert m == n and (m & (m - 1)) == 0, "Batcher merge needs equal power-of-2 lists"
-    a, b = pad_batch(a, block_batch), pad_batch(b, block_batch)
-    padded = a.shape[0]
-    out = pl.pallas_call(
-        _bitonic_merge_kernel,
-        grid=(padded // block_batch,),
-        in_specs=[
-            pl.BlockSpec((block_batch, m), lambda i: (i, 0)),
-            pl.BlockSpec((block_batch, n), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_batch, m + n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((padded, m + n), a.dtype),
-        interpret=interpret,
-    )(a, b)
-    return out[:bsz] if padded != bsz else out
+    """Merge sorted ``a`` (B, m) and ``b`` (B, n), pow2 total, via the
+    ``bitonic`` network family. Thin alias over the fused merge kernel."""
+    return loms_merge2_pallas(a, b, network="bitonic",
+                              block_batch=block_batch, interpret=interpret)
+
+
+def bitonic_sort_pallas(
+    x: jnp.ndarray,
+    payloads: Sequence[jnp.ndarray] = (),
+    *,
+    block_batch: int = 8,
+    interpret: Optional[bool] = None,
+    **kwargs,
+):
+    """Full sort via the ``bitonic`` family. Thin alias over the fused
+    sort kernel (same return conventions as ``loms_sort_pallas``)."""
+    return loms_sort_pallas(x, payloads, network="bitonic",
+                            block_batch=block_batch, interpret=interpret,
+                            **kwargs)

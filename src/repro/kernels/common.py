@@ -264,94 +264,6 @@ def sort_nsorter(x: jnp.ndarray, payload=None, use_mxu: bool = True):
     return permute(x, rank, payload) if payload is not None else permute(x, rank)
 
 
-def pick_merge_cols(m: int, n: int) -> int:
-    """Feasible LOMS column count nearest the comparator-cost optimum
-    ``C* = sqrt(m*n/(m+n))`` (1 when no count divides both runs)."""
-    cols = [c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0]
-    if not cols:
-        return 1
-    c_star = (m * n / max(m + n, 1)) ** 0.5
-    return min(cols, key=lambda c: abs(c - c_star))
-
-
-def merge2_cols(
-    lo: jnp.ndarray,
-    hi: jnp.ndarray,
-    *,
-    n_cols: int = 2,
-    use_mxu: bool = True,
-    payload: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-):
-    """2-stage LOMS column merge of two ascending runs (last axis).
-
-    The paper's UP-m/DN-n device as strided views: column ``c`` holds the
-    ascending stride-C slices ``lo[c::C]`` and ``hi[(C-1-c)%C::C]``, each
-    column is one S2MS merge (``m*n/C^2`` comparators instead of the plain
-    S2MS ``m*n``), stage 2 rank-sorts each row of C values. Falls back to
-    the single-stage S2MS when ``n_cols`` doesn't divide both runs.
-
-    Tie caution: unlike :func:`merge2_sorted` (stable, lo wins), the
-    column device makes no cross-run tie-order promise — callers whose
-    sentinels can tie genuine values must resolve validity by mask
-    (:func:`stable_compact`), not by position."""
-    m, n = lo.shape[-1], hi.shape[-1]
-    c_ = n_cols
-    if c_ <= 1 or m % c_ or n % c_:
-        return merge2_sorted(lo, hi, payload=payload, use_mxu=use_mxu)
-    plo, phi = payload if payload is not None else (None, None)
-    cols, pcols = [], []
-    for c in range(c_):
-        av = lo[..., c::c_]
-        bv = hi[..., (c_ - 1 - c) % c_ :: c_]
-        if payload is not None:
-            col, pcol = merge2_sorted(
-                bv, av,
-                payload=(phi[..., (c_ - 1 - c) % c_ :: c_], plo[..., c::c_]),
-                use_mxu=use_mxu,
-            )
-            pcols.append(pcol)
-        else:
-            col = merge2_sorted(bv, av, use_mxu=use_mxu)
-        cols.append(col)
-    arr = jnp.stack(cols, axis=-1)  # (..., R, C)
-    shape = lo.shape[:-1] + (m + n,)
-    if payload is not None:
-        arr, parr = sort_nsorter(arr, jnp.stack(pcols, axis=-1),
-                                 use_mxu=use_mxu)
-        return arr.reshape(shape), parr.reshape(shape)
-    return sort_nsorter(arr, use_mxu=use_mxu).reshape(shape)
-
-
-def loms_tree_sort(keys: jnp.ndarray, pos: Optional[jnp.ndarray], w: int,
-                   use_mxu: bool):
-    """Trace-time-unrolled LOMS merge tree over pow2-width ``(bt, w)``
-    rows, optionally threading an int32 position lane through every
-    permute. The one home for the tree loop — the fused dense sort
-    (kernels/sort.py) and the segmented class sort share it, so the
-    column-device cutover (``run >= 64``, where the S2MS cloud is wide
-    enough to pay for the stage-2 stack) and any tie-order behavior can
-    never diverge between them. Returns ``(keys, pos)``."""
-    bt = keys.shape[0]
-    run = 1
-    while run < w:
-        g = w // (2 * run)
-        cols = pick_merge_cols(run, run) if run >= 64 else 1
-        kv = keys.reshape(bt, g, 2 * run)
-        if pos is not None:
-            pv = pos.reshape(bt, g, 2 * run)
-            kv, pv = merge2_cols(
-                kv[..., :run], kv[..., run:], n_cols=cols,
-                payload=(pv[..., :run], pv[..., run:]), use_mxu=use_mxu,
-            )
-            pos = pv.reshape(bt, w)
-        else:
-            kv = merge2_cols(kv[..., :run], kv[..., run:], n_cols=cols,
-                             use_mxu=use_mxu)
-        keys = kv.reshape(bt, w)
-        run *= 2
-    return keys, pos
-
-
 def payload_block_spec(p: jnp.ndarray, block_batch: int) -> pl.BlockSpec:
     """BlockSpec for a (B, L[, F]) payload lane: grid dim 0 tiles the
     batch, the lane (and feature) axes ride whole. The index map swallows

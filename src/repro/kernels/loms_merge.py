@@ -32,12 +32,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.networks import merge_program, merge_runs
+
 from .common import (
     _iota,
     decode_key_values,
     encode_key_values,
     gather_lanes,
-    merge2_cols,
     pad_batch,
     payload_block_spec,
     resolve_interpret,
@@ -49,6 +50,7 @@ def _loms2_kernel(
     a_ref,
     b_ref,
     *refs,
+    network: str,
     n_cols: int,
     use_mxu: bool,
     key_dtype: Optional[str],
@@ -80,14 +82,16 @@ def _loms2_kernel(
         if descending:
             pa = (m - 1) - _iota((bt, m), 1)
             pb = ((n - 1) - _iota((bt, n), 1)) + m
-    # setup array as strided views; stage 1 per-column S2MS merges + stage 2
-    # row sorts — the shared in-kernel LOMS device (common.merge2_cols)
+    # the merge structure comes from the network registry: the LOMS column
+    # device (n_cols strided views), the S2MS cloud, or a pair network
+    prog = merge_program(network, m, n,
+                         n_cols if network == "loms" else None)
     if need_pos:
-        out, perm = merge2_cols(a, b, n_cols=n_cols, use_mxu=use_mxu,
-                                payload=(pa, pb))
+        out, perm = merge_runs(prog, a, b, use_mxu=use_mxu,
+                               payload=(pa, pb))
         perm = perm.astype(jnp.int32)
     else:
-        out = merge2_cols(a, b, n_cols=n_cols, use_mxu=use_mxu)
+        out = merge_runs(prog, a, b, use_mxu=use_mxu)
         perm = None
     if key_dtype is not None:  # fused decode on store
         out = decode_key_values(out, key_dtype)
@@ -104,8 +108,8 @@ def _loms2_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_cols", "block_batch", "use_mxu", "interpret", "key_dtype",
-        "descending", "want_perm",
+        "network", "n_cols", "block_batch", "use_mxu", "interpret",
+        "key_dtype", "descending", "want_perm",
     ),
 )
 def loms_merge2_pallas(
@@ -113,6 +117,7 @@ def loms_merge2_pallas(
     b: jnp.ndarray,
     payloads: Sequence[jnp.ndarray] = (),
     *,
+    network: str = "loms",
     n_cols: int = 2,
     block_batch: int = 8,
     use_mxu: bool = True,
@@ -123,10 +128,13 @@ def loms_merge2_pallas(
 ):
     """Merge sorted ``a`` (B, m) and ``b`` (B, n) -> (B, m+n).
 
-    Requires n_cols | m and n_cols | n (the hole-free fast path; ragged
-    sizes fall back to the schedule executor in ops.py). Ragged batch
-    sizes are padded up to a ``block_batch`` multiple and sliced back.
-    ``interpret=None`` auto-resolves: compile on TPU, interpret elsewhere.
+    ``network`` names a registered family (``repro.networks``); the
+    default LOMS path requires n_cols | m and n_cols | n (the hole-free
+    fast path; ragged sizes fall back to the schedule executor in
+    ops.py), other families carry their own shape capability (e.g.
+    bitonic needs a pow2 total). Ragged batch sizes are padded up to a
+    ``block_batch`` multiple and sliced back. ``interpret=None``
+    auto-resolves: compile on TPU, interpret elsewhere.
 
     Fused-pipeline extras (all handled inside the one kernel launch):
     ``key_dtype`` — name of the original float dtype; the kernel applies
@@ -142,7 +150,8 @@ def loms_merge2_pallas(
     """
     interpret = resolve_interpret(interpret)
     (bsz, m), (_, n) = a.shape, b.shape
-    assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
+    if network == "loms":
+        assert m % n_cols == 0 and n % n_cols == 0, (m, n, n_cols)
     payloads = tuple(payloads)
     for p in payloads:
         assert p.ndim in (2, 3) and p.shape[:2] == (bsz, m + n), (
@@ -161,8 +170,9 @@ def loms_merge2_pallas(
     out_shapes += [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in payloads]
     results = pl.pallas_call(
         functools.partial(
-            _loms2_kernel, n_cols=n_cols, use_mxu=use_mxu, key_dtype=key_dtype,
-            descending=descending, n_payload=len(payloads), want_perm=want_perm,
+            _loms2_kernel, network=network, n_cols=n_cols, use_mxu=use_mxu,
+            key_dtype=key_dtype, descending=descending,
+            n_payload=len(payloads), want_perm=want_perm,
         ),
         grid=grid,
         in_specs=[

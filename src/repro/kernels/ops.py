@@ -24,9 +24,8 @@ from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import loms as core_loms
+from repro.networks import kway_schedule, median_schedule
 
-from .bitonic import bitonic_merge2_pallas
 from .kway import kway_merge_pallas
 from .loms_merge import loms_merge2_pallas
 from .sort import loms_sort_pallas
@@ -61,20 +60,22 @@ def _use_mxu(dtype) -> bool:
 def merge2(
     a: jnp.ndarray, b: jnp.ndarray, *, n_cols: int = 2, kind: str = "loms"
 ) -> jnp.ndarray:
-    """Batched merge of sorted (B, m) and (B, n) lists."""
+    """Batched merge of sorted (B, m) and (B, n) lists. ``kind`` names a
+    registered network family ("loms", "s2ms", "periodic3",
+    "bitonic") — all execute through the one fused merge kernel."""
     assert a.ndim == 2 and b.ndim == 2
     m, n = a.shape[-1], b.shape[-1]
-    if kind == "bitonic":
-        return bitonic_merge2_pallas(
-            a, b,
+    if kind != "loms":
+        return loms_merge2_pallas(
+            a, b, network=kind,
             block_batch=_pick_block_batch(a.shape[0], lengths=(m, n),
                                           dtype=a.dtype),
         )
-    assert kind == "loms"
     if m % n_cols == 0 and n % n_cols == 0:
         plan = _plan("merge2", (m, n), a.shape[0], a.dtype)
         return loms_merge2_pallas(
-            a, b, n_cols=n_cols, block_batch=plan.block_batch,
+            a, b, network=plan.network, n_cols=n_cols,
+            block_batch=plan.block_batch,
             use_mxu=plan.use_mxu and _use_mxu(a.dtype),
         )
     # ragged fallback: the pure-JAX executor (function-level import so the
@@ -87,7 +88,7 @@ def merge2(
 def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """Batched k-way LOMS merge of sorted (B, len_i) lists."""
     lens = tuple(int(l.shape[-1]) for l in lists)
-    sched = core_loms.loms_kway(lens)
+    sched = kway_schedule(lens)
     x = jnp.concatenate(list(lists), axis=-1)
     plan = _plan("kway", lens, x.shape[0], x.dtype)
     return kway_merge_pallas(x, sched, block_batch=plan.block_batch,
@@ -97,7 +98,7 @@ def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
 def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """Batched 2-stage LOMS median of k equal odd-length sorted lists."""
     lens = tuple(int(l.shape[-1]) for l in lists)
-    sched, pos = core_loms.loms_median(lens)
+    sched, pos = median_schedule(lens)
     x = jnp.concatenate(list(lists), axis=-1)
     plan = _plan("kway", lens, x.shape[0], x.dtype)
     out = kway_merge_pallas(x, sched, block_batch=plan.block_batch,
@@ -111,7 +112,8 @@ def sort(x: jnp.ndarray) -> jnp.ndarray:
     adapters carry keys/payloads through the same kernel)."""
     assert x.ndim == 2
     plan = _plan("sort", (x.shape[-1],), x.shape[0], x.dtype)
-    return loms_sort_pallas(x, block_batch=plan.block_batch,
+    return loms_sort_pallas(x, network=plan.network,
+                            block_batch=plan.block_batch,
                             use_mxu=plan.use_mxu and _use_mxu(x.dtype))
 
 

@@ -35,15 +35,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.networks import (merge_program, merge_runs, pick_merge_cols,
+                            run_sort_program, sort_program)
+
 from .common import (
     _iota,
     encode_key_values,
     gather_lanes,
-    loms_tree_sort,
-    merge2_cols,
     pad_batch,
     payload_block_spec,
-    pick_merge_cols,
     resolve_interpret,
     stable_compact,
     unpack_fused_results,
@@ -96,14 +96,15 @@ def _store_prefix(refs, pos, x_vals, p_ins, k_out: int, want_perm: bool,
 
 def _seg_sort_kernel(
     x_ref, len_ref, *refs,
-    w: int, k_out: int, encode: bool, flip: bool, use_mxu: bool,
-    n_payload: int, want_perm: bool,
+    w: int, k_out: int, network: str, encode: bool, flip: bool,
+    use_mxu: bool, n_payload: int, want_perm: bool,
 ):
     p_ins = tuple(r[...] for r in refs[:n_payload])
     x = x_ref[...]  # (bt, w) raw, invalid tail lanes hold arbitrary fill
     lens = len_ref[...]  # (bt, 1) per-segment valid lengths
     keys, lane = _prep_keys(x, lens, encode=encode, flip=flip)
-    keys, pos = loms_tree_sort(keys, lane, w, use_mxu)
+    keys, pos = run_sort_program(sort_program(network, w), keys, lane,
+                                 use_mxu)
     # validity by mask, never by value: a genuine NaN key sorts above the
     # float sentinel, so the compacted prefix — not the raw network order —
     # defines the live output
@@ -113,8 +114,8 @@ def _seg_sort_kernel(
 
 def _seg_merge_kernel(
     a_ref, b_ref, la_ref, lb_ref, *refs,
-    wa: int, wb: int, k_out: int, n_cols: int, encode: bool, flip: bool,
-    use_mxu: bool, n_payload: int, want_perm: bool,
+    wa: int, wb: int, k_out: int, network: str, n_cols: int, encode: bool,
+    flip: bool, use_mxu: bool, n_payload: int, want_perm: bool,
 ):
     p_ins = tuple(r[...] for r in refs[:n_payload])
     a = a_ref[...]
@@ -124,8 +125,10 @@ def _seg_merge_kernel(
     ka, lane_a = _prep_keys(a, lens_a, encode=encode, flip=flip)
     kb, lane_b = _prep_keys(b, lens_b, encode=encode, flip=flip)
     # dense-coordinate positions: [0, wa) = a lanes, [wa, wa+wb) = b lanes
-    keys, pos = merge2_cols(ka, kb, n_cols=n_cols,
-                            payload=(lane_a, wa + lane_b), use_mxu=use_mxu)
+    prog = merge_program(network, wa, wb,
+                         n_cols if network == "loms" else None)
+    keys, pos = merge_runs(prog, ka, kb,
+                           payload=(lane_a, wa + lane_b), use_mxu=use_mxu)
     valid = jnp.where(pos < wa, pos < lens_a, pos - wa < lens_b)
     keys, pos = stable_compact(valid, keys, pos)
     # perm in *segment* coordinates: b elements continue at len_a, not wa
@@ -173,8 +176,8 @@ def _class_call(kernel, inputs, payloads, *, k_out: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_out", "encode", "flip", "want_perm", "block_batch",
-                     "use_mxu", "interpret"),
+    static_argnames=("k_out", "network", "encode", "flip", "want_perm",
+                     "block_batch", "use_mxu", "interpret"),
 )
 def segment_class_sort_pallas(
     dense: jnp.ndarray,  # (S, W) raw segment rows, W a power of two
@@ -182,6 +185,7 @@ def segment_class_sort_pallas(
     payloads: Sequence[jnp.ndarray] = (),  # (S, W[, F]) dense lanes
     *,
     k_out: Optional[int] = None,  # truncate stored prefix (top-k); None = W
+    network: str = "loms",  # registered network family for the merge tree
     encode: bool = True,  # fuse the total-order float key transform
     flip: bool = False,  # descending order (exact key bit-flip)
     want_perm: bool = False,
@@ -200,8 +204,9 @@ def segment_class_sort_pallas(
     assert 1 <= k_out <= w, (k_out, w)
     encode = encode and jnp.issubdtype(dense.dtype, jnp.floating)
     kernel = functools.partial(
-        _seg_sort_kernel, w=w, k_out=k_out, encode=encode, flip=flip,
-        use_mxu=use_mxu, n_payload=len(payloads), want_perm=want_perm,
+        _seg_sort_kernel, w=w, k_out=k_out, network=network, encode=encode,
+        flip=flip, use_mxu=use_mxu, n_payload=len(payloads),
+        want_perm=want_perm,
     )
     return _class_call(
         kernel, [dense, lens.astype(jnp.int32)], tuple(payloads),
@@ -212,8 +217,8 @@ def segment_class_sort_pallas(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k_out", "encode", "flip", "want_perm", "block_batch",
-                     "use_mxu", "n_cols", "interpret"),
+    static_argnames=("k_out", "network", "encode", "flip", "want_perm",
+                     "block_batch", "use_mxu", "n_cols", "interpret"),
 )
 def segment_class_merge_pallas(
     dense_a: jnp.ndarray,  # (S, Wa) sorted segment rows (pow2 width)
@@ -223,6 +228,7 @@ def segment_class_merge_pallas(
     payloads: Sequence[jnp.ndarray] = (),  # (S, Wa+Wb[, F]) dense-coord lanes
     *,
     k_out: Optional[int] = None,
+    network: str = "loms",
     encode: bool = True,
     flip: bool = False,
     want_perm: bool = False,
@@ -245,9 +251,9 @@ def segment_class_merge_pallas(
     encode = encode and jnp.issubdtype(dense_a.dtype, jnp.floating)
     n_cols = pick_merge_cols(wa, wb) if n_cols is None else int(n_cols)
     kernel = functools.partial(
-        _seg_merge_kernel, wa=wa, wb=wb, k_out=k_out, n_cols=n_cols,
-        encode=encode, flip=flip, use_mxu=use_mxu, n_payload=len(payloads),
-        want_perm=want_perm,
+        _seg_merge_kernel, wa=wa, wb=wb, k_out=k_out, network=network,
+        n_cols=n_cols, encode=encode, flip=flip, use_mxu=use_mxu,
+        n_payload=len(payloads), want_perm=want_perm,
     )
     return _class_call(
         kernel,

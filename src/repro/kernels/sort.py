@@ -7,15 +7,20 @@ further passes. This kernel runs the *whole* pipeline per batch tile in
 one ``pallas_call``:
 
   load -> (encode total-order int keys) -> pad to a power of two with
-  +sentinels -> trace-time-unrolled LOMS merge tree carrying an int32
+  +sentinels -> trace-time-unrolled merge tree carrying an int32
   position lane -> slice the live prefix -> (decode) -> (reverse for
   descending) -> store values + gather payload lanes in VMEM.
 
-Stability makes the sentinel handling safe without a compaction pass:
-``merge2_sorted`` is lo-wins-ties stable and the tree merges preserve
-input order among equals, so tail pads (which tie genuine dtype-max
-values) can never migrate before a genuine element — the first ``n``
-output slots are exactly the sorted input.
+The tree's level structure comes from the pluggable network layer
+(``repro.networks``): ``network=`` names a registered family ("loms",
+"s2ms", "periodic3", "bitonic") and the kernel executes whatever
+merge-step program the registry hands back — the autotuner tournament
+picks the family per size class.
+
+Sentinel handling never relies on tie order: when a position lane is
+carried, validity is decided by mask (``stable_compact``); the bare
+values-only call needs only multiset-sortedness, under which the first
+``n`` output slots are exactly the sorted input for *any* family.
 
 VMEM: the widest tree level materializes a (bt, npad/2, run, run)
 comparison cloud ~ bt * npad^2 / 4 f32 entries; ``streaming.planner``
@@ -31,13 +36,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.networks import run_sort_program, sort_program
+
 from .common import (
     _iota,
     ceil_pow2,
     decode_key_values,
     encode_key_values,
     gather_lanes,
-    loms_tree_sort,
     np_fill,
     pad_batch,
     payload_block_spec,
@@ -52,6 +58,7 @@ def _sort_kernel(
     x_ref,
     *refs,
     n: int,
+    network: str,
     use_mxu: bool,
     key_dtype: Optional[str],
     descending: bool,
@@ -74,9 +81,9 @@ def _sort_kernel(
         x = jnp.pad(x, [(0, 0), (0, npad - n)], constant_values=fill)
     need_pos = n_payload > 0 or want_perm
     pos = _iota((bt, npad), 1) if need_pos else None
-    # the unrolled LOMS merge tree lives in common.loms_tree_sort (shared
-    # with the segmented class kernels, column-device cutover included)
-    x, pos = loms_tree_sort(x, pos, npad, use_mxu)
+    # the unrolled merge tree comes from the network registry (shared with
+    # the segmented class kernels, column-device cutover included)
+    x, pos = run_sort_program(sort_program(network, npad), x, pos, use_mxu)
     if need_pos and npad != n:
         # the column devices make no cross-run tie-order promise, so a tail
         # pad that ties a genuine dtype-max value may land inside the live
@@ -99,14 +106,15 @@ def _sort_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_batch", "use_mxu", "interpret", "key_dtype", "descending",
-        "want_perm",
+        "network", "block_batch", "use_mxu", "interpret", "key_dtype",
+        "descending", "want_perm",
     ),
 )
 def loms_sort_pallas(
     x: jnp.ndarray,
     payloads: Sequence[jnp.ndarray] = (),
     *,
+    network: str = "loms",
     block_batch: int = 8,
     use_mxu: bool = True,
     interpret: Optional[bool] = None,
@@ -115,6 +123,8 @@ def loms_sort_pallas(
     want_perm: bool = False,
 ):
     """Full sort of unsorted (B, n) rows in one fused kernel launch.
+
+    ``network`` — registered family name executed by the merge tree.
 
     ``key_dtype`` — original float dtype name: the kernel encodes the
     total-order int keys on load and decodes on store (pass
@@ -144,8 +154,9 @@ def loms_sort_pallas(
     out_shapes += [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in payloads_p]
     results = pl.pallas_call(
         functools.partial(
-            _sort_kernel, n=n, use_mxu=use_mxu, key_dtype=key_dtype,
-            descending=descending, n_payload=len(payloads), want_perm=want_perm,
+            _sort_kernel, n=n, network=network, use_mxu=use_mxu,
+            key_dtype=key_dtype, descending=descending,
+            n_payload=len(payloads), want_perm=want_perm,
         ),
         grid=(padded // block_batch,),
         in_specs=[

@@ -1,0 +1,37 @@
+"""Pluggable comparator-network layer (DESIGN.md §15).
+
+One trace-time home for every merge/sort network structure the Pallas
+kernels execute: family generators (LOMS column device, S2MS, 3-periodic,
+Batcher bitonic) emit compact merge-step programs; kernels run them via
+:func:`merge_runs` / :func:`run_sort_program`; the streaming autotuner
+holds a per-size-class tournament over the capable families.
+"""
+from .families import PERIODIC3_MAX_WIDTH, divisor_cols, pick_merge_cols
+from .program import (MergeProgram, PairStage, SortProgram, merge_runs,
+                      program_to_schedule, run_sort_program,
+                      sort_program_to_schedule)
+from .registry import (NetworkFamily, capable_families, family_names,
+                       get_family, kway_schedule, median_schedule,
+                       merge_program, register_family, sort_program)
+
+__all__ = [
+    "PERIODIC3_MAX_WIDTH",
+    "divisor_cols",
+    "pick_merge_cols",
+    "MergeProgram",
+    "PairStage",
+    "SortProgram",
+    "merge_runs",
+    "run_sort_program",
+    "program_to_schedule",
+    "sort_program_to_schedule",
+    "NetworkFamily",
+    "capable_families",
+    "family_names",
+    "get_family",
+    "kway_schedule",
+    "median_schedule",
+    "merge_program",
+    "register_family",
+    "sort_program",
+]

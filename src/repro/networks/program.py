@@ -1,0 +1,332 @@
+"""Merge-step program IR: the lowered, kernel-friendly sibling of
+``core.networks.Schedule``.
+
+A :class:`MergeProgram` describes one oblivious 2-run merge as either
+
+* ``kind='columns'`` — the paper's column device family: ``n_cols == 1``
+  is the single-stage S2MS rank-merge; ``n_cols == C > 1`` is the LOMS
+  UP-m/DN-n device (stage 1: C strided-column S2MS merges, stage 2: row
+  rank-sorts of the (R, C) stack); or
+* ``kind='pairs'`` — a sequence of compare-exchange
+  :class:`PairStage`\\ s over the concatenated runs (optionally with the
+  hi run reversed on entry), which expresses Batcher bitonic halvers and
+  periodic brick/reflect networks.
+
+Programs are frozen trace-time constants built by the family generators
+in :mod:`repro.networks.families` and handed to kernels through
+:mod:`repro.networks.registry` — kernels never import a generator
+directly, so tie-order and cutover behavior live in exactly one place.
+The executors here (:func:`merge_runs`, :func:`run_sort_program`) are
+plain ``jnp`` on the last axis — safe inside Pallas kernel bodies (no
+captured numpy index constants; only reshapes, static slices, reversals
+and :func:`repro.kernels.common._iota`).
+
+:func:`program_to_schedule` lifts a program back into the validated
+``Schedule`` IR so the 0-1-principle checkers in ``core.networks`` apply
+to every family at every emitted width.
+
+Tie caution (same contract as the old ``merge2_cols``): only the
+``columns``/``n_cols == 1`` S2MS program is a *stable* merge (lo run
+wins ties). Column devices and pair networks make no cross-run tie-order
+promise — callers whose sentinels can tie genuine values must resolve
+validity by mask (``stable_compact``), never by position.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import _iota, merge2_sorted, sort_nsorter
+
+__all__ = [
+    "PairStage",
+    "MergeProgram",
+    "SortProgram",
+    "merge_runs",
+    "run_sort_program",
+    "program_to_schedule",
+    "sort_program_to_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PairStage:
+    """One compare-exchange stage over the working vector of length L.
+
+    kind='xor'       — partner lanes ``i`` and ``i ^ d`` (the Batcher
+                       halver stride; requires ``2*d | L``).
+    kind='reflect'   — partner lanes ``i`` and ``L-1-i`` (the periodic
+                       network's folding stage; requires L even).
+    kind='brick_odd' — odd brick: pairs (1,2), (3,4), ... (L-3,L-2); the
+                       ends idle (requires L even).
+
+    Every stage is a standard comparator set: the min lands on the
+    lower-indexed lane.
+    """
+
+    kind: str
+    d: int = 1
+
+    def __post_init__(self):
+        assert self.kind in ("xor", "reflect", "brick_odd"), self.kind
+        assert self.d >= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeProgram:
+    """A lowered 2-run merge: ``(m, n) -> m + n`` along the last axis."""
+
+    family: str
+    m: int
+    n: int
+    kind: str  # 'columns' | 'pairs'
+    n_cols: int = 1
+    reverse_hi: bool = False
+    stages: Tuple[PairStage, ...] = ()
+
+    def __post_init__(self):
+        assert self.kind in ("columns", "pairs"), self.kind
+        if self.kind == "columns" and self.n_cols > 1:
+            assert self.m % self.n_cols == 0 and self.n % self.n_cols == 0, (
+                self.m, self.n, self.n_cols)
+
+    @property
+    def total(self) -> int:
+        return self.m + self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class SortProgram:
+    """A pow2-width merge-tree sort: ``levels[i]`` merges run pairs of
+    length ``2**i`` (so ``levels[i].m == levels[i].n == 2**i``)."""
+
+    family: str
+    width: int
+    levels: Tuple[MergeProgram, ...] = ()
+
+    def __post_init__(self):
+        run = 1
+        for mp in self.levels:
+            assert mp.m == run and mp.n == run, (mp.m, mp.n, run)
+            run *= 2
+        assert run == max(self.width, 1), (self.width, len(self.levels))
+
+
+# ---------------------------------------------------------------------------
+# Executors (kernel-safe jnp)
+# ---------------------------------------------------------------------------
+
+
+def _xor_exchange(x, p, d: int):
+    """Compare-exchange lanes (i, i^d) on the last axis (2*d | L)."""
+    lead, L = x.shape[:-1], x.shape[-1]
+    y = x.reshape(lead + (L // (2 * d), 2, d))
+    a, b = y[..., 0, :], y[..., 1, :]
+    swap = a > b
+    out = jnp.stack([jnp.where(swap, b, a), jnp.where(swap, a, b)],
+                    axis=-2).reshape(lead + (L,))
+    if p is None:
+        return out, None
+    q = p.reshape(lead + (L // (2 * d), 2, d))
+    pa, pb = q[..., 0, :], q[..., 1, :]
+    pout = jnp.stack([jnp.where(swap, pb, pa), jnp.where(swap, pa, pb)],
+                     axis=-2).reshape(lead + (L,))
+    return out, pout
+
+
+def _apply_pair_stage(st: PairStage, x, p):
+    L = x.shape[-1]
+    if st.kind == "xor":
+        return _xor_exchange(x, p, st.d)
+    if st.kind == "reflect":
+        # lanes i and L-1-i; both halves evaluate the same strict
+        # comparison so the swap mask is self-consistent under ties
+        r = x[..., ::-1]
+        left = _iota(x.shape, x.ndim - 1) < (L // 2)
+        swap = jnp.where(left, x > r, r > x)
+        out = jnp.where(swap, r, x)
+        if p is None:
+            return out, None
+        return out, jnp.where(swap, p[..., ::-1], p)
+    assert st.kind == "brick_odd"
+    if L <= 2:
+        return x, p
+    head, mid, tail = x[..., :1], x[..., 1:L - 1], x[..., L - 1:]
+    pm = None if p is None else p[..., 1:L - 1]
+    mid, pm = _xor_exchange(mid, pm, 1)
+    out = jnp.concatenate([head, mid, tail], axis=-1)
+    if p is None:
+        return out, None
+    pout = jnp.concatenate([p[..., :1], pm, p[..., L - 1:]], axis=-1)
+    return out, pout
+
+
+def _merge_columns(prog: MergeProgram, lo, hi, payload, use_mxu: bool):
+    """The paper's UP-m/DN-n column device as strided views: column ``c``
+    holds the ascending stride-C slices ``lo[c::C]`` and
+    ``hi[(C-1-c)%C::C]``, each column is one S2MS merge (``m*n/C^2``
+    comparators instead of the plain S2MS ``m*n``), stage 2 rank-sorts
+    each row of C values."""
+    m, n = prog.m, prog.n
+    c_ = prog.n_cols
+    if c_ <= 1 or m % c_ or n % c_:
+        return merge2_sorted(lo, hi, payload=payload, use_mxu=use_mxu)
+    plo, phi = payload if payload is not None else (None, None)
+    cols, pcols = [], []
+    for c in range(c_):
+        av = lo[..., c::c_]
+        bv = hi[..., (c_ - 1 - c) % c_ :: c_]
+        if payload is not None:
+            col, pcol = merge2_sorted(
+                bv, av,
+                payload=(phi[..., (c_ - 1 - c) % c_ :: c_], plo[..., c::c_]),
+                use_mxu=use_mxu,
+            )
+            pcols.append(pcol)
+        else:
+            col = merge2_sorted(bv, av, use_mxu=use_mxu)
+        cols.append(col)
+    arr = jnp.stack(cols, axis=-1)  # (..., R, C)
+    shape = lo.shape[:-1] + (m + n,)
+    if payload is not None:
+        arr, parr = sort_nsorter(arr, jnp.stack(pcols, axis=-1),
+                                 use_mxu=use_mxu)
+        return arr.reshape(shape), parr.reshape(shape)
+    return sort_nsorter(arr, use_mxu=use_mxu).reshape(shape)
+
+
+def _merge_pairs(prog: MergeProgram, lo, hi, payload):
+    hi_ = hi[..., ::-1] if prog.reverse_hi else hi
+    x = jnp.concatenate([lo, hi_], axis=-1)
+    p = None
+    if payload is not None:
+        plo, phi = payload
+        p = jnp.concatenate(
+            [plo, phi[..., ::-1] if prog.reverse_hi else phi], axis=-1)
+    for st in prog.stages:
+        x, p = _apply_pair_stage(st, x, p)
+    return (x, p) if payload is not None else x
+
+
+def merge_runs(
+    prog: MergeProgram,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    *,
+    payload: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    use_mxu: bool = True,
+):
+    """Execute one merge program on ascending runs ``lo``/``hi`` (last
+    axis). With ``payload=(plo, phi)`` returns ``(vals, pvals)``."""
+    assert lo.shape[-1] == prog.m and hi.shape[-1] == prog.n, (
+        lo.shape, hi.shape, prog)
+    if prog.kind == "columns":
+        return _merge_columns(prog, lo, hi, payload, use_mxu)
+    return _merge_pairs(prog, lo, hi, payload)
+
+
+def run_sort_program(prog: SortProgram, keys: jnp.ndarray,
+                     pos: Optional[jnp.ndarray], use_mxu: bool):
+    """Trace-time-unrolled merge-tree sort over pow2-width ``(bt, w)``
+    rows, optionally threading an int32 position lane through every
+    permute. The one home for the tree loop — the fused dense sort
+    (kernels/sort.py) and the segmented class sort share it, so level
+    structure (e.g. the LOMS column-device cutover, chosen by the family
+    generator) and tie-order behavior can never diverge between them.
+    Returns ``(keys, pos)``."""
+    bt = keys.shape[0]
+    w = prog.width
+    assert keys.shape[-1] == w, (keys.shape, w)
+    for mp in prog.levels:
+        run = mp.m
+        g = w // (2 * run)
+        kv = keys.reshape(bt, g, 2 * run)
+        if pos is not None:
+            pv = pos.reshape(bt, g, 2 * run)
+            kv, pv = merge_runs(
+                mp, kv[..., :run], kv[..., run:],
+                payload=(pv[..., :run], pv[..., run:]), use_mxu=use_mxu,
+            )
+            pos = pv.reshape(bt, w)
+        else:
+            kv = merge_runs(mp, kv[..., :run], kv[..., run:],
+                            use_mxu=use_mxu)
+        keys = kv.reshape(bt, w)
+    return keys, pos
+
+
+# ---------------------------------------------------------------------------
+# Lifting back into the validated Schedule IR (for 0-1 checks / metrics)
+# ---------------------------------------------------------------------------
+
+
+def _pair_stage_to_groups(st: PairStage, L: int):
+    from repro.core.networks import Group
+
+    if st.kind == "xor":
+        return tuple(
+            Group(idx=(base + k, base + k + st.d))
+            for base in range(0, L, 2 * st.d) for k in range(st.d))
+    if st.kind == "reflect":
+        return tuple(Group(idx=(i, L - 1 - i)) for i in range(L // 2))
+    return tuple(Group(idx=(i, i + 1)) for i in range(1, L - 2, 2))
+
+
+def program_to_schedule(mp: MergeProgram):
+    """Lift a merge program into a ``core.networks.Schedule`` so the
+    0-1-principle validators and depth/comparator metrics apply."""
+    from repro.core.networks import Group, Schedule, Stage
+
+    m, n, size = mp.m, mp.n, mp.total
+    ident = tuple(range(size))
+    name = f"{mp.family}_merge_{m}x{n}"
+    meta = (("family", mp.family), ("kind", mp.kind))
+    if mp.kind == "columns":
+        if mp.n_cols > 1:
+            from repro.core.loms import loms_2way
+
+            return loms_2way(m, n, n_cols=mp.n_cols)
+        runs = tuple(r for r in (m, n) if r > 0)
+        group = Group(idx=ident, runs=runs if len(runs) > 1 else None)
+        return Schedule(name=name, size=size, setup_scatter=ident,
+                        output_gather=ident,
+                        stages=(Stage(groups=(group,)),), meta=meta)
+    setup = list(ident)
+    if mp.reverse_hi:
+        for j in range(n):
+            setup[m + j] = m + (n - 1 - j)
+    stages = tuple(
+        Stage(groups=groups)
+        for groups in (_pair_stage_to_groups(st, size) for st in mp.stages)
+        if groups)
+    return Schedule(name=name, size=size, setup_scatter=tuple(setup),
+                    output_gather=ident, stages=stages, meta=meta)
+
+
+def sort_program_to_schedule(prog: SortProgram):
+    """Compose a sort program's levels into one merge-tree ``Schedule``.
+
+    Only levels that are depth-1 group merges on the identity layout
+    (``columns`` with ``n_cols == 1``) compose without inter-level
+    permutations; programs with column-device or pair levels raise —
+    validate those per-level via :func:`program_to_schedule` plus an
+    executor-level exhaustive 0-1 sweep instead."""
+    from repro.core.networks import Group, Schedule, Stage
+
+    w = prog.width
+    stages = []
+    for mp in prog.levels:
+        if mp.kind != "columns" or mp.n_cols > 1:
+            raise ValueError(
+                f"level {mp.m}x{mp.n} of {prog.family} is not a "
+                "composable depth-1 merge")
+        run = mp.m
+        stages.append(Stage(groups=tuple(
+            Group(idx=tuple(range(b, b + 2 * run)), runs=(run, run))
+            for b in range(0, w, 2 * run))))
+    ident = tuple(range(w))
+    return Schedule(name=f"{prog.family}_sort_{w}", size=w,
+                    setup_scatter=ident, output_gather=ident,
+                    stages=tuple(stages), meta=(("family", prog.family),))

@@ -1,0 +1,109 @@
+"""Family registry: the only door kernels use to obtain network programs.
+
+Kernels (``kernels/sort.py``, ``kernels/segmented.py``,
+``kernels/loms_merge.py``, ``streaming/grid_merge.py``) request programs
+by family *name* — never by importing a generator — so that the
+autotuner tournament can swap families per size class and the set of
+families stays open (``register_family`` accepts out-of-tree
+generators). ``kway_schedule``/``median_schedule`` route the k-way
+Schedule builders through the same door, keeping ``repro.core.loms``
+out of the kernel layer entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+from .families import BUILTIN_FAMILIES
+from .program import MergeProgram, SortProgram
+
+__all__ = [
+    "NetworkFamily",
+    "register_family",
+    "get_family",
+    "family_names",
+    "merge_program",
+    "sort_program",
+    "capable_families",
+    "kway_schedule",
+    "median_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkFamily:
+    name: str
+    merge: Callable[..., MergeProgram]  # (m, n, n_cols=None)
+    sort: Callable[[int], SortProgram]  # (w) — w a pow2 width
+    merge_capable: Callable[[int, int], bool]
+    sort_capable: Callable[[int], bool]
+
+
+_REGISTRY: dict = {}
+
+
+def register_family(fam: NetworkFamily) -> None:
+    _REGISTRY[fam.name] = fam
+
+
+def get_family(name: str) -> NetworkFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown network family {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def family_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+for _name, (_m, _s, _mc, _sc) in BUILTIN_FAMILIES.items():
+    register_family(NetworkFamily(name=_name, merge=_m, sort=_s,
+                                  merge_capable=_mc, sort_capable=_sc))
+
+
+def merge_program(family: str, m: int, n: int,
+                  n_cols: Optional[int] = None) -> MergeProgram:
+    """The 2-run merge program for ``family`` at static shape (m, n).
+
+    ``n_cols`` overrides the column count for column-device families
+    (ignored by pair families)."""
+    return get_family(family).merge(int(m), int(n), n_cols)
+
+
+def sort_program(family: str, width: int) -> SortProgram:
+    """The pow2-width merge-tree sort program for ``family``."""
+    return get_family(family).sort(int(width))
+
+
+def capable_families(op: str, lengths: Sequence[int]) -> Tuple[str, ...]:
+    """Family names (registration order — 'loms' first) able to realize
+    ``op`` at the given static lengths. ``op='merge2'`` takes ``(m, n)``;
+    ``op='sort'`` takes ``(n,)`` and checks the padded pow2 width."""
+    if op == "merge2":
+        m, n = (int(x) for x in lengths)
+        return tuple(f for f in _REGISTRY
+                     if _REGISTRY[f].merge_capable(m, n))
+    if op == "sort":
+        from repro.kernels.common import ceil_pow2
+
+        w = ceil_pow2(int(lengths[0]))
+        return tuple(f for f in _REGISTRY if _REGISTRY[f].sort_capable(w))
+    raise ValueError(f"capable_families: unknown op {op!r}")
+
+
+def kway_schedule(lens: Sequence[int], n_stages: Optional[int] = None):
+    """K-way LOMS merge Schedule (the paper's Table 1 stage counts) —
+    the registry-level door to ``core.loms.loms_kway``."""
+    from repro.core import loms as _core_loms
+
+    return _core_loms.loms_kway(tuple(int(x) for x in lens), n_stages)
+
+
+def median_schedule(lens: Sequence[int]):
+    """(Schedule, median position) for the early-exit k-way median."""
+    from repro.core import loms as _core_loms
+
+    return _core_loms.loms_median(tuple(int(x) for x in lens))

@@ -237,9 +237,10 @@ def _spill_sort_values(dense: jnp.ndarray, *, descending: bool,
                            key_sentinel(keys.dtype), keys.dtype))
     chunks = keys.reshape(s * c, tile)
     lens = jnp.full((s * c, 1), tile, jnp.int32)
+    chunk_plan = _class_plan((tile,), s * c, keys.dtype)
     sorted_chunks, _, _ = segment_class_sort_pallas(
         chunks, lens, (), encode=False, flip=False, want_perm=False,
-        block_batch=_class_plan((tile,), s * c, keys.dtype).block_batch,
+        network=chunk_plan.network, block_batch=chunk_plan.block_batch,
         use_mxu=False, interpret=interpret,
     )
     runs: List[jnp.ndarray] = list(
@@ -317,7 +318,7 @@ def segment_sort_impl(
             res_v, res_perm, res_l = segment_class_sort_pallas(
                 dense, _lens_col(cls), tuple(p_dense), encode=encode,
                 flip=descending, want_perm=need_perm,
-                block_batch=plan.block_batch,
+                network=plan.network, block_batch=plan.block_batch,
                 use_mxu=_use_mxu(plan, encode, values.dtype),
                 interpret=interpret,
             )
@@ -429,9 +430,9 @@ def segment_merge_impl(
         res_v, res_perm, res_l = segment_class_merge_pallas(
             dense_a, dense_b, _lens_col(ca), _lens_col(cb), tuple(p_dense),
             encode=encode, flip=descending, want_perm=need_perm,
-            block_batch=plan.block_batch,
+            network=plan.network, block_batch=plan.block_batch,
             use_mxu=_use_mxu(plan, encode, a.dtype),
-            n_cols=plan.n_cols if plan.kind == "loms" else None,
+            n_cols=plan.n_cols if plan.network == "loms" else None,
             interpret=interpret,
         )
         out_cls = SizeClass(width=ca.width + cb.width, seg_ids=ca.seg_ids,
@@ -577,7 +578,7 @@ def segment_topk_impl(
             res_v, res_perm, res_l = segment_class_sort_pallas(
                 dense, _lens_col(cls), tuple(p_dense), k_out=k_out,
                 encode=encode, flip=descending, want_perm=True,
-                block_batch=plan.block_batch,
+                network=plan.network, block_batch=plan.block_batch,
                 use_mxu=_use_mxu(plan, encode, values.dtype),
                 interpret=interpret,
             )

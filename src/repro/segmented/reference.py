@@ -18,10 +18,11 @@ duplicate. Values are gathered from the raw input at the permutation,
 never decoded from keys, and are bit-identical to the kernel path for
 every input. The *permutation* among tied values additionally matches
 the kernels on every stable sub-path (classes narrower than the
-column-device cutover); wider classes use the column S2MS devices,
-which — exactly like the dense ``repro.sort`` without ``stable=True``
-(see ``merge2_cols``'s tie caution) — make no tie-order promise, so
-perm/idx on duplicates is unspecified there, not part of the contract.
+column-device cutover); wider classes run whatever comparator-network
+family the tournament picked (``repro.networks.merge_runs``), which —
+exactly like the dense ``repro.sort`` without ``stable=True`` — makes
+no tie-order promise, so perm/idx on duplicates is unspecified there,
+not part of the contract.
 """
 from __future__ import annotations
 

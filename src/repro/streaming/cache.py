@@ -30,8 +30,12 @@ from repro.obs import metrics as obs_metrics
 #: (non-divisor) block_batch semantics. v3 added the segmented size-class
 #: plan family (``segmented|batch x widths`` keys, block_batch counting
 #: segments per tile) — pre-segmented caches are ignored wholesale rather
-#: than risking a dense-era entry mis-tiling a class launch.
-SCHEMA_VERSION = 3
+#: than risking a dense-era entry mis-tiling a class launch. v4 added the
+#: ``network`` field (the per-size-class family-tournament winner:
+#: "loms" | "s2ms" | "periodic3" | "bitonic") — v3 entries were tuned
+#: LOMS-only, so replaying them would silently pin every size class to
+#: the column device and skip the tournament's measured choice.
+SCHEMA_VERSION = 4
 
 
 def default_cache_path() -> str:

@@ -46,10 +46,10 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import loms as core_loms
 from repro.kernels.common import np_fill, pad_tail_sorted, sentinel_max
 from repro.kernels.kway import kway_merge_pallas
 from repro.kernels.loms_merge import loms_merge2_pallas
+from repro.networks import kway_schedule
 
 from .planner import MergePlan, plan_chunked, plan_chunked_k
 
@@ -223,7 +223,7 @@ def chunked_merge_k(
         interpret = _interpret()
     total = sum(lens)
     out_tiles = -(-total // t)
-    sched = core_loms.loms_kway((t,) * k)
+    sched = kway_schedule((t,) * k)
 
     pos = _global_positions(flat)  # per-list (B, n_j) global ranks
     grid = jnp.arange(out_tiles + 1, dtype=jnp.int32) * t

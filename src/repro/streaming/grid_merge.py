@@ -34,19 +34,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (
-    merge2_cols,
-    pad_tail_sorted,
-    pick_merge_cols,
-    resolve_interpret,
-)
+from repro.kernels.common import pad_tail_sorted, resolve_interpret
+from repro.networks import merge_program, merge_runs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 
 def _grid_merge2_kernel(
     a_hbm, b_hbm, o_ref, carry_ref, buf_ref, ptr_ref, last_ref, sem,
-    *, t: int, la: int, lb: int, n_cols: int, use_mxu: bool,
+    *, t: int, la: int, lb: int, prog, use_mxu: bool,
 ):
     r = pl.program_id(0)
     i = pl.program_id(1)
@@ -62,7 +58,7 @@ def _grid_merge2_kernel(
         cp.wait()
         ta = buf_ref[0][None, :]
         tb = buf_ref[1][None, :]
-        merged = merge2_cols(ta, tb, n_cols=n_cols, use_mxu=use_mxu)
+        merged = merge_runs(prog, ta, tb, use_mxu=use_mxu)
         o_ref[...] = merged[:, :t]
         carry_ref[...] = merged[:, t:]
         ptr_ref[0] = t
@@ -100,18 +96,19 @@ def _grid_merge2_kernel(
         # stream reads sentinels forever
         ptr_ref[0] = jnp.where(sel_a, jnp.minimum(pa + t, la - t), pa)
         ptr_ref[1] = jnp.where(sel_a, pb, jnp.minimum(pb + t, lb - t))
-        merged = merge2_cols(carry_ref[...], cur, n_cols=n_cols,
-                             use_mxu=use_mxu)
+        merged = merge_runs(prog, carry_ref[...], cur, use_mxu=use_mxu)
         o_ref[...] = merged[:, :t]
         carry_ref[...] = merged[:, t:]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "use_mxu", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "network", "use_mxu",
+                                             "interpret"))
 def grid_chunked_merge2(
     a: jnp.ndarray,
     b: jnp.ndarray,
     *,
     tile: int = 512,
+    network: str = "loms",
     use_mxu: bool = True,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
@@ -120,7 +117,10 @@ def grid_chunked_merge2(
     Equivalent to ``sort(concat([a, b], -1))`` with an O(tile) on-chip
     working set per row; the carry buffer never leaves VMEM between tile
     steps. The emitted prefix is exact for any input length (drain tiles
-    carry the finite dtype +sentinel; see chunked.py on aliasing)."""
+    carry the finite dtype +sentinel; see chunked.py on aliasing).
+    ``network`` names the registered family executing each tile merge —
+    the program is built outside the kernel, a static trace-time
+    constant."""
     interpret = resolve_interpret(interpret)
     bsz, na = a.shape
     nb = b.shape[-1]
@@ -141,7 +141,8 @@ def grid_chunked_merge2(
     bp = pad_tail_sorted(b, lb)
     out = pl.pallas_call(
         functools.partial(_grid_merge2_kernel, t=t, la=la, lb=lb,
-                          n_cols=pick_merge_cols(t, t), use_mxu=use_mxu),
+                          prog=merge_program(network, t, t),
+                          use_mxu=use_mxu),
         grid=(bsz, out_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),

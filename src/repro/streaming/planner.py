@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import ceil_pow2, pick_merge_cols
+from repro.kernels.common import ceil_pow2
+from repro.networks import capable_families, divisor_cols, pick_merge_cols
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.timing import time_jitted
@@ -60,8 +61,12 @@ def _target_bb(batch: int, target: int) -> int:
 class MergePlan:
     """Resolved knobs for one sort/merge problem (all kernel-static)."""
 
-    kind: str = "loms"  # 'loms' | 'bitonic' | 'schedule' (ragged fallback)
+    kind: str = "loms"  # 'loms' (pallas network kernel) | 'schedule' (ragged fallback)
     n_cols: int = 2
+    #: comparator-network family executed by the pallas kernels — the
+    #: per-size-class tournament winner ("loms", "s2ms", "periodic3",
+    #: "bitonic"); heuristic plans default to the paper's column device
+    network: str = "loms"
     block_batch: int = 8
     use_mxu: bool = True
     tile: int = 512  # chunked/streaming tile size (per input)
@@ -76,6 +81,7 @@ class MergePlan:
     def to_entry(self, us: Optional[float] = None) -> dict:
         d = {
             "kind": self.kind,
+            "network": self.network,
             "n_cols": self.n_cols,
             "block_batch": self.block_batch,
             "use_mxu": self.use_mxu,
@@ -92,6 +98,7 @@ class MergePlan:
         us = entry.get("us")
         return cls(
             kind=str(entry.get("kind", "loms")),
+            network=str(entry.get("network", "loms")),
             n_cols=int(entry["n_cols"]),
             block_batch=int(entry["block_batch"]),
             use_mxu=bool(entry["use_mxu"]),
@@ -131,7 +138,21 @@ def _vmem_bytes_sort(n: int, block_batch: int, dtype) -> int:
 
 
 def _feasible_cols(m: int, n: int) -> Tuple[int, ...]:
-    return tuple(c for c in (2, 4, 8, 16) if m % c == 0 and n % c == 0)
+    """All feasible LOMS column counts — the actual common divisors of
+    (m, n) >= 2 (``repro.networks.divisor_cols``), not a hardcoded pow2
+    list, so non-pow2 runs get real column-device candidates too."""
+    return divisor_cols(m, n)
+
+
+def _tournament_cols(m: int, n: int, limit: int = 3) -> Tuple[int, ...]:
+    """The ``limit`` feasible column counts nearest the comparator-cost
+    optimum C* = sqrt(m*n/(m+n)) — the sweep grid stays small even when
+    (m, n) has many divisors."""
+    cols = _feasible_cols(m, n)
+    if not cols:
+        return ()
+    c_star = (m * n / max(m + n, 1)) ** 0.5
+    return tuple(sorted(sorted(cols, key=lambda c: abs(c - c_star))[:limit]))
 
 
 def vmem_budget() -> int:
@@ -194,7 +215,7 @@ def plan_merge2(
     """Heuristic plan for one UP-m/DN-n batched merge."""
     # comparator cost model: stage1 m*n/C + stage2 (m+n)*C, minimized near
     # C* = sqrt(m*n/(m+n)) — the one home for the rule is
-    # kernels.common.pick_merge_cols (the in-kernel sort tree shares it)
+    # repro.networks.pick_merge_cols (the family generators share it)
     n_cols = pick_merge_cols(m, n)
     if n_cols == 1:
         # hole-y setup array: the pure-JAX schedule executor handles it
@@ -433,27 +454,44 @@ def _sorted_rows(rng, batch, n, dtype):
         jnp.asarray(rng.integers(0, 1 << 16, (batch, n))).astype(dtype), -1)
 
 
+def _network_mxu_opts(family: str, dtype) -> Tuple[bool, ...]:
+    # pair-network families never permute (compare-exchange in place), so
+    # use_mxu is a no-op for them; column devices sweep both engines
+    if family in ("loms", "s2ms") and _is_float(dtype):
+        return (True, False)
+    return (False,)
+
+
 def _merge2_candidates(m: int, n: int, batch: int, dtype) -> Iterable[MergePlan]:
-    for n_cols in _feasible_cols(m, n) or ():
-        for bb in (16, 8, 4, 1):
-            if bb > batch:
+    """Per-size-class tournament grid: every capable network family
+    (columns swept for the LOMS device) x block_batch x permute engine."""
+    for family in capable_families("merge2", (m, n)):
+        cols = _tournament_cols(m, n) if family == "loms" else (1,)
+        for n_cols in cols:
+            if family == "loms" and n_cols < 2:
                 continue
-            if _vmem_bytes_merge2(m, n, n_cols, bb, dtype) > 2 * _VMEM_BUDGET:
-                continue
-            for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
-                yield MergePlan(kind="loms", n_cols=n_cols, block_batch=bb,
-                                use_mxu=use_mxu, source="autotune")
+            for bb in (16, 8, 4, 1):
+                if bb > batch:
+                    continue
+                if _vmem_bytes_merge2(m, n, max(n_cols, 1), bb,
+                                      dtype) > 2 * _VMEM_BUDGET:
+                    continue
+                for use_mxu in _network_mxu_opts(family, dtype):
+                    yield MergePlan(kind="loms", network=family,
+                                    n_cols=n_cols, block_batch=bb,
+                                    use_mxu=use_mxu, source="autotune")
 
 
 def _sort_candidates(n: int, batch: int, dtype) -> Iterable[MergePlan]:
-    for bb in (16, 8, 4, 1):
-        if bb > batch:
-            continue
-        if _vmem_bytes_sort(n, bb, dtype) > 2 * _VMEM_BUDGET:
-            continue
-        for use_mxu in ((True, False) if _is_float(dtype) else (False,)):
-            yield MergePlan(kind="loms", block_batch=bb, use_mxu=use_mxu,
-                            source="autotune")
+    for family in capable_families("sort", (n,)):
+        for bb in (16, 8, 4, 1):
+            if bb > batch:
+                continue
+            if _vmem_bytes_sort(n, bb, dtype) > 2 * _VMEM_BUDGET:
+                continue
+            for use_mxu in _network_mxu_opts(family, dtype):
+                yield MergePlan(kind="loms", network=family, block_batch=bb,
+                                use_mxu=use_mxu, source="autotune")
 
 
 def _topk_candidates(n: int, k: int, batch: int, dtype) -> Iterable[MergePlan]:
@@ -492,6 +530,11 @@ def _autotune(
     cache.put(key, best.to_entry())
     obs_metrics.counter("autotune.sweeps").inc(op=op)
     obs_metrics.histogram("autotune.best_us").observe(best_us, op=op)
+    # tournament telemetry: how many sweeps compared multiple network
+    # families, and which family each size class picked
+    if len({c.network for c in cands}) > 1:
+        obs_metrics.counter("tournament.sweeps").inc(op=op)
+    obs_metrics.counter("tournament.picks").inc(op=op, family=best.network)
     return best
 
 
@@ -506,11 +549,12 @@ def autotune_merge2(
     interpret: Optional[bool] = None,
     iters: int = 3,
 ) -> MergePlan:
-    """Measure candidate (n_cols, block_batch, use_mxu) triples for one
-    UP-m/DN-n batched merge; persist and return the winner.
+    """Per-size-class tournament for one UP-m/DN-n batched merge: sweep
+    every capable network family (LOMS column counts included) crossed
+    with (block_batch, use_mxu); persist and return the winner.
 
     A cache hit skips measurement entirely. Falls back to the heuristic
-    plan when no candidate is feasible (ragged m/n)."""
+    plan when no candidate is feasible."""
     from repro.kernels.loms_merge import loms_merge2_pallas
 
     cache = cache if cache is not None else default_cache()
@@ -529,8 +573,9 @@ def autotune_merge2(
 
     def runner(p: MergePlan):
         return lambda: loms_merge2_pallas(
-            a, b, n_cols=p.n_cols, block_batch=p.block_batch,
-            use_mxu=p.use_mxu, interpret=interpret,
+            a, b, network=p.network, n_cols=p.n_cols,
+            block_batch=p.block_batch, use_mxu=p.use_mxu,
+            interpret=interpret,
         )
 
     return _autotune("merge2", key, cands, runner,
@@ -546,7 +591,8 @@ def autotune_sort(
     interpret: Optional[bool] = None,
     iters: int = 3,
 ) -> MergePlan:
-    """Measure block_batch/use_mxu candidates for the fused sort kernel."""
+    """Per-size-class tournament for the fused sort kernel: capable
+    network families x block_batch x use_mxu."""
     from repro.kernels.sort import loms_sort_pallas
 
     cache = cache if cache is not None else default_cache()
@@ -561,8 +607,8 @@ def autotune_sort(
 
     def runner(p: MergePlan):
         return lambda: loms_sort_pallas(
-            x, block_batch=p.block_batch, use_mxu=p.use_mxu,
-            interpret=interpret,
+            x, network=p.network, block_batch=p.block_batch,
+            use_mxu=p.use_mxu, interpret=interpret,
         )
 
     return _autotune("sort", key, list(_sort_candidates(n, batch, dtype)),
@@ -606,6 +652,60 @@ def autotune_topk(
                      runner, fallback, cache, iters)
 
 
+def autotune_segmented(
+    widths: Sequence[int],
+    *,
+    n_segments: int = 8,
+    dtype=jnp.float32,
+    cache: Optional[AutotuneCache] = None,
+    interpret: Optional[bool] = None,
+    iters: int = 3,
+) -> MergePlan:
+    """Per-size-class tournament for one segmented class launch (sort
+    when ``widths`` has one entry, 2-way merge when two) — the segmented
+    bucketer's classes pick a network the same way the dense ops do."""
+    from repro.kernels.segmented import (segment_class_merge_pallas,
+                                         segment_class_sort_pallas)
+
+    widths = tuple(int(w) for w in widths)
+    cache = cache if cache is not None else default_cache()
+    key = plan_key("segmented", shapes=(n_segments,) + widths,
+                   dtype=jnp.dtype(dtype).name)
+    hit = cache.get(key)
+    if hit is not None:
+        return MergePlan.from_entry(hit, source="cache")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fallback = plan_segmented(widths, n_segments=n_segments, dtype=dtype)
+    rng = np.random.default_rng(0)
+    if len(widths) == 1:
+        w = widths[0]
+        x = jnp.asarray(rng.normal(size=(n_segments, w))).astype(dtype)
+        lens = jnp.asarray(
+            rng.integers(1, w + 1, (n_segments, 1)), jnp.int32)
+        cands = list(_sort_candidates(w, n_segments, dtype))
+
+        def runner(p: MergePlan):
+            return lambda: segment_class_sort_pallas(
+                x, lens, network=p.network, block_batch=p.block_batch,
+                use_mxu=p.use_mxu, interpret=interpret)[0]
+    else:
+        wa, wb = widths
+        a = _sorted_rows(rng, n_segments, wa, dtype)
+        b = _sorted_rows(rng, n_segments, wb, dtype)
+        la = jnp.asarray(rng.integers(1, wa + 1, (n_segments, 1)), jnp.int32)
+        lb = jnp.asarray(rng.integers(1, wb + 1, (n_segments, 1)), jnp.int32)
+        cands = list(_merge2_candidates(wa, wb, n_segments, dtype))
+
+        def runner(p: MergePlan):
+            return lambda: segment_class_merge_pallas(
+                a, b, la, lb, network=p.network, n_cols=max(p.n_cols, 1),
+                block_batch=p.block_batch, use_mxu=p.use_mxu,
+                interpret=interpret)[0]
+
+    return _autotune("segmented", key, cands, runner, fallback, cache, iters)
+
+
 def autotune_op(
     op: str,
     lengths: Sequence[int],
@@ -628,6 +728,10 @@ def autotune_op(
     if op == "topk":
         return autotune_topk(lengths[0], k or 1, batch=batch, dtype=dtype,
                              cache=cache, interpret=interpret, iters=iters)
+    if op == "segmented":
+        return autotune_segmented(lengths, n_segments=batch, dtype=dtype,
+                                  cache=cache, interpret=interpret,
+                                  iters=iters)
     # no measured tuner yet: fall back to the heuristic (still cached-keyed
     # so a future tuner slots in without call-site changes)
     return plan_op(op, lengths, batch=batch, dtype=dtype, k=k, cache=cache)

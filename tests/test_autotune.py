@@ -199,6 +199,114 @@ def test_sort_fits_vmem_gates():
     assert not sort_fits_vmem(1 << 17)
 
 
+# ---------------------------------------------------------------------------
+# network-family tournament (PR 8)
+# ---------------------------------------------------------------------------
+
+
+def test_tournament_sweeps_multiple_families(cache):
+    from repro.networks import family_names
+    from repro.streaming.planner import _merge2_candidates, _sort_candidates
+
+    cands = list(_merge2_candidates(16, 16, batch=8, dtype=jnp.float32))
+    families = {c.network for c in cands}
+    assert len(families) > 1 and families <= set(family_names())
+    assert {"loms", "s2ms", "bitonic", "periodic3"} <= families
+    # pow2-total constraint: bitonic drops out of a (12, 9) class
+    ragged = {c.network
+              for c in _merge2_candidates(12, 9, batch=8, dtype=jnp.float32)}
+    assert "bitonic" not in ragged and "s2ms" in ragged
+    # sort sweeps offer the same pluggable families
+    sort_fams = {c.network
+                 for c in _sort_candidates(32, batch=8, dtype=jnp.float32)}
+    assert len(sort_fams) > 1
+
+
+def test_tournament_winner_round_trips_network(cache):
+    plan = autotune_merge2(16, 16, batch=4, dtype=jnp.float32, cache=cache,
+                           iters=1)
+    assert plan.source == "autotune"
+    from repro.networks import family_names
+
+    assert plan.network in family_names()
+    # the v4 entry persists the family and a cache hit replays it
+    hit = plan_op("merge2", (16, 16), batch=4, dtype=jnp.float32, cache=cache)
+    assert hit.source == "cache"
+    assert hit.network == plan.network
+    entry = cache.get(plan_key("merge2", shapes=(4, 16, 16), dtype="float32"))
+    assert entry["network"] == plan.network
+    assert entry["_schema"] == SCHEMA_VERSION
+
+
+def test_v3_entries_without_network_ignored(cache):
+    # v3 entries were tuned LOMS-only: replaying one would pin the class
+    # to the column device and silently skip the tournament's choice
+    assert SCHEMA_VERSION >= 4
+    key = plan_key("merge2", shapes=(8, 32, 32), dtype="float32")
+    v3 = {k: v for k, v in MergePlan(block_batch=4).to_entry().items()
+          if k != "network"}
+    cache._entries[key] = dict(v3, _schema=3)
+    assert cache.get(key) is None
+    plan = plan_op("merge2", (32, 32), batch=8, dtype=jnp.float32,
+                   cache=cache)
+    assert plan.source == "heuristic" and plan.network == "loms"
+
+
+def test_network_defaults_loms_for_foreign_entries(cache):
+    # a hand-written current-schema entry without the field degrades to
+    # the LOMS default rather than KeyErroring
+    key = plan_key("sort", shapes=(8, 64), dtype="float32")
+    entry = {k: v for k, v in MergePlan(block_batch=4).to_entry().items()
+             if k != "network"}
+    cache.put(key, entry)
+    plan = plan_op("sort", (64,), batch=8, dtype=jnp.float32, cache=cache)
+    assert plan.source == "cache" and plan.network == "loms"
+
+
+def test_autotune_segmented_persists_and_plan_op_reads_it(cache):
+    from repro.streaming.planner import autotune_segmented
+
+    plan = autotune_segmented((16,), n_segments=4, dtype=jnp.float32,
+                              cache=cache, iters=1)
+    assert plan.source == "autotune"
+    hit = plan_op("segmented", (16,), batch=4, dtype=jnp.float32, cache=cache)
+    assert hit.source == "cache"
+    assert hit.network == plan.network
+    # the merge-class flavor tunes (wa, wb) pairs under the same keying
+    mplan = autotune_segmented((8, 16), n_segments=4, dtype=jnp.float32,
+                               cache=cache, iters=1)
+    mhit = plan_op("segmented", (8, 16), batch=4, dtype=jnp.float32,
+                   cache=cache)
+    assert mhit.source == "cache" and mhit.network == mplan.network
+
+
+def test_tournament_counters(cache):
+    import repro.obs as obs
+    from repro.obs import metrics as obs_metrics
+
+    prev = obs.set_enabled(True)
+    try:
+        picks = obs_metrics.counter("tournament.picks")
+        sweeps = obs_metrics.counter("tournament.sweeps")
+        p0, s0 = picks.total(), sweeps.total()
+        plan = autotune_merge2(8, 8, batch=4, dtype=jnp.float32, cache=cache,
+                               iters=1)
+        assert picks.total() == p0 + 1
+        assert picks.value(op="merge2", family=plan.network) >= 1
+        assert sweeps.total() == s0 + 1  # >1 family competed at (8, 8)
+    finally:
+        obs.set_enabled(prev)
+
+
+def test_decision_table_carries_network():
+    from repro.api.dispatch import decision_table
+
+    rows = decision_table("tpu")
+    assert all("network" in r for r in rows)
+    pallas = [r for r in rows if r["backend"] == "pallas"]
+    assert pallas and all(r["network"] for r in pallas)
+
+
 def test_prime_batch_kernel_runs_padded():
     # end-to-end: a ragged batch through the pallas merge wrapper
     from repro.kernels.ops import merge2
