@@ -29,6 +29,14 @@ additionally gates the scheduler rows: every request drains with the
 right token count, the latency percentiles are ordered, and a sampled
 pair of requests is re-run solo through one-shot ``generate()`` and must
 match bit-for-bit (the scheduler's oracle contract).
+
+Fault rows (``kind="faults"``, opt-in via ``--faults``): the offered-load
+case re-run under seeded probabilistic faults on every scheduler seam
+(``sched.prefill/insert/decode``) plus tight ``ttl_ticks`` deadlines,
+reporting how many faults fired and how the requests ended
+(done / timed-out / failed). The gate is the §16 drain invariant — every
+request terminal, no slot or page leaked — plus bit-equality of every
+*completed* request against the fault-free run.
 """
 from __future__ import annotations
 
@@ -180,6 +188,120 @@ def _run_load_case(model, n_req, rate, p_lo, p_hi, new_tokens,
     return row, failures
 
 
+def _run_fault_case(model, n_req, rate, p_lo, p_hi, new_tokens,
+                    n_slots, page_size, pages_per_slot, seed):
+    """The chaos row (DESIGN.md §16): the offered-load case re-run with
+    seeded probabilistic faults armed across every scheduler seam plus a
+    couple of tight virtual-tick deadlines. Reports how the engine
+    degraded (done / timed-out / failed / retried); the gate asserts the
+    drain invariant — every request terminal, no slot or page leaked —
+    and that whatever *completed* matches the fault-free run bit for
+    bit."""
+    from repro.resilience import failpoints, fires, reset_failpoints
+    from repro.serving.scheduler import (
+        SamplingParams, ScheduledEngine, SchedulerConfig, TERMINAL_STATES)
+
+    cfg = get_smoke_config_cached(model)
+    params = model_params_cached(model)
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(1.0 / rate, n_req))).astype(int)
+    plens = rng.integers(p_lo, p_hi + 1, n_req)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    # the last two requests carry tight virtual-tick TTLs so the row also
+    # exercises deadline reclamation, not just launch faults
+    sps = [SamplingParams(k=int(rng.choice([1, 4, 8])),
+                          temperature=float(rng.choice([0.0, 0.7, 1.0])),
+                          max_new_tokens=new_tokens, seed=int(i),
+                          ttl_ticks=(3 if i >= n_req - 2 else None))
+           for i in range(n_req)]
+
+    def _drive(chaos: bool):
+        sched = SchedulerConfig(n_slots=n_slots, page_size=page_size,
+                                pages_per_slot=pages_per_slot,
+                                max_retries=1, retry_backoff_s=0.0)
+        eng = ScheduledEngine(params, cfg, sched)
+        rids = [eng.submit(p, sp, arrival=int(a))
+                for p, sp, a in zip(prompts, sps, arrivals)]
+        if chaos:
+            with failpoints({"sched": f"p:0.2:{seed + 7}"}):
+                out = eng.run()
+                n_fired = fires("sched")
+        else:
+            out, n_fired = eng.run(), 0
+        return eng, rids, out, n_fired
+
+    ref_eng, ref_rids, ref_out, _ = _drive(chaos=False)
+    reset_failpoints()
+    eng, rids, out, n_fired = _drive(chaos=True)
+    by_state = {}
+    for r in eng.requests.values():
+        by_state[r.state.value] = by_state.get(r.state.value, 0) + 1
+    row = {
+        "kind": "faults",
+        "model": model,
+        "n_requests": n_req,
+        "faults_injected": n_fired,
+        "done": by_state.get("done", 0),
+        "timed_out": by_state.get("timed_out", 0),
+        "failed": by_state.get("failed", 0),
+        "ticks": eng.t,
+        "platform": jax.default_backend(),
+    }
+    failures = []
+    nonterminal = [r.rid for r in eng.requests.values()
+                   if r.state not in TERMINAL_STATES]
+    if nonterminal:
+        failures.append(f"{model}: non-terminal requests under faults: "
+                        f"{nonterminal}")
+    if eng.slots.free_slot_count != n_slots:
+        failures.append(f"{model}: leaked slots under faults")
+    if eng.slots.free_page_count != eng.pool.n_pages - 1:
+        failures.append(f"{model}: leaked pages under faults")
+    # a TTL request can *complete* under chaos yet time out fault-free
+    # (a failed neighbor frees its slot earlier), so compare only the
+    # requests that finished in both runs — the pytest chaos suite owns
+    # the strict solo-generate oracle
+    for rid, ref_rid in zip(rids, ref_rids):
+        if (rid in out and ref_rid in ref_out
+                and not np.array_equal(out[rid], ref_out[ref_rid])):
+            failures.append(
+                f"{model}: rid {rid} completed under faults but differs "
+                f"from the fault-free run")
+    return row, failures
+
+
+def get_smoke_config_cached(model):
+    from repro.configs import get_smoke_config
+
+    return get_smoke_config(model)
+
+
+_PARAMS_CACHE = {}
+
+
+def model_params_cached(model):
+    from repro.models import model_init
+
+    if model not in _PARAMS_CACHE:
+        _PARAMS_CACHE[model] = model_init(
+            jax.random.PRNGKey(0), get_smoke_config_cached(model))[0]
+    return _PARAMS_CACHE[model]
+
+
+def collect_fault_rows():
+    rows, failures = [], []
+    for case in LOAD_CASES:
+        row, fails = _run_fault_case(*case)
+        rows.append(row)
+        failures += fails
+        emit(f"serve_faults_{case[0]}_n{case[1]}", row["ticks"],
+             f"fired {row['faults_injected']} done {row['done']} "
+             f"timed_out {row['timed_out']} failed {row['failed']}")
+    return rows, failures
+
+
 def collect_load_rows():
     rows, failures = [], []
     for case in LOAD_CASES:
@@ -265,11 +387,15 @@ def run():
     return rows, failures
 
 
-def main(check: bool = False) -> int:
+def main(check: bool = False, faults: bool = False) -> int:
     rows, failures = collect_rows()
     lrows, lfails = collect_load_rows()
     rows += lrows
     failures += lfails
+    if faults:
+        frows, ffails = collect_fault_rows()
+        rows += frows
+        failures += ffails
     if check:
         _obs_smoke(failures)
     if rows:
@@ -283,4 +409,5 @@ def main(check: bool = False) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main(check="--check" in sys.argv))
+    sys.exit(main(check="--check" in sys.argv,
+                  faults="--faults" in sys.argv))

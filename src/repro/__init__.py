@@ -12,9 +12,11 @@ Subsystems: ``repro.core`` (schedules + executor), ``repro.kernels``
 (Pallas TPU sorters), ``repro.streaming`` (chunked pipelines, planner,
 device-tree top-k), ``repro.models`` / ``repro.serving`` (the LLM stack
 consuming them), ``repro.obs`` (span tracing + metrics + timing export,
-inert unless ``REPRO_OBS`` is set; DESIGN.md §13).
+inert unless ``REPRO_OBS`` is set; DESIGN.md §13), ``repro.resilience``
+(fault injection + degradation ladder + circuit breakers, DESIGN.md §16).
 """
 from repro import obs  # noqa: F401
+from repro import resilience  # noqa: F401
 from repro.api import (  # noqa: F401
     Backend,
     Decision,
@@ -48,6 +50,7 @@ __all__ = [
     "obs",
     "plan",
     "register_backend",
+    "resilience",
     "segment_argmax",
     "segment_merge",
     "segment_sort",

@@ -67,8 +67,10 @@ class Decision:
     """One routing outcome: backend name, kernel detail, human reason.
 
     ``source`` records how the backend was picked: ``"rule"`` (the static
-    ladder) or ``"measured"`` (a faster measured route sample overrode the
-    rule). ``measured_us`` carries the winning sample when one existed.
+    ladder), ``"measured"`` (a faster measured route sample overrode the
+    rule), or ``"breaker"`` (an open circuit breaker rerouted the call
+    down the degradation ladder — repro.resilience).
+    ``measured_us`` carries the winning sample when one existed.
     ``network`` names the comparator-network family the pallas kernels
     will execute (the autotuner-tournament winner when a tuned entry
     exists for this point; ``None`` for non-pallas backends)."""
@@ -162,6 +164,10 @@ def plan(spec: SortSpec, par=None) -> Decision:
     with obs_trace.span("plan", kind="trace", op=spec.op):
         dec = _resolve(spec, par)
         dec = _measured_override(spec, dec)
+        # breaker avoidance (repro.resilience): a rung with an open
+        # circuit breaker for this (op, shape-class) is skipped before it
+        # can fail again; one dict miss when no failure was ever recorded
+        dec = _resilience_reroute(spec, dec)
         if dec.backend == "pallas":
             entry = _tuned_entry(spec)
             dec = dataclasses.replace(
@@ -174,6 +180,12 @@ def plan(spec: SortSpec, par=None) -> Decision:
             source=dec.source, network=dec.network or "-",
         )
     return dec
+
+
+def _resilience_reroute(spec: SortSpec, dec: Decision) -> Decision:
+    from repro.resilience.ladder import reroute
+
+    return reroute(spec, dec)
 
 
 def _resolve(spec: SortSpec, par=None) -> Decision:

@@ -184,6 +184,9 @@ def fused_sort(cfg: FusedCfg, x: jnp.ndarray, leaves: Tuple[jnp.ndarray, ...]):
 
 def _fused_sort_run(cfg, x, leaves, want_perm: bool):
     from repro.kernels.sort import loms_sort_pallas
+    from repro.resilience.failpoints import failpoint
+
+    failpoint("fused.launch.sort")
 
     res = loms_sort_pallas(
         x, tuple(leaves), network=cfg.network, block_batch=cfg.block_batch,
@@ -257,6 +260,9 @@ def fused_merge_k(cfg: FusedCfg, lists: Tuple[jnp.ndarray, ...],
 
 
 def _fused_merge_k_run(cfg, lists, leaves, want_perm: bool):
+    from repro.resilience.failpoints import failpoint
+
+    failpoint("fused.launch.merge_k")
     if len(lists) == 2 and cfg.op == "merge":
         from repro.kernels.loms_merge import loms_merge2_pallas
 
@@ -330,6 +336,9 @@ def fused_topk(cfg: FusedCfg, x: jnp.ndarray):
 
 
 def _fused_topk_impl(cfg, x):
+    from repro.resilience.failpoints import failpoint
+
+    failpoint("fused.launch.topk")
     from repro.kernels.ops import topk_tiles
     from repro.kernels.topk import ROUTER_TOPK_MAX, router_topk_pallas, vocab_topk_pallas
 

@@ -38,6 +38,7 @@ from .payload import (
 )
 from .registry import get_backend
 from .spec import SortSpec
+from repro.resilience.ladder import LadderSkip, run_ladder, rungs_for
 
 __all__ = ["merge", "merge_k", "sort", "topk", "median_of_lists",
            "segment_sort", "segment_merge", "segment_topk", "segment_argmax"]
@@ -177,12 +178,38 @@ def _fused_leaves(payload, ax: int, ndim: int):
     return tuple(lanes), rebuild
 
 
-def _unfusable_fallback(dec, spec):
-    """Planner picked pallas but the fused paths are switched off: specs
-    the value-only generic adapters cannot carry drop to the executor."""
-    if dec.backend == "pallas" and spec.needs_perm:
-        return get_backend("schedule")
-    return get_backend(dec.backend)
+def _segmented_degrade(spec, call, use_kernel: bool):
+    """Kernel → reference degradation for the segmented backend.
+
+    The per-segment XLA reference is the subsystem's own oracle, so when
+    the bucketed kernel path fails (resilience on, auto-routed) the op
+    re-runs with ``use_kernel=False`` and the failure feeds a breaker on
+    the synthetic ``segmented_kernel`` rung — an open breaker then skips
+    the kernel attempt outright until its cooldown probe."""
+    from repro.resilience.breaker import breaker_for
+    from repro.resilience.ladder import resilience_enabled, spec_class
+    from .spec import BACKEND_AUTO
+
+    if not use_kernel:
+        return call(False)
+    if not (resilience_enabled() and spec.backend == BACKEND_AUTO):
+        return call(True)
+    cls = spec_class(spec)
+    br = breaker_for(spec.op, "segmented_kernel", cls, create=False)
+    if br is not None and not br.allow():
+        return call(False)
+    try:
+        result = call(True)
+    except Exception as e:  # noqa: BLE001 — reference path is the oracle
+        from repro.obs import metrics as obs_metrics
+
+        (br or breaker_for(spec.op, "segmented_kernel", cls)).record_failure()
+        obs_metrics.counter("resilience.fallbacks").inc(
+            op=spec.op, rung="segmented_kernel", err=type(e).__name__)
+        return call(False)
+    if br is not None:
+        br.record_success()
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -264,11 +291,14 @@ def merge_k(
         nan_policy=nan_policy,
     )
     dec = plan(spec, par)
-    if dec.backend == "pallas":
-        # fused single-launch path: key transform, descending handling and
-        # payload permutes all run inside the kernel (repro.api.fused)
-        cfg = fused_cfg_for(spec, batch, flats[0].dtype)
-        if cfg is not None:
+
+    def attempt(rung: str):
+        if rung == "fused":
+            # fused single-launch path: key transform, descending handling
+            # and payload permutes all run inside the kernel (api.fused)
+            cfg = fused_cfg_for(spec, batch, flats[0].dtype)
+            if cfg is None:
+                raise LadderSkip
             total = sum(lens)
             if payload is None:
                 out2, _ = fused_merge_k(cfg, tuple(flats), ())
@@ -278,38 +308,40 @@ def merge_k(
             out2, pouts = fused_merge_k(cfg, tuple(flats), lanes)
             return (from_batched_last(out2, lead, ax, ndim),
                     rebuild(pouts, total))
-    be = _unfusable_fallback(dec, spec)
-    flats, decode = _encode_lists(flats, nan_policy)
-    run_kw = {} if par is None else {"par": par}
+        be = get_backend(rung)
+        enc, decode = _encode_lists(flats, nan_policy)
+        run_kw = {} if par is None else {"par": par}
 
-    if descending:  # descending-sorted inputs: reverse -> ascending problem
-        flats = [f[:, ::-1] for f in flats]
-    pos = None
-    if spec.needs_perm:
-        offs = [sum(lens[:i]) for i in range(len(lens))]
-        pos = [_iota_rows(ln, batch, descending, off)
-               for ln, off in zip(lens, offs)]
-    opname = "merge" if spec.op == "merge" else "merge_k"
-    if opname == "merge":
-        out2, perm2 = be.run["merge"](flats[0], flats[1], spec=spec,
-                                      pos=None if pos is None else (pos[0], pos[1]),
-                                      **run_kw)
-    else:
-        out2, perm2 = be.run["merge_k"](flats, spec=spec, pos=pos, **run_kw)
-    if descending:
-        out2 = out2[:, ::-1]
-        perm2 = None if perm2 is None else perm2[:, ::-1]
-    if stable:
-        out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
-    raw_cat = None if decode is None else jnp.concatenate(raw_flats, axis=-1)
-    out = from_batched_last(
-        _restore_values(out2, perm2, raw_cat, decode, descending),
-        lead, ax, ndim)
-    if payload is None:
-        return out
-    ptree = concat_payload_trees(list(payload), ax, ndim)
-    perm = from_batched_last(perm2, lead, ax, ndim)
-    return out, take_payload_tree(ptree, perm, ax, ndim)
+        if descending:  # descending-sorted inputs: reverse -> ascending
+            enc = [f[:, ::-1] for f in enc]
+        pos = None
+        if spec.needs_perm:
+            offs = [sum(lens[:i]) for i in range(len(lens))]
+            pos = [_iota_rows(ln, batch, descending, off)
+                   for ln, off in zip(lens, offs)]
+        if spec.op == "merge":
+            out2, perm2 = be.run["merge"](enc[0], enc[1], spec=spec,
+                                          pos=None if pos is None else (pos[0], pos[1]),
+                                          **run_kw)
+        else:
+            out2, perm2 = be.run["merge_k"](enc, spec=spec, pos=pos, **run_kw)
+        if descending:
+            out2 = out2[:, ::-1]
+            perm2 = None if perm2 is None else perm2[:, ::-1]
+        if stable:
+            out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
+        raw_cat = (None if decode is None
+                   else jnp.concatenate(raw_flats, axis=-1))
+        out = from_batched_last(
+            _restore_values(out2, perm2, raw_cat, decode, descending),
+            lead, ax, ndim)
+        if payload is None:
+            return out
+        ptree = concat_payload_trees(list(payload), ax, ndim)
+        perm = from_batched_last(perm2, lead, ax, ndim)
+        return out, take_payload_tree(ptree, perm, ax, ndim)
+
+    return run_ladder(spec, rungs_for(spec, dec), attempt)
 
 
 # ---------------------------------------------------------------------------
@@ -352,12 +384,15 @@ def sort(
         nan_policy=nan_policy,
     )
     dec = plan(spec, par)
-    if dec.backend == "pallas":
-        # fused single-launch path: the kernel encodes the total-order
-        # keys on load, permutes payload lanes in VMEM, reverses for
-        # descending and decodes on store — no XLA encode/decode/gather
-        cfg = fused_cfg_for(spec, batch, x2.dtype)
-        if cfg is not None:
+
+    def attempt(rung: str):
+        if rung == "fused":
+            # fused single-launch path: the kernel encodes the total-order
+            # keys on load, permutes payload lanes in VMEM, reverses for
+            # descending and decodes on store — no XLA encode/decode/gather
+            cfg = fused_cfg_for(spec, batch, x2.dtype)
+            if cfg is None:
+                raise LadderSkip
             if payload is None:
                 out2, _ = fused_sort(cfg, x2, ())
                 return from_batched_last(out2, lead, ax, ndim)
@@ -365,23 +400,25 @@ def sort(
             out2, pouts = fused_sort(cfg, x2, lanes)
             return (from_batched_last(out2, lead, ax, ndim),
                     rebuild(pouts, n))
-    be = _unfusable_fallback(dec, spec)
-    (x2,), decode = _encode_lists([x2], nan_policy)
-    run_kw = {} if par is None else {"par": par}
-    pos = _iota_rows(n, batch, False) if spec.needs_perm else None
-    out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos, **run_kw)
-    if descending:  # ascending network sort, reversed read-out
-        out2 = out2[:, ::-1]
-        perm2 = None if perm2 is None else perm2[:, ::-1]
-    if stable:
-        out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
-    out = from_batched_last(
-        _restore_values(out2, perm2, raw_x2, decode, descending),
-        lead, ax, ndim)
-    if payload is None:
-        return out
-    perm = from_batched_last(perm2, lead, ax, ndim)
-    return out, take_payload_tree(payload, perm, ax, ndim)
+        be = get_backend(rung)
+        (enc,), decode = _encode_lists([x2], nan_policy)
+        run_kw = {} if par is None else {"par": par}
+        pos = _iota_rows(n, batch, False) if spec.needs_perm else None
+        out2, perm2 = be.run["sort"](enc, spec=spec, pos=pos, **run_kw)
+        if descending:  # ascending network sort, reversed read-out
+            out2 = out2[:, ::-1]
+            perm2 = None if perm2 is None else perm2[:, ::-1]
+        if stable:
+            out2, perm2 = stabilize_ties(out2, perm2, descending=descending)
+        out = from_batched_last(
+            _restore_values(out2, perm2, raw_x2, decode, descending),
+            lead, ax, ndim)
+        if payload is None:
+            return out
+        perm = from_batched_last(perm2, lead, ax, ndim)
+        return out, take_payload_tree(payload, perm, ax, ndim)
+
+    return run_ladder(spec, rungs_for(spec, dec), attempt)
 
 
 # ---------------------------------------------------------------------------
@@ -438,30 +475,45 @@ def topk(
         has_payload=payload is not None, backend=backend, device=_device(),
         sharded=sharded, nan_policy=nan_policy,
     )
-    decode = None
     if not descending:
         # bottom-k ascending: ascending sort prefix (executor path only)
         if backend not in ("auto", "schedule", "lax"):
             raise ValueError("descending=False supports backend auto|schedule|lax")
         be = get_backend("schedule" if backend == "auto" else backend)
-        (x2,), decode = _encode_lists([x2], nan_policy)
+        (enc,), decode = _encode_lists([x2], nan_policy)
         pos = _iota_rows(n, batch, False)
-        out2, perm2 = be.run["sort"](x2, spec=spec, pos=pos)
-        vals2, idx2 = out2[:, :k], perm2[:, :k]
-    else:
-        dec = plan(spec, par)
-        cfg = (fused_cfg_for(spec, batch, x2.dtype)
-               if dec.backend == "pallas" and not stable else None)
-        if cfg is not None:
+        out2, perm2 = be.run["sort"](enc, spec=spec, pos=pos)
+        return _topk_finish(out2[:, :k], perm2[:, :k], decode, raw_x2,
+                            lead, ax, ndim, stable, descending, payload,
+                            with_indices)
+
+    dec = plan(spec, par)
+
+    def attempt(rung: str):
+        if rung == "fused":
+            cfg = (fused_cfg_for(spec, batch, x2.dtype)
+                   if not stable else None)
+            if cfg is None:
+                raise LadderSkip
             # fused: key transform inside the kernels, values come back
             # decoded — skip the XLA encode and the gather-restore
             vals2, idx2 = fused_topk(cfg, x2)
-        else:
-            be = get_backend(dec.backend)
-            (x2,), decode = _encode_lists([x2], nan_policy)
-            vals2, idx2 = be.run["topk"](x2, k, spec=spec, par=par,
-                                         block=block)
-            idx2 = idx2.astype(jnp.int32)
+            return _topk_finish(vals2, idx2, None, raw_x2, lead, ax, ndim,
+                                stable, descending, payload, with_indices)
+        be = get_backend(rung)
+        (enc,), decode = _encode_lists([x2], nan_policy)
+        vals2, idx2 = be.run["topk"](enc, k, spec=spec, par=par, block=block)
+        return _topk_finish(vals2, idx2.astype(jnp.int32), decode, raw_x2,
+                            lead, ax, ndim, stable, descending, payload,
+                            with_indices)
+
+    return run_ladder(spec, rungs_for(spec, dec), attempt)
+
+
+def _topk_finish(vals2, idx2, decode, raw_x2, lead, ax, ndim, stable,
+                 descending, payload, with_indices):
+    """Shared top-k post-pass: tie stabilization, value restore, axis
+    un-flattening, payload gather."""
     if stable:
         vals2, idx2 = stabilize_ties(vals2, idx2, descending=descending)
     vals = from_batched_last(_restore_values(vals2, idx2, raw_x2, decode),
@@ -523,9 +575,11 @@ def segment_sort(
         nan_policy=nan_policy, segment_offsets=(offs,),
     )
     be, use_kernel = _segmented_call(spec)
-    out, _, ptree = be.run["sort"](
-        values, spec=spec, descending=descending, payload=payload,
-        nan_policy=nan_policy, use_kernel=use_kernel)
+    out, _, ptree = _segmented_degrade(
+        spec, lambda uk: be.run["sort"](
+            values, spec=spec, descending=descending, payload=payload,
+            nan_policy=nan_policy, use_kernel=uk),
+        use_kernel)
     return out if payload is None else (out, ptree)
 
 
@@ -562,9 +616,11 @@ def segment_merge(
         segment_offsets=(offs_a, offs_b),
     )
     be, use_kernel = _segmented_call(spec)
-    out, _, ptree, out_offs = be.run["merge"](
-        a, b, spec=spec, descending=descending, payload=payload,
-        nan_policy=nan_policy, use_kernel=use_kernel)
+    out, _, ptree, out_offs = _segmented_degrade(
+        spec, lambda uk: be.run["merge"](
+            a, b, spec=spec, descending=descending, payload=payload,
+            nan_policy=nan_policy, use_kernel=uk),
+        use_kernel)
     if payload is None:
         return out, out_offs
     return out, ptree, out_offs
@@ -602,9 +658,11 @@ def segment_topk(
         segment_offsets=(offs,),
     )
     be, use_kernel = _segmented_call(spec)
-    out, idx, ptree, out_offs = be.run["topk"](
-        values, ks, spec=spec, descending=descending, payload=payload,
-        nan_policy=nan_policy, use_kernel=use_kernel)
+    out, idx, ptree, out_offs = _segmented_degrade(
+        spec, lambda uk: be.run["topk"](
+            values, ks, spec=spec, descending=descending, payload=payload,
+            nan_policy=nan_policy, use_kernel=uk),
+        use_kernel)
     if payload is None:
         return out, idx, out_offs
     return out, idx, ptree, out_offs
@@ -629,8 +687,11 @@ def segment_argmax(
         device=_device(), nan_policy=nan_policy, segment_offsets=(offs,),
     )
     be, use_kernel = _segmented_call(spec)
-    return be.run["argmax"](values, spec=spec, nan_policy=nan_policy,
-                            use_kernel=use_kernel)
+    return _segmented_degrade(
+        spec, lambda uk: be.run["argmax"](values, spec=spec,
+                                          nan_policy=nan_policy,
+                                          use_kernel=uk),
+        use_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -669,9 +730,15 @@ def median_of_lists(
         backend=backend, device=_device(), nan_policy=nan_policy,
     )
     dec = plan(spec, par)
-    be = get_backend(dec.backend)
-    out2 = be.run["median"](flats, spec=spec)
-    # scalar per batch row: restore the lead shape
-    if decode is not None:
-        out2 = _decode_median(jnp.concatenate(flats_raw, axis=-1), out2)
-    return out2.reshape(lead)
+
+    def attempt(rung: str):
+        if rung == "fused":
+            raise LadderSkip  # no fused median kernel
+        be = get_backend(rung)
+        out2 = be.run["median"](flats, spec=spec)
+        # scalar per batch row: restore the lead shape
+        if decode is not None:
+            out2 = _decode_median(jnp.concatenate(flats_raw, axis=-1), out2)
+        return out2.reshape(lead)
+
+    return run_ladder(spec, rungs_for(spec, dec), attempt)

@@ -36,6 +36,7 @@ from typing import Callable, Dict, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.resilience.failpoints import failpoint
 from .spec import SortSpec
 
 
@@ -83,6 +84,8 @@ def backend_names():
 def _sched_merge(a, b, *, spec, pos=None, par=None):
     from . import schedules
 
+    failpoint("executor.run.merge")
+
     if pos is None:
         return schedules.merge(a, b, kind=spec.network), None
     return schedules.merge(a, b, kind=spec.network, payload=pos)
@@ -91,6 +94,8 @@ def _sched_merge(a, b, *, spec, pos=None, par=None):
 def _sched_merge_k(lists, *, spec, pos=None, par=None):
     from . import schedules
 
+    failpoint("executor.run.merge_k")
+
     if pos is None:
         return schedules.merge_k(lists, kind=spec.network), None
     return schedules.merge_k(lists, kind=spec.network, payload=pos)
@@ -98,6 +103,8 @@ def _sched_merge_k(lists, *, spec, pos=None, par=None):
 
 def _sched_sort(x, *, spec, pos=None, par=None):
     from . import schedules
+
+    failpoint("executor.run.sort")
 
     kind = spec.network if spec.network != "batcher-bitonic" else "bitonic"
     if pos is None:
@@ -108,11 +115,15 @@ def _sched_sort(x, *, spec, pos=None, par=None):
 def _sched_topk(x, k, *, spec, par=None, block=None):
     from . import schedules
 
+    failpoint("executor.run.topk")
+
     return schedules.topk(x, k, block=block or 0)
 
 
 def _sched_median(lists, *, spec):
     from . import schedules
+
+    failpoint("executor.run.median")
 
     kind = "mwms" if spec.network == "mwms" else "loms"
     return schedules.median_of_lists(lists, kind=kind)

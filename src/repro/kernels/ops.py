@@ -25,6 +25,7 @@ from typing import Optional, Sequence, Tuple
 import jax.numpy as jnp
 
 from repro.networks import kway_schedule, median_schedule
+from repro.resilience.failpoints import failpoint
 
 from .kway import kway_merge_pallas
 from .loms_merge import loms_merge2_pallas
@@ -64,6 +65,7 @@ def merge2(
     registered network family ("loms", "s2ms", "periodic3",
     "bitonic") — all execute through the one fused merge kernel."""
     assert a.ndim == 2 and b.ndim == 2
+    failpoint("kernel.launch.merge2")
     m, n = a.shape[-1], b.shape[-1]
     if kind != "loms":
         return loms_merge2_pallas(
@@ -87,6 +89,7 @@ def merge2(
 
 def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """Batched k-way LOMS merge of sorted (B, len_i) lists."""
+    failpoint("kernel.launch.merge_k")
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched = kway_schedule(lens)
     x = jnp.concatenate(list(lists), axis=-1)
@@ -97,6 +100,7 @@ def merge_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
 
 def median_k(lists: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """Batched 2-stage LOMS median of k equal odd-length sorted lists."""
+    failpoint("kernel.launch.median")
     lens = tuple(int(l.shape[-1]) for l in lists)
     sched, pos = median_schedule(lens)
     x = jnp.concatenate(list(lists), axis=-1)
@@ -111,6 +115,7 @@ def sort(x: jnp.ndarray) -> jnp.ndarray:
     single-launch merge-tree kernel (values only; the api layer's fused
     adapters carry keys/payloads through the same kernel)."""
     assert x.ndim == 2
+    failpoint("kernel.launch.sort")
     plan = _plan("sort", (x.shape[-1],), x.shape[0], x.dtype)
     return loms_sort_pallas(x, network=plan.network,
                             block_batch=plan.block_batch,
@@ -146,6 +151,7 @@ def topk(
     Dispatches to the single-kernel router path for small E and the
     two-phase vocab path for large E."""
     assert x.ndim == 2
+    failpoint("kernel.launch.topk")
     bsz, e = x.shape
     plan = _plan("topk", (e,), bsz, x.dtype, k)
     blk, bb = topk_tiles(bsz, e, block=block or plan.block,

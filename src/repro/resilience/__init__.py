@@ -1,0 +1,52 @@
+"""Resilience subsystem (DESIGN.md §16): deterministic fault injection,
+the graceful-degradation dispatch ladder, and circuit breakers.
+
+Three pieces, layered so each is useful alone:
+
+* :mod:`repro.resilience.failpoints` — named, seeded fault-injection
+  seams (``REPRO_FAILPOINTS`` env / :func:`failpoints` context manager)
+  threaded through kernel launches, cache I/O, streaming refill,
+  segmented spill, and the serving scheduler. Strict no-op when unarmed.
+* :mod:`repro.resilience.breaker` — per-(op, rung, shape-class) circuit
+  breakers: N failures open, cooldown, half-open probe, close.
+* :mod:`repro.resilience.ladder` — the degradation ladder the unified
+  ops execute through: fused-pallas → unfused-pallas → streaming →
+  schedule → lax, every rung bit-identical, ``REPRO_RESILIENCE=0``
+  opt-out.
+"""
+from .breaker import (  # noqa: F401
+    CircuitBreaker,
+    breaker_for,
+    configure as configure_breakers,
+    reset as reset_breakers,
+    rung_allowed,
+    shape_class,
+    states as breaker_states,
+)
+from .failpoints import (  # noqa: F401
+    FailpointError,
+    arm,
+    disarm,
+    failpoint,
+    failpoints,
+    fires,
+    hits,
+    reset as reset_failpoints,
+)
+from .ladder import (  # noqa: F401
+    LadderSkip,
+    ResilienceExhausted,
+    resilience_enabled,
+    reroute,
+    run_ladder,
+    rungs_for,
+    set_resilience_enabled,
+)
+
+__all__ = [
+    "CircuitBreaker", "FailpointError", "LadderSkip", "ResilienceExhausted",
+    "arm", "breaker_for", "breaker_states", "configure_breakers", "disarm",
+    "failpoint", "failpoints", "fires", "hits", "reroute",
+    "reset_breakers", "reset_failpoints", "resilience_enabled", "run_ladder",
+    "rungs_for", "rung_allowed", "set_resilience_enabled", "shape_class",
+]

@@ -1,0 +1,170 @@
+"""Per-(op, rung, shape-class) circuit breakers for the dispatch ladder.
+
+A breaker guards one *rung* of the degradation ladder (``"fused"``,
+``"pallas"``, ``"streaming"``, ...) for one op at one shape class. The
+classic three-state machine:
+
+* **closed** — healthy; every call flows. ``failures`` consecutive
+  recorded failures (default :data:`DEFAULT_THRESHOLD`) open it.
+* **open** — the rung is skipped at both plan time (``plan()`` reroutes
+  down the ladder, ``source="breaker"``) and run time. After
+  ``cooldown_s`` the next ``allow()`` becomes the half-open probe.
+* **half-open** — exactly one probe call is let through; success closes
+  the breaker (failure count reset), failure re-opens it for another
+  cooldown. Concurrent calls during the probe stay rerouted.
+
+Shape classes bucket problems by pow2 total size + payload/plain so one
+pathological shape can't poison (or be hidden by) every other size, while
+cardinality stays bounded. State transitions surface as
+``breaker.state`` gauges (0=closed, 1=open, 2=half-open) and
+``breaker.transitions`` counters.
+
+The registry starts empty and breakers are created on the first recorded
+*failure* — a healthy process pays one dict lookup per plan, nothing
+more.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+DEFAULT_THRESHOLD = 3
+DEFAULT_COOLDOWN_S = 30.0
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+_STATE_NUM = {CLOSED: 0, OPEN: 1, HALF_OPEN: 2}
+
+
+def shape_class(total: int, has_payload: bool) -> str:
+    """Bounded-cardinality shape bucket: pow2 ceiling of the total
+    element count plus the payload/plain split."""
+    p2 = 1
+    while p2 < max(int(total), 1):
+        p2 <<= 1
+    return f"{p2}{'p' if has_payload else 'v'}"
+
+
+class CircuitBreaker:
+    def __init__(self, key: Tuple[str, str, str],
+                 threshold: int = DEFAULT_THRESHOLD,
+                 cooldown_s: float = DEFAULT_COOLDOWN_S):
+        self.key = key  # (op, rung, shape_class)
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.state = CLOSED
+        self.failures = 0
+        self.opened_at = 0.0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- state
+
+    def allow(self) -> bool:
+        """Whether a call may take this rung now. The transition to
+        half-open happens here: the first ``allow()`` past the cooldown
+        is the probe and returns True; followers stay blocked until the
+        probe reports."""
+        with self._lock:
+            if self.state == CLOSED:
+                return True
+            if self.state == OPEN:
+                if time.monotonic() - self.opened_at >= self.cooldown_s:
+                    self._transition(HALF_OPEN)
+                    return True
+                return False
+            return False  # HALF_OPEN: one probe already in flight
+
+    def peek(self) -> bool:
+        """Non-mutating :meth:`allow`: True if a call *would* be admitted.
+        Plan-time rerouting peeks so it never consumes the half-open
+        probe slot — the run-time walk does the actual admission."""
+        with self._lock:
+            if self.state == CLOSED:
+                return True
+            if self.state == OPEN:
+                return time.monotonic() - self.opened_at >= self.cooldown_s
+            return False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            if self.state == HALF_OPEN or (
+                    self.state == CLOSED and self.failures >= self.threshold):
+                self.opened_at = time.monotonic()
+                self._transition(OPEN)
+
+    def record_success(self) -> None:
+        with self._lock:
+            if self.state != CLOSED or self.failures:
+                self.failures = 0
+                self._transition(CLOSED)
+
+    def _transition(self, state: str) -> None:
+        if state == self.state:
+            return
+        prev, self.state = self.state, state
+        from repro.obs import metrics as obs_metrics
+
+        op, rung, cls = self.key
+        obs_metrics.gauge("breaker.state").set(
+            _STATE_NUM[state], op=op, rung=rung, cls=cls)
+        obs_metrics.counter("breaker.transitions").inc(
+            op=op, rung=rung, cls=cls, frm=prev, to=state)
+
+
+_reg_lock = threading.Lock()
+_registry: Dict[Tuple[str, str, str], CircuitBreaker] = {}
+_threshold = DEFAULT_THRESHOLD
+_cooldown_s = DEFAULT_COOLDOWN_S
+
+
+def breaker_for(op: str, rung: str, cls: str,
+                create: bool = True) -> Optional[CircuitBreaker]:
+    """The breaker guarding (op, rung, cls); ``create=False`` returns
+    None instead of materializing one (the plan-time fast path)."""
+    key = (op, rung, cls)
+    with _reg_lock:
+        br = _registry.get(key)
+        if br is None and create:
+            br = _registry[key] = CircuitBreaker(key, _threshold, _cooldown_s)
+        return br
+
+
+def rung_allowed(op: str, rung: str, cls: str) -> bool:
+    """Plan-time check: True unless an existing breaker blocks the rung.
+    Never creates a breaker (with no recorded failures this is one dict
+    miss) and never mutates one (:meth:`CircuitBreaker.peek`)."""
+    br = breaker_for(op, rung, cls, create=False)
+    return True if br is None else br.peek()
+
+
+def any_breakers() -> bool:
+    """Whether any breaker has ever been materialized — the healthy-path
+    short-circuit for plan-time rerouting."""
+    return bool(_registry)
+
+
+def configure(threshold: Optional[int] = None,
+              cooldown_s: Optional[float] = None) -> None:
+    """Set thresholds for breakers created *after* this call (tests and
+    embedding apps; existing breakers keep their parameters)."""
+    global _threshold, _cooldown_s
+    if threshold is not None:
+        _threshold = int(threshold)
+    if cooldown_s is not None:
+        _cooldown_s = float(cooldown_s)
+
+
+def reset() -> None:
+    """Drop every breaker and restore default thresholds (tests)."""
+    global _threshold, _cooldown_s
+    with _reg_lock:
+        _registry.clear()
+    _threshold = DEFAULT_THRESHOLD
+    _cooldown_s = DEFAULT_COOLDOWN_S
+
+
+def states() -> Dict[Tuple[str, str, str], str]:
+    """Snapshot of every materialized breaker's state."""
+    with _reg_lock:
+        return {k: br.state for k, br in _registry.items()}

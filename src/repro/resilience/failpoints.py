@@ -1,0 +1,209 @@
+"""Deterministic fault injection: named failpoints at the risky seams.
+
+A *failpoint* is a named call site (``failpoint("kernel.launch.sort")``)
+threaded through the places where the stack can genuinely die in
+production — kernel launch wrappers, autotune-cache I/O, streaming
+refill, segmented spill, scheduler prefill/insert/decode. Disarmed (the
+default) every call is a strict no-op: one truthiness check on an empty
+dict, no allocation, no RNG draw — the chaos suite asserts jaxpr op
+counts are unchanged with ``REPRO_FAILPOINTS`` unset.
+
+Armed, a failpoint fires :class:`FailpointError` according to its
+*trigger*, every one of which is deterministic given the arming spec:
+
+=============  ========================================================
+``once``       fire on the first hit, then disarm
+``always``     fire on every hit
+``times:N``    fire on the first N hits
+``every:N``    fire on every Nth hit (N, 2N, ...)
+``p:P[:S]``    fire with probability P per hit, seeded RNG (seed S,
+               default 0) — the same hit sequence always fires the same
+               hits, across runs and machines
+``off``        never fire (placeholder that still counts hits)
+=============  ========================================================
+
+Arming happens via the ``REPRO_FAILPOINTS`` env var
+(``"name=trigger,name=trigger"``, parsed once at first use) or the
+context-manager API::
+
+    with failpoints({"kernel.launch": "once", "cache.load": "p:0.5:7"}):
+        ...
+
+Names are hierarchical on dot boundaries: arming ``kernel.launch``
+matches calls to ``kernel.launch.sort`` and ``kernel.launch.topk`` (an
+exact arming wins over a prefix). Hit and fire counts are queryable
+(:func:`hits`, :func:`fires`) and surface as ``failpoints.fired`` obs
+counters, so a chaos run can assert exactly which seams were exercised.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import random
+import threading
+from typing import Dict, Iterator, Optional
+
+_ENV = "REPRO_FAILPOINTS"
+
+
+class FailpointError(RuntimeError):
+    """The injected failure. Carries the failpoint name so handlers and
+    tests can tell an injected fault from a genuine one."""
+
+    def __init__(self, name: str):
+        super().__init__(f"injected failpoint {name!r} fired")
+        self.name = name
+
+
+class _Failpoint:
+    """One armed failpoint: a trigger plus deterministic hit counters."""
+
+    __slots__ = ("name", "mode", "arg", "seed", "hits", "fires", "_rng")
+
+    def __init__(self, name: str, spec: str):
+        self.name = name
+        parts = str(spec).split(":")
+        self.mode = parts[0]
+        self.arg = 0.0
+        self.seed = 0
+        if self.mode in ("times", "every"):
+            self.arg = int(parts[1])
+            assert self.arg >= 1, spec
+        elif self.mode == "p":
+            self.arg = float(parts[1])
+            assert 0.0 <= self.arg <= 1.0, spec
+            self.seed = int(parts[2]) if len(parts) > 2 else 0
+        elif self.mode not in ("once", "always", "off"):
+            raise ValueError(
+                f"unknown failpoint trigger {spec!r} for {name!r} "
+                "(want once|always|times:N|every:N|p:P[:seed]|off)")
+        self.hits = 0
+        self.fires = 0
+        self._rng = random.Random(self.seed)
+
+    def should_fire(self) -> bool:
+        self.hits += 1
+        if self.mode == "off":
+            return False
+        if self.mode == "always":
+            return True
+        if self.mode == "once":
+            return self.hits == 1
+        if self.mode == "times":
+            return self.hits <= self.arg
+        if self.mode == "every":
+            return self.hits % int(self.arg) == 0
+        # mode == "p": one seeded draw per hit — same sequence every run
+        return self._rng.random() < self.arg
+
+
+_lock = threading.Lock()
+#: the armed set; empty == fully disabled (the hot-path predicate)
+_active: Dict[str, _Failpoint] = {}
+_env_parsed = False
+
+
+def _parse_env() -> None:
+    global _env_parsed
+    if _env_parsed:
+        return
+    _env_parsed = True
+    raw = os.environ.get(_ENV, "").strip()
+    if not raw:
+        return
+    for item in raw.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        name, _, spec = item.partition("=")
+        _active[name.strip()] = _Failpoint(name.strip(), spec.strip() or "once")
+
+
+# parse eagerly at import: the fast path stays one dict-truthiness check
+_parse_env()
+
+
+def _lookup(name: str) -> Optional[_Failpoint]:
+    fp = _active.get(name)
+    if fp is not None:
+        return fp
+    # hierarchical prefix match on dot boundaries: "kernel.launch" arms
+    # every "kernel.launch.*" call site
+    n = name
+    while True:
+        cut = n.rfind(".")
+        if cut < 0:
+            return None
+        n = n[:cut]
+        fp = _active.get(n)
+        if fp is not None:
+            return fp
+
+
+def failpoint(name: str) -> None:
+    """The seam: raise :class:`FailpointError` if ``name`` is armed and
+    its trigger fires. Strict no-op when nothing is armed."""
+    if not _active:  # the disabled fast path
+        return
+    with _lock:
+        fp = _lookup(name)
+        if fp is None or not fp.should_fire():
+            return
+        fp.fires += 1
+    from repro.obs import metrics as obs_metrics
+
+    obs_metrics.counter("failpoints.fired").inc(name=fp.name)
+    raise FailpointError(name)
+
+
+def arm(name: str, spec: str = "once") -> None:
+    """Arm one failpoint programmatically (same spec grammar as the env)."""
+    with _lock:
+        _active[name] = _Failpoint(name, spec)
+
+
+def disarm(name: str) -> None:
+    with _lock:
+        _active.pop(name, None)
+
+
+def reset() -> None:
+    """Disarm everything (tests; does not re-read the env)."""
+    with _lock:
+        _active.clear()
+
+
+def active() -> Dict[str, str]:
+    """Armed failpoints as {name: mode} (inspection / logging)."""
+    with _lock:
+        return {n: fp.mode for n, fp in _active.items()}
+
+
+def hits(name: str) -> int:
+    """Times the named failpoint's seam was reached while armed."""
+    with _lock:
+        fp = _active.get(name)
+        return fp.hits if fp else 0
+
+
+def fires(name: str) -> int:
+    """Times the named failpoint actually raised."""
+    with _lock:
+        fp = _active.get(name)
+        return fp.fires if fp else 0
+
+
+@contextlib.contextmanager
+def failpoints(specs: Dict[str, str]) -> Iterator[None]:
+    """Arm ``{name: trigger}`` for the body, restoring the previous arming
+    (including counters) on exit — nesting composes."""
+    with _lock:
+        saved = dict(_active)
+        for name, spec in specs.items():
+            _active[name] = _Failpoint(name, spec)
+    try:
+        yield
+    finally:
+        with _lock:
+            _active.clear()
+            _active.update(saved)

@@ -1,0 +1,197 @@
+"""Graceful-degradation ladder: fused-pallas → unfused-pallas →
+streaming → schedule → lax, with circuit breakers per rung.
+
+The unified ops (:mod:`repro.api.ops`) build one ``attempt(rung)``
+closure per call and hand it here. :func:`run_ladder` walks the rung
+list the planner produced (:func:`rungs_for`) and, when resilience is on
+and the spec is auto-routed, catches a failed rung — kernel compile
+error, injected failpoint, OOM-style launch failure — records it against
+that rung's circuit breaker, counts a ``resilience.fallbacks`` sample,
+and tries the next rung. Every backend is bit-identical by the repo's
+standing contract (the bit-equality suites gate it), so a degraded
+answer is the *same* answer, only slower.
+
+Semantics that keep this invisible in healthy runs:
+
+* Resilience off (``REPRO_RESILIENCE=0`` or :func:`set_resilience_enabled`)
+  or an explicit ``backend=`` ask: the first applicable rung runs and its
+  exceptions propagate untouched — exactly the pre-resilience behavior,
+  op-for-op (a rung may still *decline* with :class:`LadderSkip`, which
+  reproduces the old fused-config fallthrough).
+* No failures ever recorded: the breaker registry is empty, so the
+  plan-time check (:func:`reroute`) is one dict miss and the run-time
+  walk takes the first rung.
+
+Scope note: a rung failure is observable here when it raises on the
+Python side — eager calls, trace/lowering/compile errors under ``jit``.
+A hardware fault inside an already-compiled XLA executable raises at the
+jit boundary instead; the serving engine's retry/backoff layer
+(:mod:`repro.serving.scheduler.engine`) owns that case.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, List, Optional, Sequence
+
+from .breaker import any_breakers, breaker_for, rung_allowed, shape_class
+
+_ENABLED = True
+
+#: degradation tail, most- to least-specialized; ``fused``/``pallas``
+#: are prepended when the plan picked the kernel backend
+LADDER_TAIL = ("streaming", "schedule", "lax")
+
+
+def resilience_enabled() -> bool:
+    """``REPRO_RESILIENCE=0`` pins every call to its planned rung (a
+    failure then propagates instead of degrading)."""
+    return _ENABLED and os.environ.get("REPRO_RESILIENCE", "1") != "0"
+
+
+def set_resilience_enabled(enabled: bool) -> bool:
+    """Toggle the ladder programmatically (returns the previous value)."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(enabled)
+    return prev
+
+
+class LadderSkip(Exception):
+    """Raised by an ``attempt`` to decline a rung without failing it
+    (e.g. the fused config resolved to None). Never counted against a
+    breaker."""
+
+
+class ResilienceExhausted(RuntimeError):
+    """Every rung of the ladder failed for this call."""
+
+    def __init__(self, op: str, rungs: Sequence[str]):
+        super().__init__(
+            f"every ladder rung failed for op {op!r} (tried {list(rungs)})")
+        self.op = op
+        self.rungs = tuple(rungs)
+
+
+def _backend_of(rung: str) -> str:
+    return "pallas" if rung == "fused" else rung
+
+
+def spec_class(spec) -> str:
+    return shape_class(spec.total, spec.has_payload)
+
+
+def rungs_for(spec, dec) -> List[str]:
+    """Ordered, capability-filtered rung list for one planned call.
+
+    Explicit backend asks get exactly their backend (plus the fused rung
+    when that backend is pallas — the fused/unfused split is an internal
+    realization detail, not a routing choice). Auto asks get the planned
+    rung followed by the degradation tail; rungs whose backend cannot
+    run the spec (``supports``) are dropped, as is unfused pallas for
+    permutation-carrying specs (its generic adapters are values-only)."""
+    from repro.api.registry import get_backend
+    from repro.api.spec import BACKEND_AUTO
+
+    if spec.backend != BACKEND_AUTO:
+        if dec.backend != "pallas":
+            return [dec.backend]  # honor the ask verbatim, errors and all
+        if spec.needs_perm and spec.op != "topk":
+            return ["fused", "schedule"]  # pre-ladder unfusable remap
+        return ["fused", "pallas"]
+    head: List[str] = (["fused", "pallas"] if dec.backend == "pallas"
+                       else [dec.backend])
+    rungs = head + [b for b in LADDER_TAIL if b not in head]
+    out: List[str] = []
+    for r in rungs:
+        if r == "fused":
+            out.append(r)  # eligibility resolves at attempt time (cfg)
+            continue
+        if r == "pallas" and spec.needs_perm and spec.op != "topk":
+            continue  # unfused pallas merge/sort adapters are values-only
+            # (top-k indices are native, so payload/stable ride them)
+        try:
+            if get_backend(r).supports(spec):
+                out.append(r)
+        except ValueError:
+            continue
+    return out or ["schedule"]
+
+
+def reroute(spec, dec):
+    """Plan-time breaker avoidance: if the planned rung's breaker is open
+    for this (op, shape-class), downgrade the decision to the first
+    allowed rung (``source="breaker"``). Peeks only — the half-open
+    probe admission happens at run time."""
+    from repro.api.spec import BACKEND_AUTO
+
+    if (not any_breakers() or not resilience_enabled()
+            or spec.backend != BACKEND_AUTO or dec.backend in ("segmented",)):
+        return dec
+    cls = spec_class(spec)
+    rungs = rungs_for(spec, dec)
+    for rung in rungs:
+        if not rung_allowed(spec.op, rung, cls):
+            continue
+        backend = _backend_of(rung)
+        if backend == dec.backend:
+            return dec
+        return dataclasses.replace(
+            dec, backend=backend, detail="degraded", source="breaker",
+            reason=(f"breaker open for ({spec.op}, {dec.backend}, {cls}): "
+                    f"degraded to {backend}"))
+    return dec  # everything open: keep the plan, run_ladder force-runs
+
+
+def run_ladder(spec, rungs: Sequence[str], attempt: Callable[[str], object],
+               cls: Optional[str] = None):
+    """Execute ``attempt`` down the rung list.
+
+    With resilience off or an explicit backend ask this reduces to "run
+    the first rung that does not :class:`LadderSkip`" with no exception
+    handling — the pre-resilience code path. Otherwise failed rungs feed
+    their breakers and the walk continues; if every rung was skipped by
+    an open breaker the last capable rung is force-run (an answer beats
+    a refusal), and if every rung genuinely failed the last error chains
+    into :class:`ResilienceExhausted`."""
+    from repro.api.spec import BACKEND_AUTO
+    from repro.obs import metrics as obs_metrics
+
+    catching = resilience_enabled() and spec.backend == BACKEND_AUTO
+    if not catching:
+        for i, rung in enumerate(rungs):
+            try:
+                return attempt(rung)
+            except LadderSkip:
+                if i == len(rungs) - 1:
+                    raise
+        raise LadderSkip  # unreachable: rungs is never empty
+
+    cls = cls or spec_class(spec)
+    last_exc: Optional[BaseException] = None
+    blocked: List[str] = []
+    for rung in rungs:
+        br = breaker_for(spec.op, rung, cls, create=False)
+        if br is not None and not br.allow():
+            blocked.append(rung)
+            continue
+        try:
+            result = attempt(rung)
+        except LadderSkip:
+            continue
+        except Exception as e:  # noqa: BLE001 — any rung failure degrades
+            (br or breaker_for(spec.op, rung, cls)).record_failure()
+            obs_metrics.counter("resilience.fallbacks").inc(
+                op=spec.op, rung=rung, err=type(e).__name__)
+            last_exc = e
+            continue
+        if br is not None:
+            br.record_success()
+        return result
+    if last_exc is None and blocked:
+        # every rung breaker-blocked: force the most degraded one — the
+        # ladder exists to keep answering
+        obs_metrics.counter("resilience.forced").inc(op=spec.op,
+                                                     rung=blocked[-1])
+        return attempt(blocked[-1])
+    raise ResilienceExhausted(spec.op, rungs) from last_exc

@@ -225,8 +225,10 @@ def _spill_sort_values(dense: jnp.ndarray, *, descending: bool,
     """Values-only sort of equal-length long rows: chunk-sort every tile in
     one class launch, then reduce each row's sorted runs with the
     grid-resident FLiMS carry merge (one read/write per element)."""
+    from repro.resilience.failpoints import failpoint
     from repro.streaming.grid_merge import grid_chunked_merge2
 
+    failpoint("segmented.spill.values")
     s, ln = dense.shape
     keys, undo = _keys_for(dense, nan_policy, descending)
     c = -(-ln // tile)
@@ -261,6 +263,9 @@ def _spill_sort_perm(dense: jnp.ndarray, *, descending: bool,
                      nan_policy: str):
     """Permutation-carrying spill rows: batched XLA stable argsort of the
     total-order keys (documented non-kernel path)."""
+    from repro.resilience.failpoints import failpoint
+
+    failpoint("segmented.spill.perm")
     keys, _ = _keys_for(dense, nan_policy, descending)
     order = jnp.argsort(keys, axis=-1, stable=True).astype(jnp.int32)
     return jnp.take_along_axis(dense, order, axis=-1), order
@@ -588,6 +593,9 @@ def segment_topk_impl(
         out_l = [_scatter(o, smap, r) for o, r in zip(out_l, res_l)]
 
     for cls in spill:  # equal-length vocab-scale rows: batched unified topk
+        from repro.resilience.failpoints import failpoint
+
+        failpoint("segmented.spill.topk")
         cnts = cls_counts(cls)
         k_out = max(max(cnts), 1)
         gmap = gather_map(offs, cls, n)

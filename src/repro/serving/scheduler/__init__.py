@@ -15,5 +15,5 @@ the request lifecycle and the invariants that make this hold.
 from .engine import ScheduledEngine, SchedulerConfig  # noqa: F401
 from .paged import PagedKVCache, SlotManager  # noqa: F401
 from .params import SamplingParams  # noqa: F401
-from .queue import AdmissionQueue  # noqa: F401
-from .request import Request, RequestState  # noqa: F401
+from .queue import AdmissionQueue, QueueFull  # noqa: F401
+from .request import Request, RequestState, TERMINAL_STATES  # noqa: F401

@@ -28,7 +28,18 @@ pieces:
 
 Time is a virtual tick counter — admission order is a pure function of
 the (arrival, rid) trace, never of wall clock. Wall time feeds only the
-latency metrics (TTFT / TPOT / request latency).
+latency metrics (TTFT / TPOT / request latency) and the opt-in
+``deadline_ms`` wall-clock deadline.
+
+Failure hardening (DESIGN.md §16): ticks start by expiring requests past
+their ``ttl_ticks``/``deadline_ms`` (slot + pages reclaimed); every
+prefill/insert/decode launch runs under bounded retry with exponential
+backoff, and exhausted retries turn the launch's requests terminal
+FAILED instead of wedging the engine; ``submit`` load-sheds with
+:class:`~.queue.QueueFull` once the queue holds ``max_queue`` requests.
+The invariant the chaos suite gates: whatever faults fire, ``run()``
+drains — every request reaches a terminal state and no slot or page
+stays allocated.
 """
 from __future__ import annotations
 
@@ -46,11 +57,12 @@ from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import span
+from repro.resilience.failpoints import failpoint
 
 from ..sample import canonical_token, sample_greedy, sample_topk, scored_draw
 from .paged import PagedKVCache, SlotManager, gather_view, scatter_col, split_pages, take_col
 from .params import SamplingParams
-from .queue import AdmissionQueue
+from .queue import AdmissionQueue, QueueFull
 from .request import Request, RequestState
 
 
@@ -70,11 +82,22 @@ class SchedulerConfig:
     #: free-slot reuse order ("fifo" | "lifo") — token bits must not
     #: depend on it (determinism tests flip it)
     slot_order: str = "fifo"
+    #: admission-queue bound; ``submit`` past it raises
+    #: :class:`~.queue.QueueFull` (None = unbounded, the pre-§16 behavior)
+    max_queue: Optional[int] = None
+    #: retries per prefill/insert/decode launch before the batch's
+    #: requests go FAILED (0 = fail on the first error)
+    max_retries: int = 2
+    #: base of the exponential retry backoff (seconds; attempt n sleeps
+    #: ``retry_backoff_s * 2**n``)
+    retry_backoff_s: float = 0.05
 
     def __post_init__(self):
         assert self.page_size >= 1 and (self.page_size & (self.page_size - 1)) == 0, \
             f"page_size must be a power of two, got {self.page_size}"
         assert self.max_prefill_batch >= 1
+        assert self.max_queue is None or self.max_queue >= 1
+        assert self.max_retries >= 0 and self.retry_backoff_s >= 0.0
 
     @property
     def slot_capacity(self) -> int:
@@ -99,7 +122,7 @@ class ScheduledEngine:
         self.pool = PagedKVCache(cfg, n_pages, sched.page_size)
         self.slots = SlotManager(sched.n_slots, sched.pages_per_slot,
                                  n_pages, order=sched.slot_order)
-        self.queue = AdmissionQueue()
+        self.queue = AdmissionQueue(sched.max_queue)
         self.requests: Dict[int, Request] = {}
         self.active: Dict[int, Request] = {}  # slot -> request
         self.t = 0
@@ -126,12 +149,23 @@ class ScheduledEngine:
                       arrival=int(arrival))
         req.t_submit = time.perf_counter()
         self.requests[rid] = req
-        self.queue.push(req)
+        try:
+            self.queue.push(req)
+        except QueueFull as e:
+            # load-shed: the request is kept (terminal REJECTED, queryable)
+            # but never queued; the raised error carries the retry hint
+            req.state = RequestState.REJECTED
+            req.error = str(e)
+            req.finish_tick = self.t
+            obs_metrics.counter("sched.rejected").inc()
+            raise
         obs_metrics.counter("sched.submitted").inc()
         return rid
 
     def step(self) -> None:
-        """One scheduler tick: admit → prefill/insert → one decode step."""
+        """One scheduler tick: expire → admit → prefill/insert → one
+        decode step."""
+        self._expire()
         admitted = self._admit()
         if admitted:
             self._run_prefill(admitted)
@@ -158,8 +192,61 @@ class ScheduledEngine:
 
     def result(self, rid: int) -> np.ndarray:
         r = self.requests[rid]
-        assert r.state is RequestState.DONE, r.state
+        assert r.state is RequestState.DONE, (
+            f"request {rid} is {r.state.value}"
+            + (f": {r.error}" if r.error else ""))
         return np.asarray(r.tokens, np.int32)
+
+    # ----------------------------------------- deadlines, failures, retries
+
+    def _expire(self) -> None:
+        """Time out every request (queued or running) whose ``ttl_ticks``
+        / ``deadline_ms`` has elapsed, reclaiming slot and pages."""
+        now = time.perf_counter()
+        for r in self.queue.drain_expired(lambda q: q.expired(self.t, now)):
+            self._timeout(r)
+        for r in [r for r in self.active.values() if r.expired(self.t, now)]:
+            self._timeout(r)
+
+    def _release(self, r: Request) -> None:
+        if r.slot is not None:
+            self.slots.release(r.slot)
+            self.active.pop(r.slot, None)
+            r.slot = None
+
+    def _timeout(self, r: Request) -> None:
+        r.state = RequestState.TIMED_OUT
+        r.error = f"deadline elapsed at tick {self.t}"
+        r.finish_tick = self.t
+        r.t_finish = time.perf_counter()
+        self._release(r)
+        obs_metrics.counter("sched.timed_out").inc()
+
+    def _fail(self, r: Request, err: str) -> None:
+        r.state = RequestState.FAILED
+        r.error = err
+        r.finish_tick = self.t
+        r.t_finish = time.perf_counter()
+        self._release(r)
+        obs_metrics.counter("sched.failed").inc()
+
+    def _with_retry(self, what: str, fn):
+        """Run one launch closure with bounded retry + exponential
+        backoff. The ``sched.{what}`` failpoint fires *before* the
+        closure, so an injected fault never lands after a donated buffer
+        was consumed — retries always see valid inputs."""
+        attempt = 0
+        while True:
+            try:
+                failpoint(f"sched.{what}")
+                return fn()
+            except Exception:
+                if attempt >= self.sc.max_retries:
+                    raise
+                obs_metrics.counter("sched.retries").inc(what=what)
+                if self.sc.retry_backoff_s:
+                    time.sleep(self.sc.retry_backoff_s * (2 ** attempt))
+                attempt += 1
 
     # ----------------------------------------------------------- admission
 
@@ -249,19 +336,35 @@ class ScheduledEngine:
         for i, r in enumerate(reqs):
             toks[i, :r.prompt.size] = r.prompt
             lens[i] = r.prompt.size
-        with span("sched.prefill", kind="run", batch=bb, bucket=blen):
+        def launch_prefill():
             logits, body = self._prefill_fn(blen, bb)(
                 self.params, jnp.asarray(toks), jnp.asarray(lens))
             jax.block_until_ready(logits)
+            return logits, body
+
+        with span("sched.prefill", kind="run", batch=bb, bucket=blen):
+            try:
+                logits, body = self._with_retry("prefill", launch_prefill)
+            except Exception as e:  # noqa: BLE001 — retries exhausted
+                for r in reqs:  # no slots were allocated yet: nothing leaks
+                    self._fail(r, f"prefill failed: {type(e).__name__}: {e}")
+                return
         obs_metrics.counter("sched.prefill_batches").inc()
         ps = self.sc.page_size
         for i, r in enumerate(reqs):
             tok, key = self._first_token(logits[i], r.params)
             slot, pages = self.slots.alloc(self._npg_need(r))
             npg_store = math.ceil(r.prompt.size / ps)
-            self.pool.leaves = self._insert_fn(npg_store, blen, bb)(
-                self.pool.leaves, body, jnp.int32(i),
-                jnp.asarray(pages[:npg_store]))
+            insert = self._insert_fn(npg_store, blen, bb)
+            try:
+                self.pool.leaves = self._with_retry(
+                    "insert", lambda: insert(
+                        self.pool.leaves, body, jnp.int32(i),
+                        jnp.asarray(pages[:npg_store])))
+            except Exception as e:  # noqa: BLE001 — retries exhausted
+                self.slots.release(slot)  # not yet r.slot: reclaim directly
+                self._fail(r, f"insert failed: {type(e).__name__}: {e}")
+                continue
             r.state = RequestState.RUNNING
             r.slot = slot
             r.length = int(r.prompt.size)
@@ -332,9 +435,15 @@ class ScheduledEngine:
         tps = jnp.asarray(
             np.asarray([r.params.top_p for r in reqs], np.float32))
         with span("sched.decode", kind="run", batch=len(slots)):
-            leaves, new_keys, toks = self._decode_fn(sig)(
-                self.params, self.pool.leaves, pt, lengths, tokens, keys,
-                temps, tps)
+            try:
+                leaves, new_keys, toks = self._with_retry(
+                    "decode", lambda: self._decode_fn(sig)(
+                        self.params, self.pool.leaves, pt, lengths, tokens,
+                        keys, temps, tps))
+            except Exception as e:  # noqa: BLE001 — retries exhausted
+                for r in reqs:
+                    self._fail(r, f"decode failed: {type(e).__name__}: {e}")
+                return
             toks = np.asarray(toks)
         self.pool.leaves = leaves
         obs_metrics.counter("sched.decode_steps").inc()

@@ -9,6 +9,7 @@ python float converts to, so the arithmetic is bit-identical either way.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,11 +22,22 @@ class SamplingParams:
     temperature: float = 1.0
     max_new_tokens: int = 16
     seed: int = 0
+    #: wall-clock deadline from ``submit()``: the request times out (slot
+    #: and pages reclaimed) once this many milliseconds have elapsed —
+    #: whether still queued or mid-decode. Wall time is inherently
+    #: non-deterministic; chaos tests use ``ttl_ticks`` instead.
+    deadline_ms: Optional[float] = None
+    #: virtual-tick TTL: the request times out once
+    #: ``tick - arrival >= ttl_ticks``. Deterministic under the
+    #: scheduler's tick clock — the replayable deadline for tests.
+    ttl_ticks: Optional[int] = None
 
     def __post_init__(self):
         assert self.k >= 1, self.k
         assert 0.0 < self.top_p <= 1.0, self.top_p
         assert self.max_new_tokens >= 1, self.max_new_tokens
+        assert self.deadline_ms is None or self.deadline_ms > 0, self.deadline_ms
+        assert self.ttl_ticks is None or self.ttl_ticks >= 1, self.ttl_ticks
 
     @property
     def greedy(self) -> bool:

@@ -2,10 +2,18 @@
 
 One JSON file maps a plan key — ``(op, shapes, k, dtype, backend)`` encoded
 as a string — to the winning :class:`~repro.streaming.planner.MergePlan`
-fields plus the measured time. Writes are atomic (tmp file + ``os.rename``)
-so concurrent benchmark runs can never leave a torn file; reads tolerate a
-missing or corrupt file by starting empty (an autotune cache is always
-reconstructible).
+fields plus the measured time. Writes are atomic (tmp file +
+``os.replace``) so concurrent benchmark runs can never leave a torn file;
+``save`` first merges entries another writer landed since our load (last
+writer wins per key, nobody's keys are dropped). Reads tolerate a missing
+file by starting empty; a *corrupt* file (torn write from a crashed
+pre-atomic tool, disk garbage) is quarantined to a ``<path>.bad`` sidecar
+— counted under the ``autotune.cache`` counter, ``result="quarantined"``
+— so the next run starts clean instead of crashing on the same bytes
+forever (an autotune cache is always reconstructible). I/O failures in
+``put``/``save`` degrade to in-memory-only operation
+(``result="store_failed"``) rather than failing the sort that triggered
+the write.
 
 Entries are stamped with :data:`SCHEMA_VERSION`. ``get`` ignores entries
 written under a different schema (or none): when the plan fields change
@@ -81,30 +89,74 @@ class AutotuneCache:
         self.load()
 
     def load(self) -> None:
+        self._entries = {}
         try:
-            with open(self.path) as f:
-                data = json.load(f)
-            if isinstance(data, dict):
-                self._entries = {str(k): dict(v) for k, v in data.items()}
-        except (OSError, ValueError):
-            self._entries = {}
+            from repro.resilience.failpoints import failpoint
+
+            failpoint("cache.load")
+            data = self._read_disk()
+        except FileNotFoundError:
+            return  # first run: nothing to load, nothing to report
+        except ValueError:
+            # corrupt JSON: quarantine the bytes and start empty — the
+            # sidecar keeps the evidence without re-crashing every run
+            self._quarantine()
+            return
+        except Exception:  # noqa: BLE001 — cache is reconstructible
+            obs_metrics.counter("autotune.cache").inc(op="-",
+                                                      result="load_failed")
+            return
+        if isinstance(data, dict):
+            self._entries = {str(k): dict(v) for k, v in data.items()
+                             if isinstance(v, dict)}
+
+    def _read_disk(self) -> Any:
+        with open(self.path) as f:
+            return json.load(f)
+
+    def _quarantine(self) -> None:
+        obs_metrics.counter("autotune.cache").inc(op="-",
+                                                  result="quarantined")
+        try:
+            os.replace(self.path, self.path + ".bad")
+        except OSError:
+            pass  # racing writer already replaced it; nothing to keep
 
     def save(self) -> None:
         with self._lock:
-            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            fd, tmp = tempfile.mkstemp(
-                dir=os.path.dirname(self.path) or ".", suffix=".tmp"
-            )
+            self._save_locked()
+
+    def _save_locked(self) -> None:
+        from repro.resilience.failpoints import failpoint
+
+        failpoint("cache.store")
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        # merge entries a concurrent writer landed since our load: ours
+        # win per-key, theirs survive wholesale (corrupt on-disk state is
+        # ignored here — load() owns quarantine)
+        merged: Dict[str, Dict[str, Any]] = {}
+        try:
+            data = self._read_disk()
+            if isinstance(data, dict):
+                merged = {str(k): dict(v) for k, v in data.items()
+                          if isinstance(v, dict)}
+        except (OSError, ValueError):
+            pass
+        merged.update(self._entries)
+        self._entries = merged
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(self.path) or ".", suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._entries, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)  # atomic swap
+        except BaseException:
             try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(self._entries, f, indent=1, sort_keys=True)
-                os.rename(tmp, self.path)  # atomic swap
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         with self._lock:
@@ -126,8 +178,13 @@ class AutotuneCache:
     def put(self, key: str, value: Dict[str, Any]) -> None:
         with self._lock:
             self._entries[key] = dict(value, _schema=SCHEMA_VERSION)
-        if self.autosave:
-            self.save()
+            if not self.autosave:
+                return
+            try:
+                self._save_locked()
+            except Exception:  # noqa: BLE001 — keep tuning in memory
+                obs_metrics.counter("autotune.cache").inc(
+                    op=key.split("|", 1)[0], result="store_failed")
 
     def __len__(self) -> int:
         return len(self._entries)

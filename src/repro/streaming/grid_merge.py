@@ -121,6 +121,12 @@ def grid_chunked_merge2(
     ``network`` names the registered family executing each tile merge —
     the program is built outside the kernel, a static trace-time
     constant."""
+    from repro.resilience.failpoints import failpoint
+
+    # trace-time seam: fires when this signature (re)compiles, the same
+    # scope as a genuine refill-pipeline lowering failure — already-cached
+    # executables are past the point this layer can observe
+    failpoint("grid_merge.refill")
     interpret = resolve_interpret(interpret)
     bsz, na = a.shape
     nb = b.shape[-1]

@@ -1,0 +1,591 @@
+"""Chaos suite for the resilience subsystem (DESIGN.md §16).
+
+Three layers under test: the deterministic failpoints themselves, the
+circuit-breaker + degradation ladder in the dispatch layer, and the
+serving engine's behavior under injected faults. The gating invariants:
+
+* degraded answers are bit-identical to healthy ones (every rung of the
+  ladder realizes the same function);
+* whatever faults fire, the scheduler drains — every request terminal,
+  no slot or page leaked;
+* requests that complete under chaos emit the exact token stream of a
+  fault-free run;
+* with ``REPRO_FAILPOINTS`` unset the seams are invisible: jaxpr op
+  counts and results are unchanged.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.resilience import (
+    CircuitBreaker,
+    FailpointError,
+    arm,
+    LadderSkip,
+    ResilienceExhausted,
+    breaker_for,
+    breaker_states,
+    configure_breakers,
+    failpoint,
+    failpoints,
+    fires,
+    hits,
+    reset_breakers,
+    reset_failpoints,
+    run_ladder,
+    rungs_for,
+    set_resilience_enabled,
+)
+from repro.api.spec import SortSpec
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience():
+    reset_failpoints()
+    reset_breakers()
+    yield
+    reset_failpoints()
+    reset_breakers()
+
+
+# ---------------------------------------------------------------------------
+# failpoints: trigger grammar, hierarchy, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_failpoint_triggers():
+    with failpoints({"a": "once"}):
+        with pytest.raises(FailpointError):
+            failpoint("a")
+        failpoint("a")  # disarmed after the first fire
+        assert hits("a") == 2 and fires("a") == 1
+    with failpoints({"b": "times:2"}):
+        for _ in range(2):
+            with pytest.raises(FailpointError):
+                failpoint("b")
+        failpoint("b")
+    with failpoints({"c": "every:3"}):
+        failpoint("c")
+        failpoint("c")
+        with pytest.raises(FailpointError):
+            failpoint("c")
+        assert fires("c") == 1
+    with failpoints({"d": "off"}):
+        failpoint("d")
+        assert hits("d") == 1 and fires("d") == 0
+
+
+def test_failpoint_probability_is_seeded_deterministic():
+    def pattern():
+        out = []
+        with failpoints({"p": "p:0.5:7"}):
+            for _ in range(32):
+                try:
+                    failpoint("p")
+                    out.append(0)
+                except FailpointError:
+                    out.append(1)
+        return out
+
+    a, b = pattern(), pattern()
+    assert a == b
+    assert 0 < sum(a) < 32  # actually probabilistic, not constant
+
+
+def test_failpoint_hierarchical_prefix_match():
+    with failpoints({"kernel.launch": "always"}):
+        with pytest.raises(FailpointError):
+            failpoint("kernel.launch.sort")
+        failpoint("kernel.launcher")  # not a dot-boundary match
+    # exact arming wins over a prefix
+    with failpoints({"k": "always", "k.x": "off"}):
+        failpoint("k.x")
+        with pytest.raises(FailpointError):
+            failpoint("k.y")
+
+
+def test_failpoint_error_carries_name():
+    with failpoints({"seam": "always"}):
+        with pytest.raises(FailpointError) as ei:
+            failpoint("seam.child")
+    assert ei.value.name == "seam.child"
+
+
+def test_failpoints_context_restores_previous_arming():
+    arm("outer", "always")
+    with failpoints({"outer": "off", "inner": "always"}):
+        failpoint("outer")
+    with pytest.raises(FailpointError):
+        failpoint("outer")
+    failpoint("inner")  # context arming gone
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_opens_after_threshold_and_probes():
+    br = CircuitBreaker(("op", "rung", "cls"), threshold=3, cooldown_s=0.0)
+    for _ in range(2):
+        br.record_failure()
+        assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "open"
+    # cooldown 0: the next allow() is the half-open probe
+    assert br.allow()
+    assert br.state == "half_open"
+    assert not br.allow()  # only one probe in flight
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+    # reopen instantly from half-open on a failed probe
+    for _ in range(3):
+        br.record_failure()
+    assert br.allow() and br.state == "half_open"
+    br.record_failure()
+    assert br.state == "open"
+
+
+def test_breaker_cooldown_blocks_until_elapsed():
+    br = CircuitBreaker(("op", "rung", "cls"), threshold=1, cooldown_s=3600.0)
+    br.record_failure()
+    assert br.state == "open"
+    assert not br.allow() and not br.peek()
+
+
+def test_breaker_peek_does_not_consume_probe():
+    br = CircuitBreaker(("op", "rung", "cls"), threshold=1, cooldown_s=0.0)
+    br.record_failure()
+    assert br.peek() and br.state == "open"  # peek never transitions
+    assert br.allow() and br.state == "half_open"
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def _merge_inputs(n=64):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, n)),
+                    jnp.float32)
+    h = n // 2
+    return (jnp.sort(x[:, :h], -1), jnp.sort(x[:, h:], -1),
+            np.sort(np.asarray(x), -1))
+
+
+def test_ladder_degrades_bit_identically():
+    a, b, ref = _merge_inputs()
+    with failpoints({"executor.run": "always", "kernel.launch": "always",
+                     "fused.launch": "always"}):
+        out = repro.merge(a, b)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    # the failed rung fed its breaker
+    assert any(k[1] in ("schedule", "pallas", "fused")
+               for k in breaker_states())
+
+
+def test_ladder_explicit_backend_ask_propagates():
+    a, b, _ = _merge_inputs()
+    with failpoints({"executor.run": "always"}):
+        with pytest.raises(FailpointError):
+            repro.merge(a, b, backend="schedule")
+    assert breaker_states() == {}  # explicit asks never feed breakers
+
+
+def test_ladder_disabled_propagates_first_rung_failure():
+    a, b, _ = _merge_inputs()
+    prev = set_resilience_enabled(False)
+    try:
+        with failpoints({"executor.run": "always"}):
+            with pytest.raises(FailpointError):
+                repro.merge(a, b)
+    finally:
+        set_resilience_enabled(prev)
+
+
+def test_ladder_exhaustion_chains_last_error():
+    spec = SortSpec(op="merge", lengths=(8, 8))
+
+    def attempt(rung):
+        raise RuntimeError(f"boom {rung}")
+
+    with pytest.raises(ResilienceExhausted) as ei:
+        run_ladder(spec, ["schedule", "lax"], attempt)
+    assert "boom lax" in str(ei.value.__cause__)
+
+
+def test_ladder_skip_is_not_a_failure():
+    spec = SortSpec(op="merge", lengths=(8, 8))
+    seen = []
+
+    def attempt(rung):
+        seen.append(rung)
+        if rung == "fused":
+            raise LadderSkip
+        return rung
+
+    assert run_ladder(spec, ["fused", "schedule"], attempt) == "schedule"
+    assert breaker_states() == {}  # a declined rung feeds no breaker
+
+
+def test_ladder_forces_last_rung_when_all_blocked():
+    spec = SortSpec(op="merge", lengths=(8, 8))
+    configure_breakers(threshold=1, cooldown_s=3600.0)
+    for rung in ("schedule", "lax"):
+        breaker_for("merge", rung, "16v").record_failure()
+
+    def attempt(rung):
+        return f"ran {rung}"
+
+    # an answer beats a refusal: the most degraded rung is force-run
+    assert run_ladder(spec, ["schedule", "lax"], attempt,
+                      cls="16v") == "ran lax"
+
+
+def test_open_breaker_reroutes_at_plan_time():
+    a, b, ref = _merge_inputs()
+    with failpoints({"executor.run": "always"}):
+        for _ in range(3):  # DEFAULT_THRESHOLD failures open the breaker
+            repro.merge(a, b)
+    spec = SortSpec(op="merge", lengths=(32, 32))
+    dec = repro.plan(spec)
+    assert dec.source == "breaker" and dec.backend != "schedule"
+    # and the op keeps answering, bit-identically, with no faults armed
+    np.testing.assert_array_equal(np.asarray(repro.merge(a, b)), ref)
+
+
+def test_rungs_for_shapes():
+    spec = SortSpec(op="merge", lengths=(32, 32))
+    dec = repro.plan(spec)
+    rungs = rungs_for(spec, dec)
+    assert rungs[0] == dec.backend and rungs[-1] == "lax"
+    # explicit ask: exactly the named backend
+    spec_x = SortSpec(op="merge", lengths=(32, 32), backend="lax")
+    assert rungs_for(spec_x, repro.plan(spec_x)) == ["lax"]
+
+
+def test_segmented_kernel_degrades_to_reference():
+    """Unit-level: the segmented backend's kernel→reference degradation
+    (the synthetic ``segmented_kernel`` rung) retries on the reference
+    path, feeds the breaker, and skips the kernel once it opens."""
+    from repro.api.ops import _segmented_degrade
+    from repro.resilience.ladder import spec_class
+
+    spec = SortSpec(op="sort", lengths=(16,),
+                    segment_offsets=((0, 7, 16),))
+    calls = []
+
+    def call(use_kernel):
+        calls.append(use_kernel)
+        if use_kernel:
+            raise RuntimeError("kernel boom")
+        return "ref"
+
+    assert _segmented_degrade(spec, call, True) == "ref"
+    assert calls == [True, False]
+    key = ("sort", "segmented_kernel", spec_class(spec))
+    assert key in breaker_states()
+    _segmented_degrade(spec, call, True)
+    _segmented_degrade(spec, call, True)  # third failure opens the breaker
+    calls.clear()
+    assert _segmented_degrade(spec, call, True) == "ref"
+    assert calls == [False], "open breaker must skip the kernel attempt"
+
+
+def test_segment_sort_answers_under_spill_faults():
+    vals = np.asarray(np.random.default_rng(3).standard_normal(24),
+                      np.float32)
+    offs = (0, 5, 12, 24)
+    ref = np.concatenate([np.sort(vals[i:j]) for i, j in zip(offs, offs[1:])])
+    with failpoints({"segmented.spill": "always"}):
+        out = repro.segment_sort(vals, offs)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when disarmed
+# ---------------------------------------------------------------------------
+
+
+def _eqn_count(fn, *args) -> int:
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            n += 1
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    n += walk(v.jaxpr)
+                elif isinstance(v, (list, tuple)):
+                    for vi in v:
+                        if hasattr(vi, "jaxpr"):
+                            n += walk(vi.jaxpr)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def test_failpoints_unset_zero_jaxpr_overhead():
+    """The seams live on the Python side: with nothing armed (and even
+    with an armed-but-off failpoint) the traced program is unchanged."""
+    if os.environ.get("REPRO_FAILPOINTS"):
+        pytest.skip("needs REPRO_FAILPOINTS unset")
+    a, b, _ = _merge_inputs()
+
+    def fn():
+        return repro.merge(a, b)
+
+    ops_off = _eqn_count(fn)
+    val_off = np.asarray(jax.jit(fn)())
+    with failpoints({"executor.run": "off", "kernel.launch": "off"}):
+        ops_armed = _eqn_count(fn)
+        val_armed = np.asarray(jax.jit(fn)())
+    assert ops_armed == ops_off, "failpoint seams changed the jaxpr"
+    np.testing.assert_array_equal(val_armed, val_off)
+
+
+# ---------------------------------------------------------------------------
+# autotune cache: quarantine, concurrent writers, store failures
+# ---------------------------------------------------------------------------
+
+
+def test_cache_quarantines_corrupt_json(tmp_path):
+    from repro.streaming.cache import AutotuneCache
+
+    path = str(tmp_path / "autotune.json")
+    with open(path, "w") as f:
+        f.write('{"torn": ')
+    c = AutotuneCache(path=path)
+    assert len(c) == 0
+    assert os.path.exists(path + ".bad") and not os.path.exists(path)
+    c.put("merge|8x8|k-|float32|cpu", {"block_batch": 8})
+    assert AutotuneCache(path=path).get("merge|8x8|k-|float32|cpu") is not None
+
+
+def test_cache_concurrent_writers_merge(tmp_path):
+    from repro.streaming.cache import AutotuneCache
+
+    path = str(tmp_path / "autotune.json")
+    c1 = AutotuneCache(path=path)
+    c2 = AutotuneCache(path=path)  # loaded before c1 writes
+    c1.put("k1", {"v": 1})
+    c2.put("k2", {"v": 2})  # must not clobber c1's entry
+    c3 = AutotuneCache(path=path)
+    assert c3.get("k1") is not None and c3.get("k2") is not None
+
+
+def test_cache_store_failure_degrades_to_memory(tmp_path):
+    from repro.streaming.cache import AutotuneCache
+
+    c = AutotuneCache(path=str(tmp_path / "autotune.json"))
+    with failpoints({"cache.store": "always"}):
+        c.put("k", {"v": 1})  # must not raise
+    assert c.get("k") is not None  # in-memory entry survives
+    assert AutotuneCache(path=c.path).get("k") is None  # never hit disk
+    c.put("k2", {"v": 2})
+    assert AutotuneCache(path=c.path).get("k") is not None  # flushed now
+
+
+def test_cache_load_failure_starts_empty(tmp_path):
+    from repro.streaming.cache import AutotuneCache
+
+    path = str(tmp_path / "autotune.json")
+    AutotuneCache(path=path).put("k", {"v": 1})
+    with failpoints({"cache.load": "always"}):
+        c = AutotuneCache(path=path)
+    assert len(c) == 0
+    assert os.path.exists(path)  # load failure is not corruption: no .bad
+
+
+# ---------------------------------------------------------------------------
+# serving under failure
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.configs import get_smoke_config
+    from repro.models import model_init
+
+    cfg = get_smoke_config("chatglm3-6b")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _specs():
+    from repro.serving.scheduler import SamplingParams
+
+    return [
+        (5, SamplingParams(k=8, temperature=1.0, max_new_tokens=5, seed=11), 0),
+        (9, SamplingParams(k=1, temperature=1.0, max_new_tokens=4, seed=33), 0),
+        (3, SamplingParams(k=4, top_p=0.9, temperature=0.7, max_new_tokens=4,
+                           seed=22), 1),
+    ]
+
+
+def _prompts(cfg, specs):
+    rng = np.random.default_rng(1)
+    return [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+            for n, _, _ in specs]
+
+
+def _engine(cfg, params, **kw):
+    from repro.serving.scheduler import ScheduledEngine, SchedulerConfig
+
+    kw.setdefault("retry_backoff_s", 0.0)
+    kw.setdefault("n_slots", 2)
+    sched = SchedulerConfig(page_size=8, pages_per_slot=4, **kw)
+    return ScheduledEngine(params, cfg, sched)
+
+
+def _drain_invariants(eng):
+    from repro.serving.scheduler.request import TERMINAL_STATES
+
+    assert all(r.state in TERMINAL_STATES for r in eng.requests.values()), \
+        {rid: r.state for rid, r in eng.requests.items()}
+    assert not len(eng.queue) and not eng.active
+    assert eng.slots.free_slot_count == eng.sc.n_slots, "leaked slot"
+    # page 0 is the reserved scratch page, never allocatable
+    assert eng.slots.free_page_count == eng.pool.n_pages - 1, "leaked pages"
+
+
+def _oracle(cfg, params, specs, prompts):
+    eng = _engine(cfg, params)
+    rids = [eng.submit(p, sp, arrival=a)
+            for p, (_, sp, a) in zip(prompts, specs)]
+    return eng.run(), rids
+
+
+def test_transient_faults_retry_to_completion(model):
+    """One injected failure per launch kind: the bounded retry absorbs
+    it and every request still matches the fault-free run bit-for-bit."""
+    cfg, params = model
+    specs, prompts = _specs(), _prompts(cfg, _specs())
+    ref, ref_rids = _oracle(cfg, params, specs, prompts)
+    eng = _engine(cfg, params)
+    rids = [eng.submit(p, sp, arrival=a)
+            for p, (_, sp, a) in zip(prompts, specs)]
+    with failpoints({"sched.prefill": "once", "sched.insert": "once",
+                     "sched.decode": "once"}):
+        out = eng.run()
+    _drain_invariants(eng)
+    assert sorted(out) == sorted(ref_rids)
+    for rid, ref_rid in zip(rids, ref_rids):
+        np.testing.assert_array_equal(out[rid], ref[ref_rid])
+
+
+def test_persistent_prefill_fault_fails_batch_and_drains(model):
+    cfg, params = model
+    from repro.serving.scheduler import RequestState
+
+    specs, prompts = _specs(), _prompts(cfg, _specs())
+    eng = _engine(cfg, params, max_retries=1)
+    rids = [eng.submit(p, sp, arrival=a)
+            for p, (_, sp, a) in zip(prompts, specs)]
+    with failpoints({"sched.prefill": "always"}):
+        out = eng.run()
+    _drain_invariants(eng)
+    assert out == {}
+    for rid in rids:
+        r = eng.requests[rid]
+        assert r.state is RequestState.FAILED and "prefill" in r.error
+
+
+def test_persistent_decode_fault_fails_active_and_drains(model):
+    cfg, params = model
+    from repro.serving.scheduler import RequestState
+
+    specs, prompts = _specs(), _prompts(cfg, _specs())
+    eng = _engine(cfg, params, max_retries=0)
+    [eng.submit(p, sp, arrival=a)
+     for p, (_, sp, a) in zip(prompts, specs)]
+    with failpoints({"sched.decode": "always"}):
+        eng.run()
+    _drain_invariants(eng)
+    states = {r.state for r in eng.requests.values()}
+    assert states <= {RequestState.FAILED, RequestState.DONE}
+    assert RequestState.FAILED in states
+
+
+def test_seeded_chaos_drains_and_completions_match_oracle(model):
+    """The headline gate: under seeded probabilistic faults across every
+    scheduler seam, the engine drains with no leaks, and whatever
+    completed is bit-identical to the fault-free run."""
+    cfg, params = model
+    specs, prompts = _specs(), _prompts(cfg, _specs())
+    ref, ref_rids = _oracle(cfg, params, specs, prompts)
+    eng = _engine(cfg, params, max_retries=1)
+    rids = [eng.submit(p, sp, arrival=a)
+            for p, (_, sp, a) in zip(prompts, specs)]
+    with failpoints({"sched": "p:0.25:13"}):
+        out = eng.run()
+    _drain_invariants(eng)
+    for rid, ref_rid in zip(rids, ref_rids):
+        if rid in out:
+            np.testing.assert_array_equal(out[rid], ref[ref_rid])
+
+
+def test_ttl_ticks_times_out_running_request(model):
+    cfg, params = model
+    from repro.serving.scheduler import RequestState, SamplingParams
+
+    eng = _engine(cfg, params)
+    prompt = _prompts(cfg, _specs())[0]
+    rid_t = eng.submit(prompt, SamplingParams(k=8, max_new_tokens=12, seed=1,
+                                              ttl_ticks=2), arrival=0)
+    rid_ok = eng.submit(prompt, SamplingParams(k=8, max_new_tokens=3, seed=2),
+                        arrival=0)
+    out = eng.run()
+    _drain_invariants(eng)
+    r = eng.requests[rid_t]
+    assert r.state is RequestState.TIMED_OUT and rid_t not in out
+    assert 0 < len(r.tokens) < 12  # it ran, then the deadline cut it
+    # the survivor is untouched by its neighbor's timeout
+    ref, _ = _oracle(cfg, params,
+                     [(len(prompt), SamplingParams(k=8, max_new_tokens=3,
+                                                   seed=2), 0)], [prompt])
+    np.testing.assert_array_equal(out[rid_ok], ref[0])
+
+
+def test_ttl_ticks_times_out_queued_request(model):
+    cfg, params = model
+    from repro.serving.scheduler import RequestState, SamplingParams
+
+    # one slot: the blocker occupies it, the TTL request expires queued
+    eng = _engine(cfg, params, n_slots=1)
+    prompt = _prompts(cfg, _specs())[0]
+    blocker = eng.submit(prompt, SamplingParams(max_new_tokens=8, seed=5),
+                         arrival=0)
+    rid = eng.submit(prompt, SamplingParams(max_new_tokens=2, ttl_ticks=2),
+                     arrival=0)
+    out = eng.run()
+    _drain_invariants(eng)
+    r = eng.requests[rid]
+    assert r.state is RequestState.TIMED_OUT
+    assert r.slot is None and not r.tokens  # never admitted, nothing held
+    assert blocker in out and len(out[blocker]) == 8
+
+
+def test_queue_full_rejects_with_retry_hint(model):
+    cfg, params = model
+    from repro.serving.scheduler import QueueFull, RequestState, SamplingParams
+
+    eng = _engine(cfg, params, max_queue=2)
+    prompt = _prompts(cfg, _specs())[0]
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), arrival=0)
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), arrival=0)
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(prompt, SamplingParams(max_new_tokens=2), arrival=0)
+    assert ei.value.depth == 2 and ei.value.max_queue == 2
+    assert ei.value.retry_after_ticks >= 1
+    rejected = [r for r in eng.requests.values()
+                if r.state is RequestState.REJECTED]
+    assert len(rejected) == 1 and "full" in rejected[0].error
+    out = eng.run()  # the two admitted requests drain normally
+    _drain_invariants(eng)
+    assert len(out) == 2
