@@ -1,0 +1,209 @@
+"""Perf-regression sentinel over the committed bench trajectory.
+
+Wall-clock numbers off-TPU are noise (interpret-mode kernels under CI
+virtualization), so CI cannot gate on them — but the repo's benchmarks
+also report *deterministic* proxies that only change when the lowering
+or the schedule actually changes:
+
+* ``xla_ops``      — jaxpr equation count of the jitted callable
+  (BENCH_sort.json, fused + segmented rows): a fusion regression shows
+  up as an increase long before it is measurable on a laptop;
+* ``padded_slots`` — total comparator lanes a segmented launch processes
+  (``sum(n_c * W_c)``): a size-classing regression inflates it;
+* ``ticks``        — virtual scheduler ticks to drain the seeded
+  offered-load case (BENCH_serve.json): admission is tick-deterministic,
+  so more ticks means the schedule itself regressed.
+
+The sentinel diffs the *current* rows against the *committed* baseline —
+``git show HEAD:BENCH_sort.json`` / ``HEAD:BENCH_serve.json`` by default,
+so it works even after an earlier CI step rewrote the workspace files —
+per row identity key (every identity field the row carries: op / model,
+shape, backend, dtype, payload, network, platform, scheduler geometry).
+Any proxy *increase* on a matched key, or a baseline key that vanished
+(coverage loss), fails the run. Keys only present in the current rows
+are new coverage and pass. Wall-time deltas are printed as an
+informational table, never gated.
+
+Usage (CI runs the first form inside perf-smoke)::
+
+    python -m benchmarks.sentinel                 # fresh rows vs HEAD
+    python -m benchmarks.sentinel --current-sort BENCH_sort.json \
+        --current-serve BENCH_serve.json          # file vs HEAD
+    python -m benchmarks.sentinel --baseline-sort old.json ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: fields that identify a row (whichever subset the row carries); the
+#: key is the sorted (field, value) tuple so schema growth in *new* rows
+#: never perturbs old keys that lack the field
+ID_FIELDS = (
+    "kind", "op", "model", "backend", "network", "dtype", "payload",
+    "shape", "batch", "prompt_len", "new_tokens", "top_k", "temperature",
+    "n_requests", "rate_per_tick", "n_slots", "page_size",
+    "pages_per_slot", "raggedness", "platform",
+)
+
+#: deterministic proxies: any increase on a matched key is a regression
+PROXY_FIELDS = ("xla_ops", "padded_slots", "ticks")
+
+#: wall/throughput fields: reported, never gated
+WALL_FIELDS = ("wall_us", "p50_us", "p95_us", "p99_us", "compile_us",
+               "prefill_us", "decode_us", "tok_per_s",
+               "throughput_tok_per_s", "req_p50_ms", "req_p99_ms",
+               "ttft_p50_ms", "ttft_p99_ms")
+
+
+def row_key(row: dict) -> Tuple:
+    return tuple((f, row[f]) for f in ID_FIELDS if f in row)
+
+
+def fmt_key(key: Tuple) -> str:
+    return " ".join(f"{f}={v}" for f, v in key)
+
+
+def _index(rows: List[dict]) -> Dict[Tuple, dict]:
+    out: Dict[Tuple, dict] = {}
+    for r in rows:
+        out[row_key(r)] = r
+    return out
+
+
+def diff_rows(base_rows: List[dict], cur_rows: List[dict],
+              label: str) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, info lines) for one trajectory file."""
+    base, cur = _index(base_rows), _index(cur_rows)
+    regressions: List[str] = []
+    info: List[str] = []
+    for key, brow in base.items():
+        crow = cur.get(key)
+        if crow is None:
+            regressions.append(
+                f"{label}: coverage lost — baseline row has no current "
+                f"match: {fmt_key(key)}")
+            continue
+        for f in PROXY_FIELDS:
+            if f not in brow or f not in crow:
+                continue
+            b, c = int(brow[f]), int(crow[f])
+            if c > b:
+                regressions.append(
+                    f"{label}: {f} regressed {b} -> {c} on {fmt_key(key)}")
+            elif c < b:
+                info.append(
+                    f"{label}: {f} improved {b} -> {c} on {fmt_key(key)}")
+        for f in WALL_FIELDS:
+            if f not in brow or f not in crow:
+                continue
+            b, c = float(brow[f]), float(crow[f])
+            if b > 0 and abs(c - b) / b >= 0.05:
+                info.append(
+                    f"{label}: [wall, informational] {f} "
+                    f"{b:.1f} -> {c:.1f} ({(c - b) / b:+.0%}) "
+                    f"on {fmt_key(key)}")
+    for key in cur:
+        if key not in base:
+            info.append(f"{label}: new coverage: {fmt_key(key)}")
+    return regressions, info
+
+
+def _git_show(rel: str) -> Optional[dict]:
+    """The committed version of ``rel`` at HEAD, or None if unreadable —
+    the workspace copy may have been rewritten by an earlier bench step,
+    so the *committed* trajectory is the authoritative baseline."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"], cwd=REPO_ROOT,
+            capture_output=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, OSError, ValueError):
+        return None
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def load_baseline(rel: str, explicit: Optional[str]) -> Optional[dict]:
+    if explicit:
+        return _load(explicit)
+    return _git_show(rel) or _load(os.path.join(REPO_ROOT, rel))
+
+
+def fresh_sort_rows() -> List[dict]:
+    """Recompute the BENCH_sort rows (fused + segmented) in-process; one
+    timing iter since only the deterministic proxies are gated."""
+    from . import fused_pipeline, segmented
+
+    rows, _ = fused_pipeline.collect_rows(iters=1)
+    srows, _ = segmented.collect_rows(iters=1)
+    return rows + srows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-sort", default=None,
+                    help="baseline BENCH_sort.json (default: git HEAD)")
+    ap.add_argument("--baseline-serve", default=None,
+                    help="baseline BENCH_serve.json (default: git HEAD)")
+    ap.add_argument("--current-sort", default=None,
+                    help="current BENCH_sort.json (default: fresh re-run)")
+    ap.add_argument("--current-serve", default=None,
+                    help="current BENCH_serve.json (default: workspace "
+                         "file, skipped if absent)")
+    args = ap.parse_args(argv)
+
+    regressions: List[str] = []
+    info: List[str] = []
+
+    base_sort = load_baseline("BENCH_sort.json", args.baseline_sort)
+    if base_sort is None:
+        print("# sentinel: no BENCH_sort.json baseline — nothing to gate",
+              file=sys.stderr)
+    else:
+        if args.current_sort:
+            cur = _load(args.current_sort)
+            cur_rows = cur["rows"] if cur else []
+        else:
+            cur_rows = fresh_sort_rows()
+        r, i = diff_rows(base_sort["rows"], cur_rows, "sort")
+        regressions += r
+        info += i
+
+    base_serve = load_baseline("BENCH_serve.json", args.baseline_serve)
+    cur_serve = _load(args.current_serve
+                      or os.path.join(REPO_ROOT, "BENCH_serve.json"))
+    if base_serve is not None and cur_serve is not None:
+        r, i = diff_rows(base_serve["rows"], cur_serve["rows"], "serve")
+        regressions += r
+        info += i
+    elif base_serve is not None:
+        print("# sentinel: no current BENCH_serve.json — serve rows "
+              "skipped", file=sys.stderr)
+
+    for line in info:
+        print(f"SENTINEL-INFO {line}")
+    for line in regressions:
+        print(f"SENTINEL-REGRESSION {line}")
+    n_keys = (len(base_sort["rows"]) if base_sort else 0) + \
+        (len(base_serve["rows"]) if base_serve else 0)
+    print(f"# sentinel: {n_keys} baseline rows, "
+          f"{len(regressions)} regressions, {len(info)} notes",
+          file=sys.stderr)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -88,6 +88,9 @@ def _run_case(model, batch_size, prompt_len, new_tokens, top_k, temperature):
         "p50_us": round(out["decode_step_p50_us"], 1),
         "p95_us": round(out["decode_step_p95_us"], 1),
         "p99_us": round(out["decode_step_p99_us"], 1),
+        # first decode step = jit compile; reported apart so the
+        # steady-state percentiles above stay compile-free
+        "compile_us": round(out["decode_step_compile_us"], 1),
         "platform": jax.default_backend(),
     }
     failures = []
@@ -100,6 +103,8 @@ def _run_case(model, batch_size, prompt_len, new_tokens, top_k, temperature):
         failures.append(f"{model}: tok_per_s {out['tok_per_s']}")
     if not (row["p50_us"] <= row["p95_us"] <= row["p99_us"]):
         failures.append(f"{model}: decode percentiles not ordered")
+    if not row["compile_us"] > 0:
+        failures.append(f"{model}: compile_us {row['compile_us']}")
     return row, failures
 
 
@@ -363,6 +368,88 @@ def _obs_smoke(failures) -> None:
         obs.set_enabled(prev)
 
 
+def _trace_requests(failures) -> None:
+    """``--trace-requests``: drive the scheduler with obs forced on and
+    write the per-request waterfall trace — one perfetto timeline row per
+    request (queue-wait → prefill → insert → decode ticks) plus the
+    ``waterfalls`` summary — into ``BENCH_serve.trace.json``. Gates the
+    §17 reconciliation contract against the engine's *measured* markers:
+    for every completed request the non-decode stage spans sum exactly
+    (integer ns) to its TTFT, the root span matches its request latency,
+    and unaccounted scheduler overhead is never negative."""
+    import repro.obs as obs
+    from repro.configs import get_smoke_config
+    from repro.serving.scheduler import (
+        SamplingParams, ScheduledEngine, SchedulerConfig)
+
+    model, n_req, rate, p_lo, p_hi, new_tokens, n_slots, page_size, \
+        pages_per_slot, seed = LOAD_CASES[0]
+    cfg = get_smoke_config(model)
+    params = model_params_cached(model)
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(1.0 / rate, n_req))).astype(int)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in rng.integers(p_lo, p_hi + 1, n_req)]
+    sps = [SamplingParams(k=int(rng.choice([1, 4, 8])),
+                          temperature=float(rng.choice([0.0, 0.7, 1.0])),
+                          max_new_tokens=new_tokens, seed=int(i))
+           for i in range(n_req)]
+
+    prev = obs.set_enabled(True)
+    obs.trace.clear()
+    obs.metrics.reset()
+    obs.recorder.clear()
+    try:
+        eng = ScheduledEngine(params, cfg, SchedulerConfig(
+            n_slots=n_slots, page_size=page_size,
+            pages_per_slot=pages_per_slot))
+        rids = [eng.submit(p, sp, arrival=int(a))
+                for p, sp, a in zip(prompts, sps, arrivals)]
+        eng.run()
+        snap = obs.snapshot()
+        wfs = obs.request_waterfalls(snap)
+        if sorted(w["rid"] for w in wfs) != sorted(rids):
+            failures.append(
+                f"trace: waterfalls cover {sorted(w['rid'] for w in wfs)}, "
+                f"expected {sorted(rids)}")
+        for w in wfs:
+            r = eng.requests[w["rid"]]
+            if w["state"] != "done":
+                continue
+            if w["ttft_ns"] != r.t_first_ns - r.t_submit_ns:
+                failures.append(
+                    f"trace: rid {w['rid']} stage sum {w['ttft_ns']}ns != "
+                    f"measured TTFT {r.t_first_ns - r.t_submit_ns}ns")
+            if w["total_ns"] != r.t_finish_ns - r.t_submit_ns:
+                failures.append(
+                    f"trace: rid {w['rid']} root span != request latency")
+            if w["unaccounted_ns"] < 0:
+                failures.append(
+                    f"trace: rid {w['rid']} negative unaccounted time")
+            stages = [s["name"] for s in w["stages"]]
+            for want in ("req.queue_wait", "req.prefill", "req.insert"):
+                if want not in stages:
+                    failures.append(
+                        f"trace: rid {w['rid']} missing stage {want}")
+            if w["decode_ticks"] != new_tokens - 1:
+                failures.append(
+                    f"trace: rid {w['rid']} has {w['decode_ticks']} decode "
+                    f"ticks, expected {new_tokens - 1}")
+        trace = obs.request_chrome_trace(snap)
+        for e in obs.validate_chrome_trace(trace):
+            failures.append(f"trace: chrome trace schema: {e}")
+        trace_path = os.path.abspath(BENCH_SERVE_JSON).replace(
+            ".json", ".trace.json")
+        with open(trace_path, "w") as f:
+            json.dump(trace, f, indent=1, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"# wrote {trace_path} ({len(wfs)} request waterfalls, "
+              f"{len(trace['traceEvents'])} events)", file=sys.stderr)
+    finally:
+        obs.set_enabled(prev)
+
+
 def collect_rows():
     rows, failures = [], []
     for case in CASES:
@@ -387,7 +474,17 @@ def run():
     return rows, failures
 
 
-def main(check: bool = False, faults: bool = False) -> int:
+def main(check: bool = False, faults: bool = False,
+         trace_requests: bool = False) -> int:
+    failures = []
+    if trace_requests:
+        # standalone mode: only the request-trace gate runs (CI's schema
+        # smoke); rows are untouched so the committed trajectory and the
+        # sentinel baseline stay stable
+        _trace_requests(failures)
+        for f in failures:
+            print(f"SERVE-CHECK-FAIL {f}", file=sys.stderr)
+        return 1 if failures else 0
     rows, failures = collect_rows()
     lrows, lfails = collect_load_rows()
     rows += lrows
@@ -410,4 +507,5 @@ def main(check: bool = False, faults: bool = False) -> int:
 
 if __name__ == "__main__":
     sys.exit(main(check="--check" in sys.argv,
-                  faults="--faults" in sys.argv))
+                  faults="--faults" in sys.argv,
+                  trace_requests="--trace-requests" in sys.argv))

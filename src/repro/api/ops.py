@@ -202,10 +202,14 @@ def _segmented_degrade(spec, call, use_kernel: bool):
         result = call(True)
     except Exception as e:  # noqa: BLE001 — reference path is the oracle
         from repro.obs import metrics as obs_metrics
+        from repro.obs import recorder as obs_recorder
 
         (br or breaker_for(spec.op, "segmented_kernel", cls)).record_failure()
         obs_metrics.counter("resilience.fallbacks").inc(
-            op=spec.op, rung="segmented_kernel", err=type(e).__name__)
+            op=spec.op, rung="segmented_kernel", cls=cls,
+            err=type(e).__name__)
+        obs_recorder.emit("fallback", f"{spec.op}/segmented_kernel/{cls}",
+                          err=type(e).__name__)
         return call(False)
     if br is not None:
         br.record_success()

@@ -144,8 +144,14 @@ class Histogram(Metric):
         with self._lock:
             out = []
             for k, st in sorted(self._stats.items()):
+                # ``samples`` (reservoir occupancy) rides along so an
+                # exhausted reservoir is visible: count > samples means
+                # the percentiles below cover only the first
+                # ``max_samples`` observations, not the full series
                 row = {"labels": dict(k), "count": st["count"],
-                       "sum": st["sum"], "min": st["min"], "max": st["max"]}
+                       "sum": st["sum"], "min": st["min"], "max": st["max"],
+                       "samples": len(st["samples"]),
+                       "reservoir_full": len(st["samples"]) >= self.max_samples}
                 samples = sorted(st["samples"])
                 if samples:
                     for p in (50, 95, 99):

@@ -80,6 +80,10 @@ class Span:
             "kind": self.kind,
             "ts_us": self.t0_ns / 1e3,
             "dur_us": self.dur_ns / 1e3,
+            # integer-ns twins: stage spans reconcile *exactly* against
+            # request latency in ns; the µs floats are display-only
+            "ts_ns": self.t0_ns,
+            "dur_ns": self.dur_ns,
             "id": self.span_id,
             "parent": self.parent_id,
             "thread": self.thread,
@@ -92,6 +96,21 @@ _spans: List[Span] = []
 _dropped = 0
 _ids = itertools.count(1)
 _tls = threading.local()
+
+
+def _store(sp: Span) -> None:
+    """Append one completed span (respecting the cap) and feed the
+    flight recorder's span-close event stream."""
+    global _dropped
+    with _lock:
+        if len(_spans) < MAX_SPANS:
+            _spans.append(sp)
+        else:
+            _dropped += 1
+    from . import recorder as _recorder
+
+    _recorder.emit("span", sp.name, dur_us=sp.dur_ns / 1e3,
+                   span_kind=sp.kind, **sp.attrs)
 
 
 class _NullSpan:
@@ -144,16 +163,10 @@ class _LiveSpan:
         stack = getattr(_tls, "stack", [])
         if stack and stack[-1] is self:
             stack.pop()
-        global _dropped
-        sp = Span(name=self.name, kind=self.kind, t0_ns=self._t0,
-                  dur_ns=dur, span_id=self.span_id,
-                  parent_id=self.parent_id,
-                  thread=threading.get_ident(), attrs=self.attrs)
-        with _lock:
-            if len(_spans) < MAX_SPANS:
-                _spans.append(sp)
-            else:
-                _dropped += 1
+        _store(Span(name=self.name, kind=self.kind, t0_ns=self._t0,
+                    dur_ns=dur, span_id=self.span_id,
+                    parent_id=self.parent_id,
+                    thread=threading.get_ident(), attrs=self.attrs))
         return False
 
 
@@ -187,10 +200,38 @@ def traced(name: Optional[str] = None, kind: str = "trace"):
     return deco
 
 
+def record_span(name: str, t0_ns: int, dur_ns: int, *, kind: str = "run",
+                parent_id: Optional[int] = None,
+                **attrs) -> Optional[int]:
+    """Record a completed span with explicit host timestamps.
+
+    The context-manager form times a code region; this form records a
+    *derived* region — e.g. a request's queue-wait, which spans two call
+    sites (``submit`` → admission) and belongs to no single ``with``
+    block. ``t0_ns``/``dur_ns`` are ``time.perf_counter_ns`` values so
+    explicit and context-managed spans share one clock. Returns the span
+    id (``None`` when disabled: a strict no-op, nothing allocated)."""
+    if not enabled():
+        return None
+    assert kind in ("trace", "run"), kind
+    sid = next(_ids)
+    _store(Span(name=name, kind=kind, t0_ns=int(t0_ns),
+                dur_ns=max(int(dur_ns), 0), span_id=sid,
+                parent_id=parent_id, thread=threading.get_ident(),
+                attrs=attrs))
+    return sid
+
+
 def spans() -> Tuple[Span, ...]:
     """Snapshot of every recorded span (completion order)."""
     with _lock:
         return tuple(_spans)
+
+
+def span_count() -> int:
+    """How many spans the buffer currently holds (cap: MAX_SPANS)."""
+    with _lock:
+        return len(_spans)
 
 
 def dropped() -> int:

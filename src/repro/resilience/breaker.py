@@ -104,12 +104,15 @@ class CircuitBreaker:
             return
         prev, self.state = self.state, state
         from repro.obs import metrics as obs_metrics
+        from repro.obs import recorder as obs_recorder
 
         op, rung, cls = self.key
         obs_metrics.gauge("breaker.state").set(
             _STATE_NUM[state], op=op, rung=rung, cls=cls)
         obs_metrics.counter("breaker.transitions").inc(
             op=op, rung=rung, cls=cls, frm=prev, to=state)
+        obs_recorder.emit("breaker", f"{op}/{rung}/{cls}",
+                          frm=prev, to=state, failures=self.failures)
 
 
 _reg_lock = threading.Lock()

@@ -151,8 +151,10 @@ def failpoint(name: str) -> None:
             return
         fp.fires += 1
     from repro.obs import metrics as obs_metrics
+    from repro.obs import recorder as obs_recorder
 
     obs_metrics.counter("failpoints.fired").inc(name=fp.name)
+    obs_recorder.emit("failpoint", name, armed_as=fp.name, fire=fp.fires)
     raise FailpointError(name)
 
 

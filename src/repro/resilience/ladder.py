@@ -156,6 +156,7 @@ def run_ladder(spec, rungs: Sequence[str], attempt: Callable[[str], object],
     into :class:`ResilienceExhausted`."""
     from repro.api.spec import BACKEND_AUTO
     from repro.obs import metrics as obs_metrics
+    from repro.obs import recorder as obs_recorder
 
     catching = resilience_enabled() and spec.backend == BACKEND_AUTO
     if not catching:
@@ -182,7 +183,9 @@ def run_ladder(spec, rungs: Sequence[str], attempt: Callable[[str], object],
         except Exception as e:  # noqa: BLE001 — any rung failure degrades
             (br or breaker_for(spec.op, rung, cls)).record_failure()
             obs_metrics.counter("resilience.fallbacks").inc(
-                op=spec.op, rung=rung, err=type(e).__name__)
+                op=spec.op, rung=rung, cls=cls, err=type(e).__name__)
+            obs_recorder.emit("fallback", f"{spec.op}/{rung}/{cls}",
+                              err=type(e).__name__)
             last_exc = e
             continue
         if br is not None:
@@ -191,7 +194,8 @@ def run_ladder(spec, rungs: Sequence[str], attempt: Callable[[str], object],
     if last_exc is None and blocked:
         # every rung breaker-blocked: force the most degraded one — the
         # ladder exists to keep answering
-        obs_metrics.counter("resilience.forced").inc(op=spec.op,
-                                                     rung=blocked[-1])
+        obs_metrics.counter("resilience.forced").inc(
+            op=spec.op, rung=blocked[-1], cls=cls)
+        obs_recorder.emit("forced", f"{spec.op}/{blocked[-1]}/{cls}")
         return attempt(blocked[-1])
     raise ResilienceExhausted(spec.op, rungs) from last_exc

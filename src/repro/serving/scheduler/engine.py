@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -56,7 +57,9 @@ from repro.api import segment_topk
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_cache, prefill
 from repro.obs import metrics as obs_metrics
-from repro.obs.trace import span
+from repro.obs import recorder as obs_recorder
+from repro.obs.trace import enabled as obs_enabled
+from repro.obs.trace import record_span, span
 from repro.resilience.failpoints import failpoint
 
 from ..sample import canonical_token, sample_greedy, sample_topk, scored_draw
@@ -130,6 +133,11 @@ class ScheduledEngine:
         self._prefill_jits: Dict[tuple, object] = {}
         self._insert_jits: Dict[tuple, object] = {}
         self._decode_jits: Dict[tuple, object] = {}
+        #: batch signatures whose decode jit has already been launched —
+        #: the first tick per signature pays the compile and is tagged
+        #: ``compiled=True`` on its ``req.decode`` spans
+        self._decode_seen: set = set()
+        self._trace_prefix = f"{os.getpid():x}-{id(self) & 0xFFFF:04x}"
 
     # ----------------------------------------------------------------- API
 
@@ -146,8 +154,10 @@ class ScheduledEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, params=params,
-                      arrival=int(arrival))
-        req.t_submit = time.perf_counter()
+                      arrival=int(arrival),
+                      trace_id=f"{self._trace_prefix}-{rid}")
+        req.t_submit_ns = time.perf_counter_ns()
+        req.t_submit = req.t_submit_ns * 1e-9
         self.requests[rid] = req
         try:
             self.queue.push(req)
@@ -157,7 +167,10 @@ class ScheduledEngine:
             req.state = RequestState.REJECTED
             req.error = str(e)
             req.finish_tick = self.t
+            req.t_finish_ns = time.perf_counter_ns()
+            req.t_finish = req.t_finish_ns * 1e-9
             obs_metrics.counter("sched.rejected").inc()
+            self._record_request(req)
             raise
         obs_metrics.counter("sched.submitted").inc()
         return rid
@@ -175,15 +188,25 @@ class ScheduledEngine:
         self.t += 1
 
     def run(self, max_steps: int = 1_000_000) -> Dict[int, np.ndarray]:
-        """Drain the queue; returns {rid: generated tokens}."""
+        """Drain the queue; returns {rid: generated tokens}.
+
+        An *unhandled* exception (anything the retry/fail machinery did
+        not absorb) dumps the flight recorder — to ``REPRO_OBS_DUMP`` if
+        set, else a bounded event tail to stderr — before propagating,
+        so the post-mortem has the breaker/failpoint/span history that
+        led up to the crash."""
         steps = 0
-        while (len(self.queue) or self.active) and steps < max_steps:
-            if not self.active:
-                nxt = self.queue.next_arrival()
-                if nxt is not None and nxt > self.t:
-                    self.t = nxt  # idle fast-forward to the next arrival
-            self.step()
-            steps += 1
+        try:
+            while (len(self.queue) or self.active) and steps < max_steps:
+                if not self.active:
+                    nxt = self.queue.next_arrival()
+                    if nxt is not None and nxt > self.t:
+                        self.t = nxt  # idle fast-forward to next arrival
+                self.step()
+                steps += 1
+        except Exception as e:  # noqa: BLE001 — dump context, re-raise
+            obs_recorder.crash_dump("sched.run", e)
+            raise
         assert not len(self.queue) and not self.active, \
             f"drain incomplete after {steps} steps"
         return {rid: np.asarray(r.tokens, np.int32)
@@ -214,21 +237,44 @@ class ScheduledEngine:
             self.active.pop(r.slot, None)
             r.slot = None
 
+    def _record_request(self, r: Request) -> None:
+        """Close the request's root span at its terminal state. Stage
+        spans (``req.queue_wait``/``req.prefill``/``req.insert``/
+        ``req.decode``) were recorded as the stages ran; the root span
+        carries the whole submit→terminal window plus the trace id, so
+        the exporter (``obs.request_waterfalls``) can rebuild the
+        per-request timeline and reconcile stage sums against the
+        measured latency."""
+        if not obs_enabled():
+            return
+        record_span("request", r.t_submit_ns,
+                    (r.t_finish_ns or time.perf_counter_ns()) - r.t_submit_ns,
+                    rid=r.rid, trace_id=r.trace_id, state=r.state.value,
+                    tokens=len(r.tokens), arrival=r.arrival,
+                    finish_tick=r.finish_tick)
+        obs_recorder.emit("sched", f"request.{r.state.value}", rid=r.rid,
+                          trace_id=r.trace_id, tokens=len(r.tokens))
+
+    def _mark_finish(self, r: Request) -> None:
+        r.finish_tick = self.t
+        r.t_finish_ns = time.perf_counter_ns()
+        r.t_finish = r.t_finish_ns * 1e-9
+
     def _timeout(self, r: Request) -> None:
         r.state = RequestState.TIMED_OUT
         r.error = f"deadline elapsed at tick {self.t}"
-        r.finish_tick = self.t
-        r.t_finish = time.perf_counter()
+        self._mark_finish(r)
         self._release(r)
         obs_metrics.counter("sched.timed_out").inc()
+        self._record_request(r)
 
     def _fail(self, r: Request, err: str) -> None:
         r.state = RequestState.FAILED
         r.error = err
-        r.finish_tick = self.t
-        r.t_finish = time.perf_counter()
+        self._mark_finish(r)
         self._release(r)
         obs_metrics.counter("sched.failed").inc()
+        self._record_request(r)
 
     def _with_retry(self, what: str, fn):
         """Run one launch closure with bounded retry + exponential
@@ -342,6 +388,8 @@ class ScheduledEngine:
             jax.block_until_ready(logits)
             return logits, body
 
+        traced = obs_enabled()
+        t_pf0 = time.perf_counter_ns()
         with span("sched.prefill", kind="run", batch=bb, bucket=blen):
             try:
                 logits, body = self._with_retry("prefill", launch_prefill)
@@ -349,6 +397,19 @@ class ScheduledEngine:
                 for r in reqs:  # no slots were allocated yet: nothing leaks
                     self._fail(r, f"prefill failed: {type(e).__name__}: {e}")
                 return
+        t_pf1 = time.perf_counter_ns()
+        if traced:
+            # per-request stage spans share integer-ns endpoints so the
+            # waterfall reconciles *exactly*: queue_wait ends where prefill
+            # starts; the insert spans below chain from t_pf1 so
+            # queue_wait + prefill + insert == TTFT per request
+            for r in reqs:
+                record_span("req.queue_wait", r.t_submit_ns,
+                            t_pf0 - r.t_submit_ns, rid=r.rid,
+                            trace_id=r.trace_id, arrival=r.arrival,
+                            admit_tick=r.admit_tick)
+                record_span("req.prefill", t_pf0, t_pf1 - t_pf0, rid=r.rid,
+                            trace_id=r.trace_id, bucket=blen, batch=bb)
         obs_metrics.counter("sched.prefill_batches").inc()
         ps = self.sc.page_size
         for i, r in enumerate(reqs):
@@ -370,7 +431,16 @@ class ScheduledEngine:
             r.length = int(r.prompt.size)
             r.key = key
             r.tokens = [tok]
-            r.t_first = time.perf_counter()
+            r.t_first_ns = time.perf_counter_ns()
+            r.t_first = r.t_first_ns * 1e-9
+            if traced:
+                # spans [t_pf1, t_first] per request: sampling + this (and
+                # any earlier sibling's) insert — so each request's own
+                # queue_wait/prefill/insert tile [t_submit, t_first]
+                # exactly and their ns sum *is* its TTFT
+                record_span("req.insert", t_pf1, r.t_first_ns - t_pf1,
+                            rid=r.rid, trace_id=r.trace_id, slot=slot,
+                            pages=npg_store)
             obs_metrics.histogram("sched.ttft_s").observe(r.t_first - r.t_submit)
             self.active[slot] = r
             if r.params.max_new_tokens == 1:
@@ -434,6 +504,8 @@ class ScheduledEngine:
             np.asarray([r.params.temperature for r in reqs], np.float32))
         tps = jnp.asarray(
             np.asarray([r.params.top_p for r in reqs], np.float32))
+        compiled = sig not in self._decode_seen
+        t_d0 = time.perf_counter_ns()
         with span("sched.decode", kind="run", batch=len(slots)):
             try:
                 leaves, new_keys, toks = self._with_retry(
@@ -445,6 +517,16 @@ class ScheduledEngine:
                     self._fail(r, f"decode failed: {type(e).__name__}: {e}")
                 return
             toks = np.asarray(toks)
+        t_d1 = time.perf_counter_ns()
+        self._decode_seen.add(sig)
+        if obs_enabled():
+            # one tick span per request sharing the launch window; the
+            # first tick per batch signature pays the jit compile and is
+            # tagged so percentile readers can exclude it (DESIGN.md §17)
+            for i, r in enumerate(reqs):
+                record_span("req.decode", t_d0, t_d1 - t_d0, rid=r.rid,
+                            trace_id=r.trace_id, tick=self.t, slot=slots[i],
+                            batch=len(slots), compiled=compiled)
         self.pool.leaves = leaves
         obs_metrics.counter("sched.decode_steps").inc()
         obs_metrics.counter("sched.tokens").inc(len(slots))
@@ -459,11 +541,11 @@ class ScheduledEngine:
 
     def _finish(self, r: Request) -> None:
         r.state = RequestState.DONE
-        r.finish_tick = self.t
-        r.t_finish = time.perf_counter()
+        self._mark_finish(r)
         self.slots.release(r.slot)
         self.active.pop(r.slot, None)
         r.slot = None
+        self._record_request(r)
         obs_metrics.counter("sched.completed").inc()
         obs_metrics.histogram("sched.request_latency_s").observe(
             r.t_finish - r.t_submit)

@@ -115,8 +115,12 @@ class AutotuneCache:
             return json.load(f)
 
     def _quarantine(self) -> None:
+        from repro.obs import recorder as obs_recorder
+
         obs_metrics.counter("autotune.cache").inc(op="-",
                                                   result="quarantined")
+        obs_recorder.emit("quarantine", self.path,
+                          sidecar=self.path + ".bad")
         try:
             os.replace(self.path, self.path + ".bad")
         except OSError:

@@ -34,6 +34,7 @@ import numpy as np
 from repro.kernels.common import ceil_pow2
 from repro.networks import capable_families, divisor_cols, pick_merge_cols
 from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
 from repro.obs import trace as obs_trace
 from repro.obs.timing import time_jitted
 
@@ -535,6 +536,9 @@ def _autotune(
     if len({c.network for c in cands}) > 1:
         obs_metrics.counter("tournament.sweeps").inc(op=op)
     obs_metrics.counter("tournament.picks").inc(op=op, family=best.network)
+    obs_recorder.emit("tournament", f"{op}:{best.network}", key=key,
+                      family=best.network, us=round(best_us, 2),
+                      candidates=len(cands))
     return best
 
 

@@ -1,16 +1,24 @@
-"""repro.obs: spans, metrics, export, timing — and the no-op guarantees.
+"""repro.obs: spans, metrics, recorder, export, timing — and the no-op
+guarantees.
 
-The load-bearing contracts (DESIGN.md §13):
+The load-bearing contracts (DESIGN.md §13, §17):
 
 * with ``REPRO_OBS`` unset, instrumentation is invisible — identical
-  jaxpr op counts, bit-identical outputs, sub-µs per-call overhead;
+  jaxpr op counts, bit-identical outputs, sub-µs per-call overhead (the
+  same contract covers the flight recorder's ``emit``);
 * trace-time metrics count *compilations*, so they are deterministic
   under jit retracing;
-* the exported Chrome trace passes its own schema check;
+* the exported Chrome trace passes its own schema check, including the
+  recorder's instant events and under concurrent export;
+* the flight-recorder ring stays bounded across wraparound with a
+  monotonic, gap-revealing sequence;
 * measured autotune wall time round-trips through the cache and
   surfaces in ``decision_table``.
 """
 import json
+import os
+import signal
+import threading
 import time
 
 import jax
@@ -20,7 +28,7 @@ import pytest
 
 import repro
 import repro.obs as obs
-from repro.obs import export, metrics, timing, trace
+from repro.obs import export, metrics, recorder, timing, trace
 
 RNG = np.random.default_rng(0)
 
@@ -30,9 +38,11 @@ def obs_on():
     prev = obs.set_enabled(True)
     trace.clear()
     metrics.reset()
+    recorder.clear()
     yield
     trace.clear()
     metrics.reset()
+    recorder.clear()
     obs.set_enabled(prev)
 
 
@@ -109,6 +119,19 @@ def test_counter_gauge_histogram_snapshot(obs_on):
     hs = snap["h"]["series"][0]
     assert hs["count"] == 100 and hs["min"] == 0.0 and hs["max"] == 99.0
     assert hs["p50"] <= hs["p95"] <= hs["p99"] <= hs["max"]
+    # reservoir occupancy rides along so an exhausted reservoir (count >
+    # samples) is visible to percentile readers
+    assert hs["samples"] == 100 and hs["reservoir_full"] is False
+
+
+def test_histogram_reservoir_exhaustion_is_visible(obs_on):
+    h = metrics.histogram("big")
+    for v in range(h.max_samples + 50):
+        h.observe(float(v))
+    hs = metrics.snapshot()["big"]["series"][0]
+    assert hs["count"] == h.max_samples + 50
+    assert hs["samples"] == h.max_samples
+    assert hs["reservoir_full"] is True
 
 
 def test_metrics_disabled_are_inert(obs_off):
@@ -182,16 +205,26 @@ def test_snapshot_and_jsonl_schema(obs_on, tmp_path):
         pass
     metrics.counter("c").inc(op="sort")
     snap = obs.snapshot()
-    assert set(snap) == {"meta", "spans", "metrics"}
+    assert set(snap) == {"meta", "spans", "metrics", "events"}
     assert snap["meta"]["schema"] == 1 and snap["meta"]["dropped_spans"] == 0
+    # span-buffer health surfaces in meta (satellite: the 100k cap is
+    # visible, not silent)
+    assert snap["meta"]["spans_recorded"] == 1
+    assert snap["meta"]["span_cap"] == trace.MAX_SPANS
+    assert snap["meta"]["events_overwritten"] == 0
     sp = snap["spans"][0]
     assert sp["name"] == "region" and sp["kind"] == "run"
     assert sp["dur_us"] >= 0 and sp["attrs"] == {"tag": "t"}
+    assert sp["dur_ns"] >= 0 and sp["ts_ns"] > 0
+    # every span close feeds the flight recorder
+    assert [ev["kind"] for ev in snap["events"]] == ["span"]
+    assert snap["events"][0]["name"] == "region"
 
     path = tmp_path / "out.jsonl"
     obs.write_jsonl(str(path), snap)
     lines = [json.loads(ln) for ln in path.read_text().splitlines()]
-    assert [ln["type"] for ln in lines] == ["meta", "span", "metric"]
+    assert [ln["type"] for ln in lines] == ["meta", "span", "metric",
+                                            "event"]
 
 
 def test_chrome_trace_valid_and_loadable(obs_on, tmp_path):
@@ -222,6 +255,149 @@ def test_validate_chrome_trace_catches_violations():
     assert any("ts not a non-negative number" in e for e in errs)
     assert any("dur not a non-negative number" in e for e in errs)
     assert any("unknown phase 'Z'" in e for e in errs)
+
+
+# ------------------------------------------------------------- recorder
+
+
+def test_recorder_ring_wraparound_keeps_newest(obs_on):
+    prev_cap = recorder.capacity()
+    recorder.set_capacity(8)
+    try:
+        for i in range(20):
+            recorder.emit("unit", f"ev{i}", i=i)
+        evs = recorder.events()
+        assert len(evs) == 8 == recorder.capacity()
+        assert recorder.total_events() == 20
+        assert recorder.overwritten() == 12
+        # the newest events survive; seq stays monotonic and its gap from
+        # 1 reveals exactly how much history was discarded
+        assert [ev.attrs["i"] for ev in evs] == list(range(12, 20))
+        seqs = [ev.seq for ev in evs]
+        assert seqs == sorted(seqs) and seqs[0] == 13 and seqs[-1] == 20
+    finally:
+        recorder.set_capacity(prev_cap)
+
+
+def test_recorder_disabled_emit_is_noop(obs_off):
+    recorder.clear()
+    recorder.emit("unit", "dead", a=1)
+    assert recorder.events() == [] and recorder.total_events() == 0
+
+
+def test_recorder_dump_and_chrome_events(obs_on, tmp_path):
+    recorder.emit("breaker", "sort/pallas/b8", frm="closed", to="open")
+    path = tmp_path / "flight.jsonl"
+    snap = recorder.dump(str(path), reason="unit")
+    assert snap["meta"]["reason"] == "unit"
+    assert snap["meta"]["events"] == 1 and snap["meta"]["overwritten"] == 0
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert [ln["type"] for ln in lines] == ["meta", "event"]
+    assert lines[1]["kind"] == "breaker"
+    evs = recorder.chrome_trace_events(snap)
+    assert evs[0]["ph"] == "i" and evs[0]["name"] == "breaker:sort/pallas/b8"
+    # instant events pass the same schema gate as the span export
+    assert export.validate_chrome_trace({"traceEvents": evs}) == []
+
+
+def test_recorder_crash_dump_writes_env_path(obs_on, tmp_path, monkeypatch):
+    recorder.emit("sched", "request.failed", rid=1)
+    path = tmp_path / "crash.jsonl"
+    monkeypatch.setenv("REPRO_OBS_DUMP", str(path))
+    got = recorder.crash_dump("unit", RuntimeError("boom"))
+    assert got == str(path) and path.exists()
+    meta = json.loads(path.read_text().splitlines()[0])
+    assert meta["type"] == "meta" and meta["reason"] == "crash:unit:RuntimeError"
+
+
+def test_recorder_sigusr1_dump(obs_on, tmp_path):
+    recorder.emit("unit", "alive", n=1)
+    path = tmp_path / "sig.jsonl"
+    assert recorder.install_signal_dump(str(path))
+    try:
+        os.kill(os.getpid(), signal.SIGUSR1)
+        # CPython delivers the signal on the main thread at the next
+        # bytecode boundary; poll briefly rather than assuming immediacy
+        deadline = time.time() + 5.0
+        while not path.exists() and time.time() < deadline:
+            time.sleep(0.01)
+        lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+        assert lines[0]["reason"] == "SIGUSR1"
+        assert any(ln.get("name") == "alive" for ln in lines[1:])
+    finally:
+        recorder.uninstall_signal_dump()
+
+
+def test_record_span_explicit_time(obs_on):
+    sid = obs.record_span("req.queue_wait", 1000, 2500, rid=3)
+    assert sid is not None
+    sp = trace.spans()[-1]
+    assert sp.name == "req.queue_wait"
+    assert sp.t0_ns == 1000 and sp.dur_ns == 2500
+    assert sp.attrs == {"rid": 3}
+    # negative durations clamp to zero (clock weirdness never corrupts
+    # the waterfall)
+    obs.record_span("x", 5000, -10)
+    assert trace.spans()[-1].dur_ns == 0
+
+
+def test_record_span_disabled_returns_none(obs_off):
+    assert obs.record_span("x", 0, 10) is None
+    assert trace.spans() == ()
+
+
+def test_prom_text_format_and_write(obs_on, tmp_path):
+    metrics.counter("sched.completed").inc(3)
+    metrics.gauge("sched.queue_depth").set(2.0)
+    h = metrics.histogram("sched.ttft_s")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v, op="sort")
+    txt = obs.prom_text()
+    assert "# TYPE repro_sched_completed_total counter" in txt
+    assert "repro_sched_completed_total 3" in txt
+    assert "# TYPE repro_sched_queue_depth gauge" in txt
+    assert "repro_sched_queue_depth 2.0" in txt
+    assert "# TYPE repro_sched_ttft_s summary" in txt
+    assert 'repro_sched_ttft_s_count{op="sort"} 3' in txt
+    assert 'repro_sched_ttft_s{op="sort",quantile="0.5"}' in txt
+    p = tmp_path / "metrics.prom"
+    obs.write_prom(str(p))
+    assert p.read_text() == txt
+
+
+def test_export_under_concurrency_schema_valid(obs_on, tmp_path):
+    """Two producer threads emit spans/metrics/events while the main
+    thread exports: every export must stay schema-valid and every JSONL
+    line parseable — no torn reads from the shared buffers."""
+    stop = threading.Event()
+
+    def producer(tid):
+        i = 0
+        while not stop.is_set():
+            with obs.span(f"conc.{tid}", kind="run", i=i):
+                metrics.counter("conc.ops").inc(tid=tid)
+                recorder.emit("unit", f"conc.{tid}", i=i)
+            i += 1
+
+    threads = [threading.Thread(target=producer, args=(t,)) for t in (0, 1)]
+    for t in threads:
+        t.start()
+    try:
+        for j in range(5):
+            snap = obs.snapshot()
+            assert obs.validate_chrome_trace(obs.chrome_trace(snap)) == []
+            path = tmp_path / f"conc{j}.jsonl"
+            obs.write_jsonl(str(path), snap)
+            types = [json.loads(ln)["type"]
+                     for ln in path.read_text().splitlines()]
+            assert types[0] == "meta"
+            assert set(types) <= {"meta", "span", "metric", "event"}
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    # both producers made it into the stores
+    assert {"conc.0", "conc.1"} <= {sp.name for sp in trace.spans()}
 
 
 # --------------------------------------------------------------- timing
@@ -388,3 +564,11 @@ def test_generate_time_steps_percentiles_match_greedy():
     assert (timed["decode_step_p50_us"] <= timed["decode_step_p95_us"]
             <= timed["decode_step_p99_us"])
     assert len(timed["step_times_s"]) == 3  # max_new_tokens - 1 steps
+    # the first timed step is the decode jit compile: reported apart and
+    # excluded from the steady-state percentiles (no p95/p99 skew)
+    assert timed["decode_step_compile_us"] == pytest.approx(
+        timed["step_times_s"][0] * 1e6)
+    steady_us = np.asarray(timed["step_times_s"][1:]) * 1e6
+    assert timed["decode_step_p50_us"] == pytest.approx(
+        float(np.percentile(steady_us, 50)))
+    assert timed["decode_step_p99_us"] <= float(steady_us.max()) + 1e-9

@@ -246,6 +246,62 @@ def test_ladder_forces_last_rung_when_all_blocked():
                       cls="16v") == "ran lax"
 
 
+def test_resilience_events_carry_op_rung_class_labels():
+    """End-to-end label contract (DESIGN.md §17): ladder fallbacks,
+    forced runs, and breaker transitions surface with (op, rung, cls)
+    labels in the metric registry *and* as flight-recorder events, so
+    dashboards and post-mortems can slice degradation by size class."""
+    import repro.obs as obs
+    from repro.obs import metrics, recorder, trace
+
+    prev = obs.set_enabled(True)
+    trace.clear()
+    metrics.reset()
+    recorder.clear()
+    configure_breakers(threshold=1, cooldown_s=3600.0)
+    spec = SortSpec(op="merge", lengths=(8, 8))
+    try:
+        def failing(rung):
+            if rung == "schedule":
+                raise RuntimeError("boom")
+            return rung
+
+        assert run_ladder(spec, ["schedule", "lax"], failing,
+                          cls="16v") == "lax"
+        assert metrics.counter("resilience.fallbacks").value(
+            op="merge", rung="schedule", cls="16v",
+            err="RuntimeError") == 1
+        # threshold=1: the recorded failure opened the breaker
+        assert metrics.counter("breaker.transitions").value(
+            op="merge", rung="schedule", cls="16v", frm="closed",
+            to="open") == 1
+        assert metrics.gauge("breaker.state").value(
+            op="merge", rung="schedule", cls="16v") is not None
+
+        breaker_for("merge", "lax", "16v").record_failure()
+        assert run_ladder(spec, ["schedule", "lax"],
+                          lambda rung: f"ran {rung}",
+                          cls="16v") == "ran lax"
+        assert metrics.counter("resilience.forced").value(
+            op="merge", rung="lax", cls="16v") == 1
+
+        by_kind = {}
+        for ev in recorder.events():
+            by_kind.setdefault(ev.kind, []).append(ev)
+        assert [e.name for e in by_kind["fallback"]] == \
+            ["merge/schedule/16v"]
+        assert by_kind["fallback"][0].attrs["err"] == "RuntimeError"
+        assert [e.name for e in by_kind["forced"]] == ["merge/lax/16v"]
+        assert {e.name for e in by_kind["breaker"]} == \
+            {"merge/schedule/16v", "merge/lax/16v"}
+        assert by_kind["breaker"][0].attrs["to"] == "open"
+    finally:
+        trace.clear()
+        metrics.reset()
+        recorder.clear()
+        obs.set_enabled(prev)
+
+
 def test_open_breaker_reroutes_at_plan_time():
     a, b, ref = _merge_inputs()
     with failpoints({"executor.run": "always"}):

@@ -244,3 +244,78 @@ def test_scheduler_drains_staggered_arrivals(model):
         assert (out[rid] >= 0).all() and (out[rid] < cfg.vocab_size).all()
     assert eng.slots.free_slot_count == 2
     assert eng.slots.free_page_count == eng.pool.n_pages - 1
+
+
+def test_request_waterfalls_reconcile_with_measured_latency(model):
+    """The §17 tracing contract: with obs on, every completed request
+    leaves a root span plus queue-wait/prefill/insert/decode-tick stage
+    spans whose integer-ns sums reconcile *exactly* with the engine's
+    measured TTFT and request latency (shared endpoints, no float
+    rounding), with scheduler overhead surfacing as non-negative
+    unaccounted time."""
+    import repro.obs as obs
+    from repro.obs import metrics, recorder, trace
+
+    cfg, params = model
+    prev = obs.set_enabled(True)
+    trace.clear()
+    metrics.reset()
+    recorder.clear()
+    try:
+        eng = ScheduledEngine(params, cfg,
+                              SchedulerConfig(n_slots=2, page_size=8,
+                                              pages_per_slot=4))
+        rng = np.random.default_rng(3)
+        new_tokens = [3, 4, 3]
+        rids = [
+            eng.submit(rng.integers(1, cfg.vocab_size, 5).astype(np.int32),
+                       SamplingParams(k=4, temperature=0.7,
+                                      max_new_tokens=new_tokens[i], seed=i),
+                       arrival=i)
+            for i in range(3)
+        ]
+        out = eng.run()
+        assert sorted(out) == sorted(rids)
+        wfs = obs.request_waterfalls()
+        assert sorted(w["rid"] for w in wfs) == sorted(rids)
+        for w in wfs:
+            r = eng.requests[w["rid"]]
+            assert r.trace_id  # engine-assigned, unique per request
+            assert w["state"] == "done"
+            # exact integer-ns reconciliation against the engine's own
+            # latency markers
+            assert w["ttft_ns"] == r.t_first_ns - r.t_submit_ns
+            assert w["total_ns"] == r.t_finish_ns - r.t_submit_ns
+            assert w["unaccounted_ns"] >= 0
+            assert w["decode_ticks"] == len(r.tokens) - 1
+            stages = [s["name"] for s in w["stages"]]
+            assert stages[:3] == ["req.queue_wait", "req.prefill",
+                                  "req.insert"]
+            # the non-decode stages tile [submit, first-token] with
+            # shared endpoints
+            nd = [s for s in w["stages"] if s["name"] != "req.decode"]
+            assert nd[0]["t0_ns"] == r.t_submit_ns
+            for a, b in zip(nd, nd[1:]):
+                assert a["t0_ns"] + a["dur_ns"] == b["t0_ns"]
+            assert nd[-1]["t0_ns"] + nd[-1]["dur_ns"] == r.t_first_ns
+        tids = {eng.requests[rid].trace_id for rid in rids}
+        assert len(tids) == len(rids)
+        # exactly one decode tick per signature pays the compile
+        dec = [sp for sp in trace.spans() if sp.name == "req.decode"]
+        assert any(sp.attrs["compiled"] for sp in dec)
+        by_tick = {}
+        for sp in dec:
+            by_tick.setdefault(sp.attrs["tick"], set()).add(
+                sp.attrs["compiled"])
+        assert all(len(v) == 1 for v in by_tick.values())
+        # request terminals also land in the flight recorder
+        done = [ev for ev in recorder.events()
+                if ev.kind == "sched" and ev.name == "request.done"]
+        assert sorted(ev.attrs["rid"] for ev in done) == sorted(rids)
+        # and the per-request chrome trace stays schema-valid
+        assert obs.validate_chrome_trace(obs.request_chrome_trace()) == []
+    finally:
+        trace.clear()
+        metrics.reset()
+        recorder.clear()
+        obs.set_enabled(prev)
